@@ -1,0 +1,60 @@
+"""Kernel microbenchmarks: us/call of each Pallas kernel (interpret mode on
+this CPU container — wall times are NOT TPU times; the oracle comparison
+shows relative cost of the fused formulation) and of the pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import (
+    flash_attention, flash_attention_reference,
+    masked_gradnorm, masked_gradnorm_reference,
+    ota_channel, ota_channel_reference,
+)
+
+
+def _time(fn, *args, iters=5, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    x = jax.random.normal(key, (1 << 20,))
+    rows.append(("ota_channel_pallas_1M", _time(ota_channel, x, key, 1.0, 0.032),
+                 "fused bits->gauss->mask->apply"))
+    rows.append(("ota_channel_ref_1M",
+                 _time(ota_channel_reference, x, key, 1.0, 0.032),
+                 "jnp oracle"))
+
+    g = jax.random.normal(key, (8, 1 << 16))
+    m = jax.random.uniform(jax.random.fold_in(key, 1), (1 << 16,)) > 0.3
+    rows.append(("masked_gradnorm_pallas_8x64k", _time(masked_gradnorm, g, m),
+                 "tiled masked L2"))
+    rows.append(("masked_gradnorm_ref_8x64k",
+                 _time(masked_gradnorm_reference, g, m), "jnp oracle"))
+
+    q = jax.random.normal(key, (1, 1024, 4, 64), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 2), (1, 1024, 2, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (1, 1024, 2, 64))
+    rows.append(("flash_attn_pallas_1k", _time(
+        flash_attention, q, k, v, iters=2, block_q=256, block_kv=256),
+        "interpret mode"))
+    rows.append(("flash_attn_ref_1k", _time(
+        flash_attention_reference, q, k, v, iters=2), "jnp oracle"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, note in run():
+        print(f"{name},{us:.0f},{note}")

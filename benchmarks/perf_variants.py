@@ -1,0 +1,189 @@
+"""§Perf hillclimb harness: lower+compile a (arch, shape) pair under a
+named variant (config/FL overrides), extract roofline terms, cache JSON.
+
+Each variant is one hypothesis -> change -> measure cycle; the comparison
+tables in EXPERIMENTS.md §Perf are assembled from results/perf/*.json.
+
+Run inside the dry-run environment (512 host devices):
+    PYTHONPATH=src:. python benchmarks/perf_variants.py P0
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import json
+import sys
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common.config import FLConfig, INPUT_SHAPES, TrainConfig
+from repro.configs import ALIASES, get_config
+from repro.core.hota_step import make_hota_train_step
+from repro.launch import hlo_cost
+from repro.launch.dryrun import (
+    RESULTS_DIR, TRAIN_ARCH_OVERRIDES, _pick_microbatches,
+    hota_state_shardings, lower_serve,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import input_specs
+from repro.models.model import build_model
+from repro.sharding.mesh_utils import fl_view
+
+PEAK_FLOPS, HBM_BW, ICI_BW = 197e12, 819e9, 50e9
+PERF_DIR = os.path.join(os.path.dirname(RESULTS_DIR), "perf")
+
+
+def lower_train_variant(arch: str, shape_name: str, *, cfg_over=None,
+                        fl_over=None, n_clients: int = 4):
+    cfg = get_config(ALIASES.get(arch, arch)).replace(**TRAIN_ARCH_OVERRIDES)
+    if cfg_over:
+        cfg = cfg.replace(**cfg_over)
+    shape = INPUT_SHAPES[shape_name]
+    model = build_model(cfg)
+    mesh = fl_view(make_production_mesh(), n_clients)
+    n_total = int(np.prod([s for s, a in zip(mesh.devices.shape,
+                                             mesh.axis_names)
+                           if a in ("pod", "cluster", "client")]))
+    fl_kw = dict(n_clients=n_clients, ota_mode="scatter",
+                 microbatches=_pick_microbatches(cfg, shape, n_total))
+    if fl_over:
+        fl_kw.update(fl_over)
+    fl = FLConfig(**fl_kw)
+    tcfg = TrainConfig(lr=3e-4)
+    init_fn, step_fn, state_specs, batch_spec = make_hota_train_step(
+        model, mesh, fl, tcfg, loss_kind="lm")
+    state_abs = jax.eval_shape(init_fn, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    state_sh = hota_state_shardings(model, mesh, state_abs)
+    ins = input_specs(cfg, shape)
+    client_axes = tuple(a for a in mesh.axis_names
+                        if a in ("pod", "cluster", "client"))
+    tok_sh = NamedSharding(mesh, P(client_axes))
+    jf = jax.jit(step_fn, in_shardings=(state_sh, tok_sh, tok_sh,
+                                        NamedSharding(mesh, P())))
+    return jf.lower(state_abs, ins["tokens"], ins["labels"],
+                    jax.ShapeDtypeStruct((2,), jnp.uint32)), fl
+
+
+def measure(tag: str, lowered, extra: Optional[dict] = None,
+            force: bool = False) -> dict:
+    os.makedirs(PERF_DIR, exist_ok=True)
+    path = os.path.join(PERF_DIR, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    t0 = time.time()
+    compiled = lowered.compile()
+    totals = hlo_cost.analyze(compiled.as_text())
+    ma = compiled.memory_analysis()
+    out = {
+        "tag": tag,
+        "compile_s": round(time.time() - t0, 1),
+        "temp_gib": ma.temp_size_in_bytes / 2**30,
+        "arg_gib": ma.argument_size_in_bytes / 2**30,
+        "flops": totals.flops,
+        "bytes_major": totals.bytes_major,
+        "bytes_upper": totals.bytes,
+        "collective_bytes": {k: float(v) for k, v in totals.coll_bytes.items()},
+        "compute_s": totals.flops / PEAK_FLOPS,
+        "memory_s": totals.bytes_major / HBM_BW,
+        "collective_s": sum(totals.coll_bytes.values()) / ICI_BW,
+        "collective_sites": sorted(
+            [{"comp": c, "op": o, "bytes_once": b, "mult": m,
+              "total": b * m} for c, o, b, m in totals.coll_detail],
+            key=lambda d: -d["total"])[:20],
+        **(extra or {}),
+    }
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+def show(rows):
+    print(f"{'tag':<40} {'cmp_s':>8} {'mem_s':>8} {'coll_s':>8} "
+          f"{'tempGiB':>8} {'compile':>8}")
+    for r in rows:
+        print(f"{r['tag']:<40} {r['compute_s']:>8.3f} {r['memory_s']:>8.3f} "
+              f"{r['collective_s']:>8.3f} {r['temp_gib']:>8.2f} "
+              f"{r['compile_s']:>8.1f}")
+
+
+def P0():
+    """Paper-naive vs scatter OTA transmission (stablelm-3b train_4k)."""
+    rows = []
+    for mode in ("naive", "scatter"):
+        lowered, fl = lower_train_variant(
+            "stablelm_3b", "train_4k", fl_over={"ota_mode": mode})
+        rows.append(measure(f"P0_stablelm_train4k_{mode}", lowered,
+                            {"ota_mode": mode, "microbatches": fl.microbatches}))
+    # mb=1: OTA volume is proportionally dominant (no gather amplification)
+    for mode in ("naive", "scatter"):
+        lowered, fl = lower_train_variant(
+            "stablelm_3b", "train_4k",
+            fl_over={"ota_mode": mode, "microbatches": 1})
+        rows.append(measure(f"P0_stablelm_train4k_{mode}_mb1", lowered,
+                            {"ota_mode": mode, "microbatches": 1}))
+    show(rows)
+
+
+def P1():
+    """Worst useful-flops pair (musicgen train_4k, ratio 0.044): the causal
+    rectangle dominates a small-d model. Variants: folded-causal attention
+    (exact triangle), block-size sweep."""
+    rows = []
+    for tag, cfg_over in [
+        ("base_blocked", {}),
+        ("folded", {"attn_impl": "folded", "attn_block_q": 512}),
+        ("folded_bq256", {"attn_impl": "folded", "attn_block_q": 256}),
+        ("blocked_bq1024_bkv4096",
+         {"attn_block_q": 1024, "attn_block_kv": 4096}),
+    ]:
+        lowered, _ = lower_train_variant("musicgen_medium", "train_4k",
+                                         cfg_over=cfg_over)
+        rows.append(measure(f"P1_musicgen_train4k_{tag}", lowered))
+    show(rows)
+
+
+def P2():
+    """Most collective-bound pair: mixtral train_4k (658s — FSDP gathers x
+    16 microbatches of a 141B model). Lever: fewer microbatches (memory
+    trade) + folded attention to shrink the activation footprint that
+    forces mb=16."""
+    rows = []
+    for tag, cfg_over, fl_over in [
+        ("base_mb16", {}, {}),
+        ("mb8", {}, {"microbatches": 8}),
+        ("mb8_folded", {"attn_impl": "folded"}, {"microbatches": 8}),
+        ("mb4_folded", {"attn_impl": "folded"}, {"microbatches": 4}),
+    ]:
+        lowered, fl = lower_train_variant("mixtral_8x22b", "train_4k",
+                                          cfg_over=cfg_over, fl_over=fl_over)
+        rows.append(measure(f"P2_mixtral_train4k_{tag}", lowered,
+                            {"microbatches": fl.microbatches}))
+    show(rows)
+
+
+def P3():
+    """Paper-representative pair (stablelm train_4k = canonical HOTA round):
+    cost of the technique itself — full FGN round vs equal/no-FGN ablation
+    vs error-free channel; plus the FGN overhead levers."""
+    rows = []
+    for tag, fl_over in [
+        ("hota_full", {}),
+        ("equal_tau0_ablation", {"weighting": "equal", "tau_h": 0}),
+        ("no_ota_errorfree", {"ota": False}),
+        ("tau_h3", {"tau_h": 3}),
+    ]:
+        lowered, fl = lower_train_variant("stablelm_3b", "train_4k",
+                                          fl_over=fl_over)
+        rows.append(measure(f"P3_stablelm_train4k_{tag}", lowered,
+                            {"fl": {k: str(v) for k, v in fl_over.items()}}))
+    show(rows)
+
+
+if __name__ == "__main__":
+    for name in (sys.argv[1:] or ["P0"]):
+        globals()[name]()

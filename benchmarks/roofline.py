@@ -1,0 +1,52 @@
+"""Roofline table from the dry-run JSONs (assignment §ROOFLINE, one row per
+architecture x input-shape x mesh): the three terms in seconds, the
+dominant bottleneck, and MODEL_FLOPS/HLO_FLOPs."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_all():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def table(rows=None, mesh_filter=None):
+    rows = rows if rows is not None else load_all()
+    out = []
+    hdr = (f"{'arch':<18} {'shape':<12} {'mesh':<11} {'stat':<8} "
+           f"{'compute_s':>10} {'memory_s':>10} {'coll_s':>9} "
+           f"{'dominant':>10} {'useful':>7} {'mem_GiB':>8}")
+    out.append(hdr)
+    out.append("-" * len(hdr))
+    for r in rows:
+        if mesh_filter and r.get("mesh") != mesh_filter:
+            continue
+        if r["status"] == "skipped":
+            out.append(f"{r['arch']:<18} {r['shape']:<12} {r['mesh']:<11} "
+                       f"{'skipped':<8} {'—':>10} {'—':>10} {'—':>9} "
+                       f"{'—':>10} {'—':>7} {'—':>8}")
+            continue
+        if r["status"] != "ok":
+            out.append(f"{r['arch']:<18} {r['shape']:<12} {r['mesh']:<11} "
+                       f"{'ERROR':<8} {r.get('error','')[:60]}")
+            continue
+        rl = r["roofline"]
+        mem = r["memory"]["total_bytes"] / 2**30
+        out.append(
+            f"{r['arch']:<18} {r['shape']:<12} {r['mesh']:<11} {'ok':<8} "
+            f"{rl['compute_s']:>10.3f} {rl['memory_s']:>10.3f} "
+            f"{rl['collective_s']:>9.3f} {rl['dominant']:>10} "
+            f"{r['useful_flops_ratio']:>7.3f} {mem:>8.2f}")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(table())

@@ -1,0 +1,90 @@
+"""Benchmark entry point: one function per paper table/figure + the
+framework's own harnesses. Prints ``name,us_per_call,derived`` CSV.
+
+Default mode is quick (reads cached results where the full experiments are
+long-running; see scripts/run_paper_experiments.sh and
+scripts/run_dryrun_sweep.sh for the full passes). ``--full`` recomputes the
+paper figures at full length.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _figure_rows(results: dict):
+    """Derive the paper's claim metrics from cached loss curves."""
+    rows = []
+    for name, r in results.items():
+        wall_us = r.get("wall_s", 0.0) / max(r["steps"], 1) * 1e6
+        auc = sum(r["auc_loss_per_task"]) / len(r["auc_loss_per_task"])
+        rows.append((name, wall_us, f"mean_auc_loss={auc:.4f}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="recompute paper figures at full length")
+    ap.add_argument("--steps", type=int, default=None)
+    args, _ = ap.parse_known_args()
+
+    rows = []
+
+    # --- paper figures (Figs. 2-4) ---------------------------------------
+    steps = args.steps or (500 if args.full else 40)
+    from benchmarks.fig2_dynamic_vs_equal import run as fig2
+    from benchmarks.fig3_bad_channel import run as fig3
+    from benchmarks.fig4_diverse_sigma import run as fig4
+    rows += _figure_rows(fig2(steps=steps))
+    rows += _figure_rows(fig3(steps=steps))
+    rows += _figure_rows(fig4(steps=steps))
+
+    # claim check: dynamic beats equal on loss-AUC (Fig. 2 headline)
+    try:
+        from benchmarks.paper_common import RESULTS_DIR
+        for fig in ("fig2", "fig3"):
+            with open(os.path.join(RESULTS_DIR, f"{fig}_hota_fgn.json")) as f:
+                dyn = json.load(f)
+            with open(os.path.join(RESULTS_DIR, f"{fig}_equal.json")) as f:
+                eq = json.load(f)
+            adv = (sum(eq["auc_loss_per_task"])
+                   - sum(dyn["auc_loss_per_task"]))
+            rows.append((f"{fig}_claim_dynamic_faster", 0.0,
+                         f"auc_advantage={adv:+.4f} "
+                         f"({'PASS' if adv > 0 else 'CHECK'})"))
+    except FileNotFoundError:
+        pass
+
+    # --- kernel microbenchmarks ------------------------------------------
+    from benchmarks.kernel_bench import run as kbench
+    rows += kbench()
+
+    # --- roofline table (from cached dry-run JSONs) -----------------------
+    from benchmarks.roofline import load_all
+    dr = load_all()
+    ok = [r for r in dr if r["status"] == "ok"]
+    skipped = [r for r in dr if r["status"] == "skipped"]
+    err = [r for r in dr if r["status"] == "error"]
+    rows.append(("dryrun_pairs", 0.0,
+                 f"ok={len(ok)} skipped={len(skipped)} error={len(err)} "
+                 f"total={len(dr)}"))
+    for r in ok:
+        rl = r["roofline"]
+        rows.append((
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}", 0.0,
+            f"dom={rl['dominant']};c={rl['compute_s']:.3f}s;"
+            f"m={rl['memory_s']:.3f}s;coll={rl['collective_s']:.3f}s"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

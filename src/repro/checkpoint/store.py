@@ -1,0 +1,70 @@
+"""Checkpointing without orbax: msgpack envelope + raw npy payloads.
+
+Layout::
+
+    <dir>/step_<k>/manifest.msgpack   # treedef, shapes, dtypes, metadata
+    <dir>/step_<k>/arr_<i>.npy        # one file per leaf (np.save format)
+
+Arrays are gathered to host before save (fine at example scale; sharded
+save would use a per-shard layout keyed by PartitionSpec — noted in
+DESIGN.md as the production extension point).
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _leaf_paths(tree) -> Tuple[Any, list]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return treedef, leaves
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, metadata: Optional[dict] = None) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    treedef, leaves = _leaf_paths(tree)
+    manifest = {
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "step": step,
+        "metadata": metadata or {},
+        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+        "shapes": [list(np.asarray(l).shape) for l in leaves],
+    }
+    for i, leaf in enumerate(leaves):
+        np.save(os.path.join(path, f"arr_{i}.npy"), np.asarray(leaf))
+    with open(os.path.join(path, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    return path
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like_tree):
+    """Restore into the structure of ``like_tree`` (shape/dtype-checked)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    treedef, like_leaves = _leaf_paths(like_tree)
+    assert manifest["n_leaves"] == len(like_leaves), "checkpoint/tree mismatch"
+    leaves = []
+    for i, like in enumerate(like_leaves):
+        arr = np.load(os.path.join(path, f"arr_{i}.npy"))
+        assert list(arr.shape) == list(like.shape), (i, arr.shape, like.shape)
+        leaves.append(arr.astype(like.dtype))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None

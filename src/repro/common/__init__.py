@@ -1,0 +1,26 @@
+from repro.common.config import (
+    FLConfig,
+    HybridConfig,
+    INPUT_SHAPES,
+    InputShape,
+    MeshConfig,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    ServeConfig,
+    TrainConfig,
+    XLSTMConfig,
+)
+from repro.common.tree import (
+    tree_cast,
+    tree_global_norm,
+    tree_size,
+    tree_zeros_like,
+)
+
+__all__ = [
+    "FLConfig", "HybridConfig", "INPUT_SHAPES", "InputShape", "MeshConfig",
+    "ModelConfig", "MoEConfig", "SSMConfig", "ServeConfig", "TrainConfig",
+    "XLSTMConfig", "tree_cast", "tree_global_norm", "tree_size",
+    "tree_zeros_like",
+]

@@ -1,0 +1,59 @@
+"""Assigned architecture configs (public-literature pool) + the paper's MLP.
+
+Every config cites its source. ``get_config(name)`` returns the full-size
+ModelConfig; ``get_smoke_config(name)`` a reduced same-family variant
+(≤2 layers + the family's minimum structural multiple, d_model ≤ 512,
+≤4 experts) for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.common.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "starcoder2_3b",
+    "stablelm_3b",
+    "musicgen_medium",
+    "phi3_vision_4_2b",
+    "gemma3_12b",
+    "zamba2_1_2b",
+    "phi3_5_moe_42b",
+    "xlstm_1_3b",
+    "mixtral_8x22b",
+    "qwen2_5_14b",
+    "paper_mlp",
+]
+
+# CLI-friendly aliases matching the assignment sheet
+ALIASES: Dict[str, str] = {
+    "starcoder2-3b": "starcoder2_3b",
+    "stablelm-3b": "stablelm_3b",
+    "musicgen-medium": "musicgen_medium",
+    "phi-3-vision-4.2b": "phi3_vision_4_2b",
+    "gemma3-12b": "gemma3_12b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "qwen2.5-14b": "qwen2_5_14b",
+    "paper-mlp": "paper_mlp",
+}
+
+
+def _module(name: str):
+    name = ALIASES.get(name, name)
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _module(name).SMOKE_CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {n: get_config(n) for n in ARCH_IDS}

@@ -1,0 +1,35 @@
+"""The paper's contribution: HOTA-FedGradNorm.
+
+* ota.py          — fading-MAC channel model + OTA aggregation (eqs. 3-10)
+* fedgradnorm.py  — channel-sparsified FedGradNorm (Alg. 2, eqs. 5-6)
+* sim.py          — paper-scale faithful simulator (Alg. 1; vmap C x N)
+* hota.py         — distributed machinery: custom-vjp OTA-FSDP gather
+* hota_step.py    — the production shard_map training step
+* power.py        — eq. (4): expected transmit power + H_th calibration
+"""
+from repro.core.fedgradnorm import (
+    FGNState, fgn_init, fgn_update, fgn_grad_p, fgn_targets, fgrad_value,
+    masked_tree_norm,
+)
+from repro.core.ota import (
+    gain_mask, ota_aggregate_leaf, ota_aggregate_tree, power_allocation,
+    sample_gain, transmit_signal, tree_channel,
+)
+from repro.core.sim import HotaSim, SimState, masked_cls_loss
+from repro.core.hota import (
+    OTACtx, build_axes_registry, make_ota_gather, make_param_hook,
+)
+from repro.core.hota_step import HotaState, make_hota_train_step
+from repro.core.power import (
+    calibrate_h_threshold, expected_transmit_power, pass_rate,
+)
+
+__all__ = [
+    "FGNState", "fgn_init", "fgn_update", "fgn_grad_p", "fgn_targets",
+    "fgrad_value", "masked_tree_norm", "gain_mask", "ota_aggregate_leaf",
+    "ota_aggregate_tree", "power_allocation", "sample_gain",
+    "transmit_signal", "tree_channel", "HotaSim", "SimState",
+    "masked_cls_loss", "OTACtx", "build_axes_registry", "make_ota_gather",
+    "make_param_hook", "HotaState", "make_hota_train_step",
+    "calibrate_h_threshold", "expected_transmit_power", "pass_rate",
+]

@@ -1,0 +1,98 @@
+"""FedGradNorm with channel-sparsified auxiliary loss (paper Alg. 2, eqs. 5-6).
+
+The IS of cluster l holds per-client (task) quantities at iteration k:
+
+* n_i = ‖ M_k^(l) ∘ ∇_{ω̃} F_k^(l,i) ‖   — masked last-shared-layer grad norm
+* F̃_i = F_k^(l,i) / F_0^(l,i)             — loss ratio (training-rate proxy)
+
+and minimizes (one optimizer step per round, lr α):
+
+    F_grad(p) = Σ_i | p_i · n_i  −  Ḡ · r_i^γ |,
+    Ḡ = mean_i(p_i n_i),  r_i = F̃_i / mean_j F̃_j,
+
+treating Ḡ and r as constants (standard GradNorm stop-gradient), then
+renormalizes Σ_i p_i = N (the constraint under eq. (1)).
+
+The paper uses Adam for the F_grad optimization (Sec. IV-B, α = 0.008);
+plain GD is also provided. All functions are scalar-vector math — the same
+code serves the vmap simulator (vmapped over clusters) and the distributed
+path (each device computing its own client's slice with psum'd means).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import FLConfig
+
+
+class FGNState(NamedTuple):
+    """Adam state for the loss-weight optimization (per client slot)."""
+    step: jax.Array
+    mu: jax.Array
+    nu: jax.Array
+
+
+def fgn_init(n: int) -> FGNState:
+    z = jnp.zeros((n,), jnp.float32)
+    return FGNState(step=jnp.zeros((), jnp.int32), mu=z, nu=z)
+
+
+def fgrad_value(p: jax.Array, norms: jax.Array, gbar: jax.Array,
+                targets: jax.Array) -> jax.Array:
+    """F_grad (eq. 5) given per-task masked norms and targets Ḡ·r^γ."""
+    return jnp.sum(jnp.abs(p * norms - gbar * targets))
+
+
+def fgn_targets(loss_ratios: jax.Array, gamma: float) -> jax.Array:
+    """r_i^γ with r_i = F̃_i / mean(F̃)."""
+    r = loss_ratios / jnp.maximum(jnp.mean(loss_ratios), 1e-12)
+    return jnp.power(jnp.maximum(r, 1e-12), gamma)
+
+
+def fgn_grad_p(p: jax.Array, norms: jax.Array, loss_ratios: jax.Array,
+               gamma: float) -> Tuple[jax.Array, jax.Array]:
+    """∂F_grad/∂p_i = sign(p_i n_i − Ḡ r_i^γ) · n_i  (Ḡ, r stopped).
+
+    Returns (grad, fgrad_value)."""
+    gbar = jnp.mean(jax.lax.stop_gradient(p) * norms)
+    targets = fgn_targets(loss_ratios, gamma)
+    resid = p * norms - gbar * targets
+    return jnp.sign(resid) * norms, jnp.sum(jnp.abs(resid))
+
+
+def fgn_update(
+    p: jax.Array,                # (N,) current loss weights of the cluster
+    norms: jax.Array,            # (N,) masked last-layer grad norms
+    loss_ratios: jax.Array,      # (N,) F̃ = F_k / F_0
+    state: FGNState,
+    fl: FLConfig,
+) -> Tuple[jax.Array, FGNState, jax.Array]:
+    """One Alg.-2 step: p ← renorm(AdamStep(p, ∇_p F_grad))."""
+    g, fval = fgn_grad_p(p, norms, loss_ratios, fl.gamma)
+
+    # Adam on the weight vector
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    mu = b1 * state.mu + (1 - b1) * g
+    nu = b2 * state.nu + (1 - b2) * g * g
+    mhat = mu / (1 - jnp.power(b1, t))
+    vhat = nu / (1 - jnp.power(b2, t))
+    p_new = p - fl.alpha * mhat / (jnp.sqrt(vhat) + eps)
+
+    # constraint: p_i > p_min, Σ_i p_i = N (Sec. II)
+    p_new = jnp.maximum(p_new, fl.p_min + 1e-6)
+    p_new = p_new * (p.shape[0] / jnp.maximum(jnp.sum(p_new), 1e-12))
+    return p_new, FGNState(step=step, mu=mu, nu=nu), fval
+
+
+def masked_tree_norm(grad_tree, mask_tree) -> jax.Array:
+    """‖ M ∘ g ‖ over a pytree (the n_i of eq. 6)."""
+    total = jnp.zeros((), jnp.float32)
+    for g, m in zip(jax.tree.leaves(grad_tree), jax.tree.leaves(mask_tree)):
+        total = total + jnp.sum(
+            jnp.where(m, g.astype(jnp.float32), 0.0) ** 2)
+    return jnp.sqrt(total)

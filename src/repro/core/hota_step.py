@@ -1,0 +1,352 @@
+"""The distributed HOTA-FedGradNorm training step (shard_map + custom-vjp OTA).
+
+``make_hota_train_step(model, mesh, fl, tcfg)`` returns (init_fn, step_fn,
+state_specs) where step_fn is the *full* Algorithm 1 round:
+
+  phase 0  trunk forward once (PS->IS->client broadcast = FSDP gather)
+  phase A  τ_h personalized-head Adam steps on the frozen features
+  phase B  FGN inputs: per-client tail loss + masked ‖∇_{ω̃}F‖ (eq. 6),
+           then the distributed Alg. 2 update of p (psum-means over "client")
+  phase C  full forward/backward; every shared-param gradient flows through
+           the custom-vjp OTA gather (LAN psum -> masked MAC psum -> ĝ);
+           Adam on the FSDP shards (the PS update), local Adam on heads.
+
+Scale adaptations vs the paper (DESIGN.md §3.7): τ_ω = 1 (per-client local
+ω copies are impossible at 14B-141B params); the loss over the vocab head
+is computed in sequence chunks to bound logit memory.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common.config import FLConfig, TrainConfig
+from repro.core.hota import (
+    OTACtx, build_axes_registry, channel_mask_for, cluster_index, fold_tags,
+    full_transmission_mask, identity_hook, make_ota_gather, make_param_hook,
+    shard_specs_for, _fsdp_axis, _is_axes, _mesh_client_axes,
+    _mesh_cluster_axes, _mesh_data_axes,
+)
+from repro.models.model import Model
+from repro.models.params import init_params, logical_axes
+from repro.optim.adam import AdamState, adam_init, adam_update
+
+LOSS_CHUNK = 512
+
+
+def chunked_lm_loss(head, head_apply, feats, labels, chunk=LOSS_CHUNK):
+    """CE over a big vocab computed in sequence chunks (remat'd)."""
+    b, s, d = feats.shape
+    if s % chunk != 0 or s <= chunk:
+        logits = head_apply(head, feats)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+        return -jnp.mean(ll)
+    n = s // chunk
+    fc = feats.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(acc, xs):
+        f, l = xs
+        logits = head_apply(head, f)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, l[..., None], -1)[..., 0]
+        return acc + jnp.sum(ll), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (fc, lc))
+    return -tot / (b * s)
+
+
+def cls_head_loss(head, head_apply, feats, labels):
+    logits = head_apply(head, feats)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[..., None], -1)[..., 0])
+
+
+class HotaState(NamedTuple):
+    omega: Any          # {"trunk","final"} — FSDP shards (global arrays)
+    opt: Any            # AdamState over omega
+    heads: Any          # per-client stacked: leaves (n_total_clients, ...)
+    head_opt: Any
+    p: jax.Array        # (n_total_clients,)
+    fgn_mu: jax.Array   # (n_total_clients,)
+    fgn_nu: jax.Array
+    fgn_t: jax.Array    # scalar
+    f0: jax.Array       # (n_total_clients,)
+    step: jax.Array
+
+
+def make_hota_train_step(
+    model: Model,
+    mesh,
+    fl: FLConfig,
+    tcfg: TrainConfig,
+    *,
+    loss_kind: str = "lm",
+    n_out: Optional[int] = None,
+):
+    """Returns (init_fn, sharded_step_fn, state_sharding, batch_sharding)."""
+    cfg = model.cfg
+    data_axes = _mesh_data_axes(mesh)           # ("cluster","client")
+    cluster_axes = _mesh_cluster_axes(mesh)     # ("pod","cluster") | ("cluster",)
+    client_axes = _mesh_client_axes(mesh)       # all FL axes
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_clients = sizes["client"]
+    n_shards = int(np.prod([sizes[a] for a in data_axes]))
+    n_total_clients = int(np.prod([sizes[a] for a in client_axes]))
+    n_total_clusters = int(np.prod([sizes[a] for a in cluster_axes]))
+    manual_axes = set(client_axes)
+
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    gather = make_ota_gather(data_axes, cluster_axes, n_clients, n_shards,
+                             compute_dtype, mode=fl.ota_mode)
+    registry = build_axes_registry(model)
+    sigma2_arr = jnp.asarray(
+        [fl.cluster_sigma2(c) for c in range(n_total_clusters)], jnp.float32)
+
+    head_specs = model.head_specs(n_out)
+    final_axes = [a for a in jax.tree.leaves(
+        logical_axes(model.final_specs()), is_leaf=_is_axes)]
+
+    if loss_kind == "lm":
+        loss_fn = lambda head, feats, labels: chunked_lm_loss(
+            head, model.head_apply, feats, labels)
+    else:
+        loss_fn = lambda head, feats, labels: cls_head_loss(
+            head, model.head_apply, feats, labels)
+
+    # ---------------- shardings ----------------
+    omega_manual = shard_specs_for(model, mesh)          # manual FL axes only
+    heads_manual = jax.tree.map(
+        lambda s: P(client_axes), head_specs,
+        is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "axes"))
+    scalar_clients = P(client_axes)
+
+    state_specs = HotaState(
+        omega=omega_manual,
+        opt=AdamState(step=P(), mu=omega_manual, nu=omega_manual),
+        heads=heads_manual,
+        head_opt=AdamState(step=P(), mu=heads_manual, nu=heads_manual),
+        p=scalar_clients, fgn_mu=scalar_clients, fgn_nu=scalar_clients,
+        fgn_t=P(), f0=scalar_clients, step=P())
+    batch_spec = (P(client_axes), P(client_axes))
+    metric_spec = {"loss": P(), "p_mean": P(), "p_min": P(), "p_max": P(),
+                   "fgrad": P(), "gnorm_mean": P()}
+
+    # ---------------- init ----------------
+    def init_fn(key: jax.Array) -> HotaState:
+        k1, k2 = jax.random.split(key)
+        omega = {
+            "final": init_params(model.final_specs(), jax.random.fold_in(k1, 7)),
+            "trunk": init_params(model.trunk_specs(), k1),
+        }
+        heads = jax.vmap(lambda kc: init_params(head_specs, kc))(
+            jax.random.split(k2, n_total_clients))
+        zc = jnp.zeros((n_total_clients,), jnp.float32)
+        zeros32 = lambda t: jax.tree.map(
+            lambda x: jnp.zeros_like(x, jnp.float32), t)
+        head_opt = AdamState(step=jnp.zeros((), jnp.int32),
+                             mu=zeros32(heads), nu=zeros32(heads))
+        return HotaState(
+            omega=omega, opt=adam_init(omega), heads=heads,
+            head_opt=head_opt,
+            p=jnp.ones((n_total_clients,), jnp.float32),
+            fgn_mu=zc, fgn_nu=zc, fgn_t=jnp.zeros((), jnp.int32),
+            f0=jnp.ones((n_total_clients,), jnp.float32),
+            step=jnp.zeros((), jnp.int32))
+
+    # ---------------- the sharded step ----------------
+    def _step(state: HotaState, tokens, labels, key):
+        base_key = jax.random.fold_in(key, state.step)
+        cidx = cluster_index(cluster_axes)
+        sigma2_c = sigma2_arr[cidx]
+        head = jax.tree.map(lambda a: a[0], state.heads)
+        head_opt = AdamState(step=state.head_opt.step,
+                             mu=jax.tree.map(lambda a: a[0], state.head_opt.mu),
+                             nu=jax.tree.map(lambda a: a[0], state.head_opt.nu))
+        p_i = state.p[0]
+        f0_i = state.f0[0]
+
+        # fast path: equal weighting + no local head steps needs no FGN
+        # inputs at all — phases 0/A/B vanish (the naive-baseline config).
+        skip_fgn = fl.weighting == "equal" and fl.tau_h == 0
+
+        if skip_fgn:
+            p_new = jnp.ones(())
+            mu, nu = state.fgn_mu[0], state.fgn_nu[0]
+            fgrad_val = jnp.zeros(())
+            n_i = jnp.zeros(())
+            f0 = f0_i
+        else:
+            # ---- phase 0: trunk features (ω frozen; broadcast = gather) ----
+            hook_fwd = make_param_hook(gather, registry, base_key, 1.0,
+                                       sigma2_c, fl)
+            hidden, _, _ = model.trunk_apply(state.omega["trunk"], tokens,
+                                             mode="train", param_hook=hook_fwd)
+            hidden = jax.lax.stop_gradient(hidden)
+
+            final_full = _plain_gather_tree(state.omega["final"], final_axes,
+                                            data_axes, compute_dtype)
+
+            def tail_loss(ff, hd):
+                feats = model.final_apply(ff, hidden)
+                return loss_fn(hd, feats, labels)
+
+            # ---- phase A: τ_h personalized-head steps (Alg. 1 l. 10-11) ----
+            def head_step(carry, _):
+                hd, hopt = carry
+                g = jax.grad(lambda h_: tail_loss(final_full, h_))(hd)
+                hd, hopt = adam_update(g, hopt, hd, tcfg.lr)
+                return (hd, hopt), None
+            (head, head_opt), _ = jax.lax.scan(
+                head_step, (head, head_opt), None, length=fl.tau_h)
+
+            # ---- phase B: FGN inputs + distributed Alg. 2 ----
+            F_i, g_final = jax.value_and_grad(
+                lambda ff: tail_loss(ff, head))(final_full)
+            n_i = _masked_final_norm(g_final, final_axes, base_key, sigma2_c,
+                                     fl, cluster_axes, n_clients)
+            f0 = jnp.where(state.step == 0, F_i, f0_i)
+            ratio = F_i / jnp.maximum(f0, 1e-12)
+
+            if fl.weighting == "fedgradnorm":
+                gbar = jax.lax.pmean(p_i * n_i, CLIENT_AXIS_NAME)
+                rmean = jax.lax.pmean(ratio, CLIENT_AXIS_NAME)
+                target = jnp.power(
+                    jnp.maximum(ratio / jnp.maximum(rmean, 1e-12), 1e-12),
+                    fl.gamma)
+                resid = p_i * n_i - gbar * target
+                gp = jnp.sign(resid) * n_i
+                fgrad_val = jax.lax.psum(jnp.abs(resid), CLIENT_AXIS_NAME)
+                # scalar Adam on p_i (state shared-stepped)
+                t = (state.fgn_t + 1).astype(jnp.float32)
+                b1, b2, eps = 0.9, 0.999, 1e-8
+                mu = b1 * state.fgn_mu[0] + (1 - b1) * gp
+                nu = b2 * state.fgn_nu[0] + (1 - b2) * gp * gp
+                p_new = p_i - fl.alpha * (mu / (1 - b1 ** t)) / (
+                    jnp.sqrt(nu / (1 - b2 ** t)) + eps)
+                p_new = jnp.maximum(p_new, fl.p_min + 1e-6)
+                p_new = p_new * n_clients / jnp.maximum(
+                    jax.lax.psum(p_new, CLIENT_AXIS_NAME), 1e-12)
+            else:
+                mu, nu = state.fgn_mu[0], state.fgn_nu[0]
+                p_new = jnp.ones(())
+                fgrad_val = jnp.zeros(())
+
+        # ---- phase C: full backward through the OTA aggregation ----
+        # Channel keys fold only (step, layer, leaf): masks and AWGN are
+        # identical across microbatches, so averaging the per-microbatch
+        # estimates equals ONE MAC transmission of the round-averaged
+        # x^(l) — exact Alg.-1 round semantics under grad accumulation.
+        hook = make_param_hook(gather, registry, base_key, p_new,
+                               sigma2_c, fl)
+
+        def mb_loss(omega, hd, tok_mb, lab_mb):
+            h, aux, _ = model.trunk_apply(omega["trunk"], tok_mb,
+                                          mode="train", param_hook=hook)
+            ff = hook(omega["final"], "final")
+            feats = model.final_apply(ff, h)
+            return loss_fn(hd, feats, lab_mb) + aux
+
+        n_mb = max(fl.microbatches, 1)
+        b_loc = tokens.shape[0]
+        assert b_loc % n_mb == 0, (b_loc, n_mb)
+        if n_mb == 1:
+            loss_val, (g_omega, g_head) = jax.value_and_grad(
+                mb_loss, argnums=(0, 1))(state.omega, head, tokens, labels)
+        else:
+            tok_mb = tokens.reshape((n_mb, b_loc // n_mb) + tokens.shape[1:])
+            lab_mb = labels.reshape((n_mb, b_loc // n_mb) + labels.shape[1:])
+
+            def mb_body(carry, xs):
+                g_acc, h_acc, l_acc = carry
+                t_i, l_i = xs
+                l_val, (g_om, g_hd) = jax.value_and_grad(
+                    mb_loss, argnums=(0, 1))(state.omega, head, t_i, l_i)
+                g_acc = jax.tree.map(jnp.add, g_acc, g_om)
+                h_acc = jax.tree.map(jnp.add, h_acc, g_hd)
+                return (g_acc, h_acc, l_acc + l_val), None
+
+            g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                              state.omega)
+            h0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), head)
+            (g_omega, g_head, l_sum), _ = jax.lax.scan(
+                mb_body, (g0, h0, jnp.zeros((), jnp.float32)),
+                (tok_mb, lab_mb))
+            g_omega = jax.tree.map(lambda x: x / n_mb, g_omega)
+            g_head = jax.tree.map(lambda x: x / n_mb, g_head)
+            loss_val = l_sum / n_mb
+
+        omega, opt = adam_update(g_omega, state.opt, state.omega, tcfg.lr,
+                                 tcfg.betas[0], tcfg.betas[1], tcfg.eps,
+                                 tcfg.weight_decay)
+        # Alg. 1 trains heads only in the τ_h phase (lines 10-11); the
+        # fast path has no phase A, so it trains heads here instead.
+        if skip_fgn:
+            head, head_opt = adam_update(g_head, head_opt, head, tcfg.lr)
+
+        new_state = HotaState(
+            omega=omega, opt=opt,
+            heads=jax.tree.map(lambda a: a[None], head),
+            head_opt=AdamState(step=head_opt.step,
+                               mu=jax.tree.map(lambda a: a[None], head_opt.mu),
+                               nu=jax.tree.map(lambda a: a[None], head_opt.nu)),
+            p=p_new[None], fgn_mu=mu[None], fgn_nu=nu[None],
+            fgn_t=state.fgn_t + 1, f0=f0[None], step=state.step + 1)
+
+        metrics = {
+            "loss": jax.lax.pmean(loss_val, client_axes),
+            "p_mean": jax.lax.pmean(p_new, client_axes),
+            "p_min": -jax.lax.pmax(-p_new, client_axes),
+            "p_max": jax.lax.pmax(p_new, client_axes),
+            "fgrad": jax.lax.pmean(fgrad_val, client_axes),
+            "gnorm_mean": jax.lax.pmean(n_i, client_axes),
+        }
+        return new_state, metrics
+
+    sharded_step = jax.shard_map(
+        _step, mesh=mesh,
+        in_specs=(state_specs, batch_spec[0], batch_spec[1], P()),
+        out_specs=(state_specs, metric_spec),
+        axis_names=manual_axes, check_vma=False)
+
+    return init_fn, sharded_step, state_specs, batch_spec
+
+
+CLIENT_AXIS_NAME = "client"
+
+
+def _plain_gather_tree(shards, axes_list, data_axes, compute_dtype):
+    leaves, treedef = jax.tree.flatten(shards)
+    out = []
+    for leaf, axes in zip(leaves, axes_list):
+        ax = _fsdp_axis(axes)
+        if ax >= 0:
+            leaf = jax.lax.all_gather(leaf, data_axes, axis=ax, tiled=True)
+        out.append(leaf.astype(compute_dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def _masked_final_norm(g_final, axes_list, base_key, sigma2_c, fl,
+                       cluster_axes, n_clients):
+    """n_i = ‖M ∘ ∇_{ω̃}F_i‖ with the same masks the transmission uses
+    (per-region draws in scatter mode — full_transmission_mask mirrors the
+    gather backward's key scheme exactly)."""
+    leaves = jax.tree.leaves(g_final)
+    total = jnp.zeros((), jnp.float32)
+    ota_on = jnp.asarray(1.0 if fl.ota else 0.0)
+    for i, (g, axes) in enumerate(zip(leaves, axes_list)):
+        key = fold_tags(base_key, "final", (), i)
+        mask = full_transmission_mask(
+            key, g.shape, _fsdp_axis(axes), n_clients, sigma2_c,
+            fl.h_threshold, ota_on, cluster_axes,
+            scatter_mode=(fl.ota_mode == "scatter"))
+        total = total + jnp.sum(
+            jnp.where(mask, g.astype(jnp.float32), 0.0) ** 2)
+    return jnp.sqrt(total)

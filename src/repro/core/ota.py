@@ -1,0 +1,158 @@
+"""Over-the-air aggregation over the wireless fading MAC (paper Sec. III-B).
+
+The channel model, exactly as the paper defines it:
+
+* channel gains  H_k^(l)(j) ~ N(0, σ_l²) i.i.d. per entry j, per cluster l,
+  per iteration k                                                  (Sec. III-A)
+* threshold mask M_k^(l)(j) = 1{ |H(j)|² ≥ H_th }                  (eq. 7)
+* power allocation β_k^(l,i)(j) = p_k^(l,i) / H(j) on passing entries,
+  0 otherwise (channel inversion)                                   (eq. 3)
+* MAC superposition y(j) = Σ_{l∈M(j)} H(j) x^(l)(j) + z(j), z ~ N(0,1) (eq. 8)
+* PS estimator ĝ(j) = y(j) / (|M_k(j)| · N)                         (eq. 10)
+
+Because β inverts the channel, H·(β∘g) = p·g on passing entries — the
+faithful-but-redundant inversion is implemented in ``faithful=True`` mode
+(used by property tests to verify the cancellation); the fast path sums the
+masked weighted gradients directly, which is bit-for-bit the same math.
+
+All functions operate leaf-wise on pytrees; per-leaf channel keys are
+derived with ``fold_in(cluster_key, leaf_index)``, which realizes the
+paper's "one i.i.d. gain per parameter entry" over an arbitrary pytree.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import FLConfig
+
+
+# --------------------------------------------------------------------------
+# per-leaf channel draws
+# --------------------------------------------------------------------------
+
+def cluster_key(key: jax.Array, cluster: jax.Array | int) -> jax.Array:
+    return jax.random.fold_in(key, cluster)
+
+
+def leaf_key(ckey: jax.Array, leaf_idx: int) -> jax.Array:
+    return jax.random.fold_in(ckey, leaf_idx)
+
+
+def sample_gain(key: jax.Array, shape, sigma2) -> jax.Array:
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(
+        jnp.asarray(sigma2, jnp.float32))
+
+
+def gain_mask(h: jax.Array, h_threshold: float) -> jax.Array:
+    """eq. (7): pass entries with |H|² ≥ H_th."""
+    return (h * h) >= h_threshold
+
+
+def tree_channel(key: jax.Array, tree, sigma2, h_threshold: float):
+    """Draw (gains, masks) trees matching ``tree``'s structure/shapes."""
+    leaves, treedef = jax.tree.flatten(tree)
+    gains, masks = [], []
+    for i, leaf in enumerate(leaves):
+        h = sample_gain(leaf_key(key, i), leaf.shape, sigma2)
+        gains.append(h)
+        masks.append(gain_mask(h, h_threshold))
+    return jax.tree.unflatten(treedef, gains), jax.tree.unflatten(treedef, masks)
+
+
+# --------------------------------------------------------------------------
+# power allocation + transmission (single cluster)
+# --------------------------------------------------------------------------
+
+def power_allocation(p_i: jax.Array, h: jax.Array, mask: jax.Array) -> jax.Array:
+    """eq. (3): β = p / H where the channel passes, else 0."""
+    safe_h = jnp.where(mask, h, 1.0)
+    return jnp.where(mask, p_i / safe_h, 0.0)
+
+
+def transmit_signal(p_i, g, h, mask):
+    """x^(l,i) = β ∘ g (the signal a cluster's IS puts on the air for one
+    client's gradient). Faithful path (channel inversion explicit)."""
+    return power_allocation(p_i, h, mask) * g
+
+
+def transmit_power(x: jax.Array) -> jax.Array:
+    """E-free instantaneous ||x||² for the average power constraint (eq. 4)."""
+    return jnp.sum(jnp.square(x))
+
+
+# --------------------------------------------------------------------------
+# full OTA aggregation across clusters (sim path)
+# --------------------------------------------------------------------------
+
+def ota_aggregate_leaf(
+    weighted_grads: jax.Array,   # (C, ...) already Σ_i p_i g_i per cluster
+    masks: jax.Array,            # (C, ...) bool
+    noise: jax.Array,            # (...)
+    n_clients: int,
+    gains: Optional[jax.Array] = None,      # (C, ...) — faithful mode
+    cluster_grads_scaled: Optional[jax.Array] = None,  # (C,...) β∘g sums
+):
+    """eqs. (8)-(10) for one pytree leaf.
+
+    Fast path: y = Σ_l mask_l * wg_l + z. Faithful path: y = Σ_l mask_l *
+    H_l * (β∘g)_l + z (identical up to float assoc.; property-tested).
+    """
+    if gains is not None and cluster_grads_scaled is not None:
+        y = jnp.sum(jnp.where(masks, gains * cluster_grads_scaled, 0.0), axis=0)
+    else:
+        y = jnp.sum(jnp.where(masks, weighted_grads, 0.0), axis=0)
+    y = y + noise
+    cnt = jnp.sum(masks.astype(jnp.float32), axis=0)
+    # |M_k(j)| = 0 -> nothing received but noise; estimator guarded to 0
+    ghat = jnp.where(cnt > 0, y / (jnp.maximum(cnt, 1.0) * n_clients), 0.0)
+    return ghat
+
+
+def ota_aggregate_tree(
+    key: jax.Array,
+    weighted_grads,              # pytree with leading (C, ...) leaves
+    fl: FLConfig,
+    sigma2_per_cluster: jax.Array,   # (C,)
+):
+    """Sim-path OTA aggregation over a pytree of per-cluster weighted grads."""
+    leaves, treedef = jax.tree.flatten(weighted_grads)
+    n_clusters = leaves[0].shape[0]
+    out = []
+    for i, wg in enumerate(leaves):
+        ks = leaf_key(key, i)
+        # per-cluster gains: vmap the draw over the cluster axis
+        hs = jax.vmap(
+            lambda c: sample_gain(cluster_key(ks, c), wg.shape[1:],
+                                  sigma2_per_cluster[c])
+        )(jnp.arange(n_clusters))
+        masks = gain_mask(hs, fl.h_threshold)
+        noise = (jax.random.normal(jax.random.fold_in(ks, 999), wg.shape[1:])
+                 * fl.noise_std if fl.ota else jnp.zeros(wg.shape[1:]))
+        if not fl.ota:
+            masks = jnp.ones_like(masks)
+        out.append(ota_aggregate_leaf(wg, masks, noise, fl.n_clients))
+    return jax.tree.unflatten(treedef, out)
+
+
+def final_layer_masks(key: jax.Array, final_tree, fl: FLConfig,
+                      sigma2_per_cluster: jax.Array, leaf_offset: int = 0):
+    """Masks M^(l) restricted to the last-shared-layer params ω̃, for the
+    sparsified F_grad (eq. 5-7). Uses the same per-leaf keys as the full
+    aggregation so FGN sees exactly the channel the transmission will use."""
+    leaves, treedef = jax.tree.flatten(final_tree)
+    n_clusters = sigma2_per_cluster.shape[0]
+    masks = []
+    for i, leaf in enumerate(leaves):
+        ks = leaf_key(key, leaf_offset + i)
+        hs = jax.vmap(
+            lambda c: sample_gain(cluster_key(ks, c), leaf.shape,
+                                  sigma2_per_cluster[c])
+        )(jnp.arange(n_clusters))
+        m = gain_mask(hs, fl.h_threshold)
+        if not fl.ota:
+            m = jnp.ones_like(m)
+        masks.append(m)
+    return jax.tree.unflatten(treedef, masks)

@@ -1,0 +1,8 @@
+from repro.data.radcom import RadComConfig, TASKS, make_radcom_dataset, client_partition
+from repro.data.lm import synthetic_lm_batches
+from repro.data.federated import FederatedBatcher
+
+__all__ = [
+    "RadComConfig", "TASKS", "make_radcom_dataset", "client_partition",
+    "synthetic_lm_batches", "FederatedBatcher",
+]

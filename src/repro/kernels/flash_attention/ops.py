@@ -1,0 +1,51 @@
+"""Jit'd public wrapper for the flash_attention kernel.
+
+Accepts the framework's (B, S, H, D) layout, transposes to the kernel's
+(B, H, S, D), pads D to a 128-lane multiple, and dispatches. Used by the
+serving path when ModelConfig.attn_impl == "pallas"; training keeps the
+autodiff-able blocked-scan path (layers.blocked_attention).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+
+
+@partial(jax.jit, static_argnames=("window", "block_q", "block_kv",
+                                   "interpret"))
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, pos_q=None, pos_kv=None, window: Optional[int] = None,
+    block_q: int = 512, block_kv: int = 512,
+    interpret: bool = not _ON_TPU,
+) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Skv, KV, D). Causal self-attention."""
+    b, sq, h, d = q.shape
+    d_pad = -d % 128
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    if d_pad:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, 0), (0, d_pad)))
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, 0), (0, d_pad)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, 0), (0, d_pad)))
+    out = flash_attention_pallas(qt, kt, vt, window=window, causal=True,
+                                 block_q=block_q, block_kv=block_kv,
+                                 scale=1.0 / (d ** 0.5),   # pre-padding D
+                                 interpret=interpret)
+    if d_pad:
+        out = out[..., :d]
+    return jnp.transpose(out, (0, 2, 1, 3))
+
+
+@partial(jax.jit, static_argnames=("window",))
+def flash_attention_reference(q, k, v, *, window: Optional[int] = None):
+    return flash_attention_ref(q, k, v, window=window)

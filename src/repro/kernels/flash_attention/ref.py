@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash_attention kernel: full-matrix GQA
+attention with causal + optional sliding-window masking."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, window: Optional[int] = None,
+) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Skv, KV, D); Sq == Skv (self-attention)."""
+    b, sq, h, d = q.shape
+    n_kv = k.shape[2]
+    g = h // n_kv
+    qg = q.reshape(b, sq, n_kv, g, d)
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    pos = jnp.arange(sq)
+    diff = pos[:, None] - pos[None, :]
+    mask = diff >= 0
+    if window is not None:
+        mask &= diff < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.masked_gradnorm.ops import *  # noqa

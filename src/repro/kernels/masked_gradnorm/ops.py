@@ -1,0 +1,35 @@
+"""Jit'd public wrapper for masked_gradnorm (pads ragged shapes)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.masked_gradnorm.kernel import (
+    COL_BLOCK, TASK_BLOCK, masked_gradnorm_pallas,
+)
+from repro.kernels.masked_gradnorm.ref import masked_gradnorm_ref
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def masked_gradnorm(g: jax.Array, mask: jax.Array,
+                    interpret: bool = not _ON_TPU) -> jax.Array:
+    """g: (T, P); mask: (P,) — returns (T,) masked L2 norms (fp32)."""
+    t, p = g.shape
+    tb = TASK_BLOCK if t >= TASK_BLOCK else t
+    cb = COL_BLOCK if p >= COL_BLOCK else max(128, p)
+    t_pad = -t % tb
+    p_pad = -p % cb
+    gp = jnp.pad(g, ((0, t_pad), (0, p_pad)))
+    mp = jnp.pad(mask.astype(g.dtype), (0, p_pad))[None, :]
+    out = masked_gradnorm_pallas(gp, mp, task_block=tb, col_block=cb,
+                                 interpret=interpret)
+    return out[:t]
+
+
+@jax.jit
+def masked_gradnorm_reference(g: jax.Array, mask: jax.Array) -> jax.Array:
+    return masked_gradnorm_ref(g, mask)

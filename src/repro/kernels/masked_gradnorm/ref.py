@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the masked_gradnorm kernel.
+
+n_t = ‖ M ∘ g_t ‖₂  per task t (paper eq. 6) — the FedGradNorm input.
+g: (T, P) stacked per-task last-shared-layer gradients; mask: (P,).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_gradnorm_ref(g: jax.Array, mask: jax.Array) -> jax.Array:
+    g32 = g.astype(jnp.float32)
+    m = mask.astype(jnp.float32)
+    return jnp.sqrt(jnp.sum((g32 * m[None, :]) ** 2, axis=1))

@@ -1,0 +1,1 @@
+from repro.kernels.ota_channel.ops import *  # noqa

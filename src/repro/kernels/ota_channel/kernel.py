@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: fused channel-draw + threshold + mask-apply.
+
+The per-entry channel model is the memory-bound hot loop of HOTA-
+FedGradNorm at scale: for every parameter entry, every cluster, every
+iteration, draw H ~ N(0, σ²), threshold, and sparsify the weighted
+gradient (paper eqs. 3 & 7). Done naively (jax.random.normal + where),
+H round-trips through HBM; this kernel fuses bits→gaussian→mask→apply in
+one VMEM pass and never materializes H.
+
+Tiling: the slab is viewed as (rows, 128) — lane-aligned for the VPU —
+with (block_rows, 128) VMEM blocks (block_rows a multiple of 8 for f32
+sublane packing). Grid is 1-D over row blocks. All compute is elementwise
+VPU work; the MXU is untouched.
+
+Validated in interpret mode against ref.ota_channel_ref (same bits stream).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TWO_PI = 6.283185307179586
+LANE = 128
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _ota_kernel(x_ref, bits_ref, sigma2_ref, out_ref, mask_ref, *, h_th):
+    bits = bits_ref[...]
+    hi = (bits >> 16).astype(jnp.float32)
+    lo = (bits & jnp.uint32(0xFFFF)).astype(jnp.float32)
+    u1 = (hi + 1.0) * (1.0 / 65536.0)
+    u2 = lo * (1.0 / 65536.0)
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    h = r * jnp.cos(TWO_PI * u2) * jnp.sqrt(sigma2_ref[0, 0])
+    mask = (h * h) >= h_th
+    x = x_ref[...]
+    out_ref[...] = jnp.where(mask, x, jnp.zeros_like(x))
+    mask_ref[...] = mask.astype(mask_ref.dtype)
+
+
+def ota_channel_pallas(
+    x: jax.Array,            # (rows, 128) slab
+    bits: jax.Array,         # (rows, 128) uint32
+    sigma2: jax.Array,       # scalar (passed as (1,1) in SMEM-like block)
+    h_th: float,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+):
+    rows, lane = x.shape
+    assert lane == LANE, x.shape
+    block_rows = min(block_rows, rows)
+    assert rows % block_rows == 0, (rows, block_rows)
+    grid = (rows // block_rows,)
+
+    kernel = functools.partial(_ota_kernel, h_th=h_th)
+    out, mask = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANE), x.dtype),
+            jax.ShapeDtypeStruct((rows, LANE), x.dtype),
+        ],
+        interpret=interpret,
+    )(x, bits, sigma2.reshape(1, 1).astype(jnp.float32))
+    return out, mask

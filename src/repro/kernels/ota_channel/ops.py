@@ -1,0 +1,53 @@
+"""Jit'd public wrapper for the ota_channel kernel.
+
+``ota_channel(x, key, sigma2, h_th)`` accepts an arbitrary-shape slab,
+pads/reshapes it to the kernel's (rows, 128) layout, draws the uniform
+bits with JAX's counter-based threefry (cheap, fused by XLA), and invokes
+the Pallas kernel (interpret mode on CPU — this container has no TPU).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ota_channel.kernel import LANE, ota_channel_pallas
+from repro.kernels.ota_channel.ref import ota_channel_ref
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+
+
+def _pad_to_lanes(x: jax.Array):
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    rows = -(-n // LANE)
+    rows = max(8, -(-rows // 8) * 8)     # sublane multiple
+    pad = rows * LANE - n
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(rows, LANE), n
+
+
+@partial(jax.jit, static_argnames=("h_th", "interpret"))
+def ota_channel(x: jax.Array, key: jax.Array, sigma2, h_th: float,
+                interpret: bool = not _ON_TPU):
+    """Fused channel mask+apply. Returns (masked_x, mask) shaped like x."""
+    slab, n = _pad_to_lanes(x)
+    bits = jax.random.bits(key, slab.shape, jnp.uint32)
+    out, mask = ota_channel_pallas(
+        slab, bits, jnp.asarray(sigma2, jnp.float32), h_th,
+        interpret=interpret)
+    out = out.reshape(-1)[:n].reshape(x.shape)
+    mask = mask.reshape(-1)[:n].reshape(x.shape)
+    return out, mask
+
+
+@partial(jax.jit, static_argnames=("h_th",))
+def ota_channel_reference(x: jax.Array, key: jax.Array, sigma2, h_th: float):
+    """Oracle path on the same bit stream (for tests/benchmarks)."""
+    slab, n = _pad_to_lanes(x)
+    bits = jax.random.bits(key, slab.shape, jnp.uint32)
+    out, mask, _ = ota_channel_ref(slab, bits, sigma2, h_th)
+    return (out.reshape(-1)[:n].reshape(x.shape),
+            mask.reshape(-1)[:n].reshape(x.shape))

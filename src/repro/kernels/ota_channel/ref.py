@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the ota_channel kernel.
+
+Math (paper eqs. 3, 7): from counter-based uniform bits, draw per-entry
+channel gains H ~ N(0, σ²) via Box-Muller, threshold |H|² ≥ H_th into the
+sparsification mask M, and apply it to the weighted-gradient slab x:
+
+    out  = M ∘ x
+    mask = M (as x.dtype, for the |M_k(j)| count psum / CSI bookkeeping)
+    gain = H (faithful mode needs the gains themselves for β = p/H)
+
+Bits are supplied by the caller (jax.random.bits), so kernel and oracle
+consume the identical stream — outputs match bit-for-bit up to float
+associativity.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+TWO_PI = 6.283185307179586
+
+
+def bits_to_gaussian(bits: jax.Array, sigma2) -> jax.Array:
+    """Box-Muller on the two u16 halves of each u32 word -> one N(0, σ²)."""
+    hi = (bits >> 16).astype(jnp.float32)
+    lo = (bits & jnp.uint32(0xFFFF)).astype(jnp.float32)
+    # map to (0,1]: (k + 1) / 65536 keeps u1 away from 0 (log-safe)
+    u1 = (hi + 1.0) * (1.0 / 65536.0)
+    u2 = lo * (1.0 / 65536.0)
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    h = r * jnp.cos(TWO_PI * u2)
+    return h * jnp.sqrt(jnp.asarray(sigma2, jnp.float32))
+
+
+def ota_channel_ref(x: jax.Array, bits: jax.Array, sigma2, h_th):
+    """x: any-shape slab; bits: same-shape uint32. Returns (masked_x, mask, gain)."""
+    h = bits_to_gaussian(bits, sigma2)
+    mask = (h * h) >= h_th
+    out = jnp.where(mask, x, jnp.zeros_like(x))
+    return out, mask.astype(x.dtype), h

@@ -1,0 +1,224 @@
+"""HLO-text cost model with while-loop trip-count multipliers.
+
+``compiled.cost_analysis()`` on XLA:CPU counts each while-loop *body once*,
+which under scan-over-layers undercounts a 56-layer model by 56x. This
+module reparses the post-partitioning, post-fusion HLO text and computes:
+
+* FLOPs   — dot_general ops (2 x result elems x contracting elems),
+            descending into fusions/whiles with multipliers;
+* bytes   — per top-level op: operand + result bytes (fusions counted at
+            the fusion boundary — post-fusion traffic, which is the right
+            roofline quantity);
+* collective bytes — result-shape bytes per collective op kind.
+
+Approximations (documented in EXPERIMENTS.md §Roofline): non-dot FLOPs
+(exp/tanh, rsqrt...) are ignored — matmul-dominated models; dynamic trip
+counts fall back to the largest constant in the loop condition; operand
+bytes for tuple-typed vars use the tuple's total size.
+
+Shapes in partitioned HLO are per-device, so every number is per-chip.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+
+
+def _parse_shape_list(s: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dtype, dims in _SHAPE_TOKEN.findall(s):
+        if dtype not in DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d.strip())
+        out.append((dtype, shape))
+    return out
+
+
+def _bytes_of(shapes: List[Tuple[str, Tuple[int, ...]]]) -> int:
+    total = 0
+    for dtype, shape in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    result_shapes: List[Tuple[str, Tuple[int, ...]]]
+    operands: List[str]
+    attrs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    shapes: Dict[str, List[Tuple[str, Tuple[int, ...]]]] = field(default_factory=dict)
+
+
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->")
+
+
+def parse_hlo(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        if not raw.strip():
+            continue
+        if not raw.startswith((" ", "\t")):
+            m = _COMP_HEADER.match(raw.strip())
+            if m:
+                cur = Computation(name=m.group(2))
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+                continue
+        if cur is None:
+            continue
+        line = raw.strip()
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        name, result_str, opcode, rest = m.groups()
+        result_shapes = _parse_shape_list(result_str)
+        # operands: %var references before any attr section
+        paren = rest.split("),")[0] if ")," in rest else rest.rstrip(")")
+        operands = re.findall(r"%([\w\.\-]+)", paren)
+        op = Op(name=name, opcode=opcode, result_shapes=result_shapes,
+                operands=operands, attrs=rest)
+        cur.ops.append(op)
+        cur.shapes[name] = result_shapes
+    # parameters: appear as ops with opcode 'parameter'
+    return comps, entry
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    """2 x result elems x contracted elems for dot/dot-general."""
+    res_elems = 0
+    for _, shape in op.result_shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        res_elems += n
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    if not m or not op.operands:
+        return 2.0 * res_elems          # assume contract dim ~1 unknown
+    cdims = [int(x) for x in m.group(1).split(",") if x.strip()]
+    lhs = comp.shapes.get(op.operands[0])
+    if not lhs:
+        return 2.0 * res_elems
+    _, lshape = lhs[0]
+    contracted = 1
+    for cd in cdims:
+        if cd < len(lshape):
+            contracted *= lshape[cd]
+    return 2.0 * res_elems * contracted
+
+
+def _trip_count(cond: Computation) -> int:
+    consts = []
+    for op in cond.ops:
+        if op.opcode == "constant":
+            # attrs is the text after "constant(" — the literal comes first
+            m = re.match(r"(\d+)\)", op.attrs.strip())
+            if m:
+                consts.append(int(m.group(1)))
+        for m in re.finditer(r"constant\((\d+)\)", op.attrs):
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+_CALL_RE = re.compile(r"(?:to_apply|calls|body)=%?([\w\.\-]+)")
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0        # fusion-pessimistic upper bound (all ops)
+    bytes_major: float = 0.0  # fusion-optimistic lower bound (dot/reduce/
+    #                           collective/slice/gather/scatter/fusion ops)
+    coll_bytes: Dict[str, float] = field(default_factory=dict)
+    coll_detail: List[Tuple[str, str, float, float]] = field(default_factory=list)
+    # (computation, opkind, bytes_once, multiplier)
+
+
+def analyze(hlo: str) -> CostTotals:
+    comps, entry = parse_hlo(hlo)
+    totals = CostTotals()
+    if entry is None:
+        entry = next(iter(comps)) if comps else None
+    if entry is None:
+        return totals
+
+    def op_operand_bytes(op: Op, comp: Computation) -> int:
+        b = 0
+        for o in op.operands:
+            shapes = comp.shapes.get(o)
+            if shapes:
+                b += _bytes_of(shapes)
+        return b
+
+    SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+                  "bitcast", "copy", "after-all", "partition-id"}
+    MAJOR = {"dot", "dot-general", "convolution", "reduce", "fusion",
+             "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+             "sort", "reduce-window"} | set(COLLECTIVES)
+
+    def visit(name: str, mult: float, stack: Tuple[str, ...],
+              count_bytes: bool):
+        if name not in comps or name in stack or mult <= 0:
+            return
+        comp = comps[name]
+        for op in comp.ops:
+            if op.opcode in ("dot", "dot-general"):
+                totals.flops += _dot_flops(op, comp) * mult
+            if count_bytes and op.opcode not in SKIP_BYTES:
+                b = (_bytes_of(op.result_shapes)
+                     + op_operand_bytes(op, comp)) * mult
+                totals.bytes += b
+                if op.opcode in MAJOR:
+                    totals.bytes_major += b
+            if op.opcode in COLLECTIVES:
+                b = _bytes_of(op.result_shapes)
+                totals.coll_bytes[op.opcode] = (
+                    totals.coll_bytes.get(op.opcode, 0.0) + b * mult)
+                totals.coll_detail.append((name, op.opcode, b, mult))
+            if op.opcode == "while":
+                body = re.search(r"body=%?([\w\.\-]+)", op.attrs)
+                cond = re.search(r"condition=%?([\w\.\-]+)", op.attrs)
+                tc = 1
+                if cond and cond.group(1) in comps:
+                    tc = _trip_count(comps[cond.group(1)])
+                if body:
+                    visit(body.group(1), mult * max(tc, 1), stack + (name,),
+                          count_bytes)
+            elif op.opcode == "fusion":
+                callee = re.search(r"calls=%?([\w\.\-]+)", op.attrs)
+                if callee:
+                    # flops descend into the fusion; bytes counted at boundary
+                    visit(callee.group(1), mult, stack + (name,), False)
+            elif op.opcode in ("call", "custom-call", "conditional"):
+                for callee in _CALL_RE.findall(op.attrs):
+                    visit(callee, mult, stack + (name,), count_bytes)
+
+    visit(entry, 1.0, (), True)
+    return totals

@@ -1,0 +1,26 @@
+"""Production meshes (assignment §MULTI-POD DRY-RUN).
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state). Single pod: (16, 16) ("data", "model") = 256 chips.
+Multi-pod: (2, 16, 16) ("pod", "data", "model") = 512 chips.
+
+The HOTA trainer refines the data axis into ("cluster", "client") via
+``repro.sharding.fl_view`` — same devices, same order (DESIGN.md §3.2).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(shape=(2, 2, 2), axes=("cluster", "client", "model")):
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
+    import numpy as np
+    devs = np.array(jax.devices())[: int(np.prod(shape))].reshape(shape)
+    return jax.sharding.Mesh(devs, axes)

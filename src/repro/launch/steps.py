@@ -1,0 +1,146 @@
+"""Step builders + abstract input specs for the dry-run and real runs.
+
+``input_specs(arch, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (no device allocation), matching the assignment's pattern.
+For the audio/VLM architectures the modality frontend is stubbed: specs
+carry precomputed frame/patch *embeddings* (B, S, d_model) instead of raw
+audio/pixels (the decoder consumes embeddings; DESIGN.md §3.4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common.config import (
+    FLConfig, INPUT_SHAPES, InputShape, ModelConfig, TrainConfig,
+)
+from repro.models.model import Model, build_model
+from repro.models.params import abstract_params, logical_axes
+from repro.sharding.rules import (
+    LONGCTX_SERVE_RULES, SERVE_RULES, TRAIN_RULES, ShardingRules, spec_for,
+)
+from repro.sharding.mesh_utils import fl_view
+
+
+# --------------------------------------------------------------------------
+# abstract inputs
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Abstract inputs for one (arch, input-shape) pair."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.modality in ("audio",):
+            # EnCodec tokens are discrete — the stub supplies token ids
+            tokens = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        elif cfg.modality == "vision":
+            # stub vision frontend supplies projected patch embeddings
+            tokens = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        else:
+            tokens = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return {"tokens": tokens,
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if shape.kind == "prefill":
+        if cfg.modality == "vision":
+            tokens = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        else:
+            tokens = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return {"tokens": tokens}
+    # decode: one new token against a cache of seq_len
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "positions": jax.ShapeDtypeStruct((b,), jnp.int32)}
+
+
+# --------------------------------------------------------------------------
+# sharding helpers
+# --------------------------------------------------------------------------
+
+def _is_axes(x):
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+
+
+def param_specs_tree(model: Model, rules: ShardingRules, mesh,
+                     include_head: bool = True, n_out=None):
+    ax = {"trunk": logical_axes(model.trunk_specs()),
+          "final": logical_axes(model.final_specs())}
+    shapes = {"trunk": jax.tree.map(lambda s: s.shape, model.trunk_specs(),
+                                    is_leaf=_is_spec),
+              "final": jax.tree.map(lambda s: s.shape, model.final_specs(),
+                                    is_leaf=_is_spec)}
+    specs = jax.tree.map(lambda a, sh: spec_for(a, rules, sh, mesh),
+                         ax, shapes, is_leaf=_is_axes)
+    if include_head:
+        hs = model.head_specs(n_out)
+        hax = logical_axes(hs)
+        hshapes = jax.tree.map(lambda s: s.shape, hs, is_leaf=_is_spec)
+        specs = {"backbone": specs,
+                 "head": jax.tree.map(
+                     lambda a, sh: spec_for(a, rules, sh, mesh),
+                     hax, hshapes, is_leaf=_is_axes)}
+    return specs
+
+
+def _is_spec(x):
+    from repro.models.params import ParamSpec
+    return isinstance(x, ParamSpec)
+
+
+def cache_specs_tree(model: Model, cache_abs, rules: ShardingRules, mesh):
+    """PartitionSpecs for a cache pytree from the model's cache_axes()."""
+    axes = model.cache_axes()
+
+    def one(a, leaf):
+        # `a` may have fewer entries than leaf.ndim (double-stacked leads)
+        assert len(a) == leaf.ndim, (a, leaf.shape)
+        return spec_for(a, rules, leaf.shape, mesh)
+    return jax.tree.map(one, axes, cache_abs, is_leaf=_is_axes)
+
+
+# --------------------------------------------------------------------------
+# serve steps
+# --------------------------------------------------------------------------
+
+def make_prefill_step(model: Model, cache_len: Optional[int] = None):
+    cfg = model.cfg
+
+    def prefill_step(backbone, head, tokens):
+        s = tokens.shape[1]
+        logits, aux, cache = model.forward_logits(
+            backbone, head, tokens, positions=jnp.arange(s), mode="prefill",
+            cache_len=cache_len or s + 1)
+        return logits[:, -1], cache
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(backbone, head, cache, tokens, positions):
+        logits, aux, new_cache = model.forward_logits(
+            backbone, head, tokens, positions=positions, mode="decode",
+            cache=cache)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, logits[:, -1], new_cache
+    return decode_step
+
+
+# --------------------------------------------------------------------------
+# abstract state builders (dry-run)
+# --------------------------------------------------------------------------
+
+def abstract_serve_state(model: Model, shape: InputShape, dtype=jnp.bfloat16):
+    backbone = {"trunk": abstract_params(model.trunk_specs(), dtype),
+                "final": abstract_params(model.final_specs(), dtype)}
+    head = abstract_params(model.head_specs(), dtype)
+    cache = None
+    if shape.kind == "decode":
+        cache = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                     jnp.bfloat16))
+    return backbone, head, cache
+
+
+def serve_rules_for(shape: InputShape) -> ShardingRules:
+    return LONGCTX_SERVE_RULES if shape.name == "long_500k" else SERVE_RULES

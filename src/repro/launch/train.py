@@ -1,0 +1,98 @@
+"""Real training driver (CPU-scale meshes; the production mesh path is
+exercised by dryrun.py on this container).
+
+Runs HOTA-FedGradNorm training of any --arch's reduced (smoke) config on a
+debug mesh using host devices, with checkpointing and metric logging:
+
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \\
+    PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \\
+        --steps 50 --mesh 2,2,2
+
+(mesh = clusters,clients,model). For the paper's own experiment use
+examples/paper_reproduction.py, which runs the faithful C=10/N=3 simulator.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import save_checkpoint
+from repro.common.config import FLConfig, TrainConfig
+from repro.configs import ALIASES, get_smoke_config
+from repro.core.hota_step import make_hota_train_step
+from repro.data.lm import synthetic_lm_batches
+from repro.models.model import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-3b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch-per-client", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--mesh", default="2,2,2",
+                    help="clusters,clients,model (needs that many devices)")
+    ap.add_argument("--weighting", default="fedgradnorm",
+                    choices=["fedgradnorm", "equal"])
+    ap.add_argument("--ota-mode", default="scatter", choices=["scatter", "naive"])
+    ap.add_argument("--no-ota", action="store_true")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    shape = tuple(int(x) for x in args.mesh.split(","))
+    n_dev = int(np.prod(shape))
+    devs = np.array(jax.devices())
+    assert devs.size >= n_dev, (
+        f"need {n_dev} devices; set "
+        f'XLA_FLAGS="--xla_force_host_platform_device_count={n_dev}"')
+    mesh = Mesh(devs[:n_dev].reshape(shape), ("cluster", "client", "model"))
+
+    cfg = get_smoke_config(ALIASES.get(args.arch, args.arch))
+    model = build_model(cfg)
+    fl = FLConfig(n_clusters=shape[0], n_clients=shape[1],
+                  weighting=args.weighting, ota=not args.no_ota,
+                  ota_mode=args.ota_mode, noise_std=0.1)
+    tcfg = TrainConfig(lr=args.lr)
+
+    init_fn, step_fn, state_specs, batch_spec = make_hota_train_step(
+        model, mesh, fl, tcfg, loss_kind="lm")
+    state = init_fn(jax.random.PRNGKey(args.seed))
+    state = jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+        state, state_specs, is_leaf=lambda x: isinstance(x, P))
+
+    n_clients_total = shape[0] * shape[1]
+    batches = synthetic_lm_batches(
+        cfg.vocab_size, n_clients_total * args.batch_per_client,
+        args.seq_len, seed=args.seed)
+    jstep = jax.jit(step_fn)
+
+    t0 = time.time()
+    for step in range(args.steps):
+        toks, labs = next(batches)
+        toks = jax.device_put(jnp.asarray(toks), NamedSharding(mesh, batch_spec[0]))
+        labs = jax.device_put(jnp.asarray(labs), NamedSharding(mesh, batch_spec[1]))
+        state, m = jstep(state, toks, labs, jax.random.PRNGKey(args.seed + 1))
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {float(m['loss']):.4f} "
+                  f"p [{float(m['p_min']):.3f},{float(m['p_max']):.3f}] "
+                  f"fgrad {float(m['fgrad']):.4f} "
+                  f"({(time.time()-t0)/(step+1):.2f}s/step)", flush=True)
+    if args.ckpt_dir:
+        path = save_checkpoint(args.ckpt_dir, args.steps,
+                               jax.tree.map(np.asarray, state.omega),
+                               {"arch": args.arch})
+        print("checkpoint:", path)
+
+
+if __name__ == "__main__":
+    main()

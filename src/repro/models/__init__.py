@@ -1,0 +1,11 @@
+from repro.models.model import Model, build_model, lm_loss, cls_loss, PAPER_MLP_DIMS
+from repro.models.params import (
+    ParamSpec, init_params, logical_axes, abstract_params, param_count,
+    spec_shapes,
+)
+
+__all__ = [
+    "Model", "build_model", "lm_loss", "cls_loss", "PAPER_MLP_DIMS",
+    "ParamSpec", "init_params", "logical_axes", "abstract_params",
+    "param_count", "spec_shapes",
+]

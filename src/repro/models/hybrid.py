@@ -1,0 +1,179 @@
+"""Zamba2-style hybrid backbone: Mamba2 layers + one *shared* attention block.
+
+The defining Zamba trick: a single transformer block (attention + MLP) whose
+weights are reused at several depths, interleaved into a Mamba backbone.
+We apply the shared block after every ``hybrid.attn_every`` Mamba layers.
+
+Layer layout for n_layers=38, attn_every=6:
+    [6 mamba] A [6 mamba] A [6 mamba] A [6 mamba] A [6 mamba] A [6 mamba] A [2 mamba]
+(A = the shared attention block, same parameters each time, 6 applications.)
+
+Implemented as a python loop over segments — each segment is a lax.scan
+over a *static slice* of the stacked Mamba params, so the HLO stays compact
+(7 scans + 6 shared-block calls).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models import layers as L
+from repro.models.mamba2 import (
+    init_mamba_cache, mamba2_apply, mamba2_specs, mamba_cache_axes,
+)
+from repro.models.params import ParamSpec
+from repro.models.transformer import (
+    _remat, attn_specs, attn_apply, mlp_specs, mlp_block_apply, _stack, _cdt,
+)
+
+
+def segments(cfg: ModelConfig) -> List[int]:
+    k = cfg.hybrid.attn_every
+    n = cfg.n_layers
+    segs = [k] * (n // k)
+    if n % k:
+        segs.append(n % k)
+    return segs
+
+
+def n_shared_applications(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.hybrid.attn_every
+
+
+def hybrid_trunk_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    shared_cfg = _shared_attn_cfg(cfg)
+    return {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                           "embed"),
+        "mamba": _stack(mamba2_specs(cfg), cfg.n_layers),
+        "shared_attn": attn_specs(shared_cfg),
+        "shared_mlp": mlp_specs(shared_cfg),
+    }
+
+
+def _shared_attn_cfg(cfg: ModelConfig) -> ModelConfig:
+    h = cfg.hybrid
+    return cfg.replace(n_heads=h.shared_attn_n_heads,
+                       n_kv_heads=h.shared_attn_n_kv, moe=None)
+
+
+def hybrid_trunk_apply(
+    params, tokens, cfg: ModelConfig, *,
+    positions, mode: str = "train", cache=None, cache_len=None,
+    param_hook=None,
+):
+    """Returns (hidden, aux, new_cache). Cache layout:
+    {"mamba": stacked over all n_layers, "attn": list of per-application KV}."""
+    shared_cfg = _shared_attn_cfg(cfg)
+    embed = params["embed"]
+    if param_hook is not None:
+        embed = param_hook(embed, "embed")
+    if jnp.issubdtype(tokens.dtype, jnp.integer):
+        x = embed.astype(_cdt(cfg))[tokens]
+    else:
+        x = tokens.astype(_cdt(cfg))
+
+    def mamba_fn(lp, i, h, c):
+        if param_hook is not None:
+            lp = param_hook(lp, "mamba", i)
+        h2, c2 = mamba2_apply(lp, h, cfg, mode=mode, cache=c)
+        return h2, c2
+
+    mamba_fn = _remat(mamba_fn, cfg)
+
+    # The shared block's weights are ONE parameter set used at several
+    # depths: gather them exactly once so the paper's per-entry channel is
+    # drawn once per iteration and autodiff sums all use-site cotangents
+    # BEFORE the OTA reduction (fidelity to eq. (8)).
+    shared_attn_p, shared_mlp_p = params["shared_attn"], params["shared_mlp"]
+    if param_hook is not None:
+        shared_attn_p = param_hook(shared_attn_p, "shared_attn")
+        shared_mlp_p = param_hook(shared_mlp_p, "shared_mlp")
+
+    def shared_fn(h, c):
+        h2, c2 = attn_apply(shared_attn_p, h, shared_cfg,
+                            positions=positions, window=cfg.sliding_window,
+                            theta=cfg.rope_theta, mode=mode, cache=c,
+                            cache_len=cache_len)
+        h2 = mlp_block_apply(shared_mlp_p, h2, shared_cfg)
+        return h2, c2
+
+    shared_fn = _remat(shared_fn, cfg)
+
+    segs = segments(cfg)
+    n_apps = n_shared_applications(cfg)
+    new_mamba_caches = []
+    new_attn_caches = []
+    start = 0
+    app = 0
+    for si, seg in enumerate(segs):
+        lp_seg = jax.tree.map(lambda a: a[start:start + seg], params["mamba"])
+
+        seg_idx = jnp.arange(start, start + seg)
+        if mode == "train":
+            def body(h, xs):
+                lp, i = xs
+                h2, _ = mamba_fn(lp, i, h, None)
+                return h2, None
+            x, _ = jax.lax.scan(body, x, (lp_seg, seg_idx))
+        elif mode == "prefill":
+            def body(h, xs):
+                lp, i = xs
+                h2, c2 = mamba_fn(lp, i, h, None)
+                return h2, c2
+            x, nc = jax.lax.scan(body, x, (lp_seg, seg_idx))
+            new_mamba_caches.append(nc)
+        else:
+            c_seg = jax.tree.map(lambda a: a[start:start + seg], cache["mamba"])
+
+            def body(h, xs):
+                lp, c, i = xs
+                h2, c2 = mamba_fn(lp, i, h, c)
+                return h2, c2
+            x, nc = jax.lax.scan(body, x, (lp_seg, c_seg, seg_idx))
+            new_mamba_caches.append(nc)
+
+        start += seg
+        if app < n_apps and start >= (app + 1) * cfg.hybrid.attn_every:
+            c_attn = cache["attn"][app] if mode == "decode" else None
+            x, nc_attn = shared_fn(x, c_attn)
+            if mode in ("prefill", "decode"):
+                new_attn_caches.append(nc_attn)
+            app += 1
+
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        mamba_cache = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *new_mamba_caches)
+        new_cache = {"mamba": mamba_cache, "attn": new_attn_caches}
+    return x, aux, new_cache
+
+
+def init_hybrid_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                      dtype=jnp.bfloat16, window: Optional[int] = None):
+    shared_cfg = _shared_attn_cfg(cfg)
+    win = cfg.sliding_window
+    cap = min(win, cache_len) if win is not None else cache_len
+    kv, hd = shared_cfg.n_kv_heads, shared_cfg.resolved_head_dim
+    one_mamba = init_mamba_cache(cfg, batch, dtype)
+    mamba = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape),
+        one_mamba)
+    attn = [{
+        "k": jnp.zeros((batch, cap, kv, hd), dtype),
+        "v": jnp.zeros((batch, cap, kv, hd), dtype),
+        "pos": jnp.full((batch, cap), -1, jnp.int32),
+    } for _ in range(n_shared_applications(cfg))]
+    return {"mamba": mamba, "attn": attn}
+
+
+def hybrid_cache_axes(cfg: ModelConfig):
+    m = {k: ("layer",) + v for k, v in mamba_cache_axes().items()}
+    a = {"k": ("batch", "cache_seq", "kv_heads", "head_dim"),
+         "v": ("batch", "cache_seq", "kv_heads", "head_dim"),
+         "pos": ("batch", "cache_seq")}
+    return {"mamba": m, "attn": [a for _ in range(n_shared_applications(cfg))]}

@@ -1,0 +1,397 @@
+"""Shared neural-net layers: RMSNorm, RoPE, embeddings, MLP, GQA attention.
+
+Attention comes in three implementations (ModelConfig.attn_impl):
+
+* ``naive``   — full (Sq, Skv) score matrix. Reference/oracle; fine for
+                short sequences and smoke tests.
+* ``blocked`` — double-scan online-softmax (flash-style) in pure JAX:
+                outer scan over query blocks, inner scan over KV blocks.
+                Autodiff-able (training path) and memory-bounded by
+                (block_q x block_kv). For full-causal attention the inner
+                scan covers the whole rectangle with masking (the masked
+                upper triangle is wasted compute — see EXPERIMENTS.md §Perf;
+                the Pallas kernel removes it on real TPUs). For
+                sliding-window attention the inner loop reads only a
+                dynamic-sliced KV *band* of static width, so SWA pays no
+                rectangle waste.
+* ``pallas``  — repro.kernels.flash_attention (serving hot path).
+
+All attention functions are GQA-native: q heads are grouped over KV heads.
+Shapes: q (B, Sq, H, D); k, v (B, Skv, KV, D).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# normalization / embeddings / mlp
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (D/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mlp_apply(params, x: jax.Array, act: str = "silu") -> jax.Array:
+    """SwiGLU (silu) or plain GELU MLP."""
+    if act == "silu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# --------------------------------------------------------------------------
+# masking helpers
+# --------------------------------------------------------------------------
+
+def _mask_block(pos_q: jax.Array, pos_kv: jax.Array, window: Optional[int]) -> jax.Array:
+    """Causal (+ optional sliding window) mask, True = attend."""
+    diff = pos_q[:, None] - pos_kv[None, :]
+    mask = diff >= 0
+    if window is not None:
+        mask &= diff < window
+    return mask
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array, scale: float) -> jax.Array:
+    """q (B,Sq,KV,G,D), k (B,Skv,KV,D) -> scores (B,KV,G,Sq,Skv) in fp32."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def _gqa_pv(p: jax.Array, v: jax.Array) -> jax.Array:
+    """p (B,KV,G,Sq,Skv) x v (B,Skv,KV,D) -> (B,Sq,KV,G,D)."""
+    return jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(p.dtype))
+
+
+def _split_gqa(q: jax.Array, n_kv: int) -> jax.Array:
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def _merge_gqa(x: jax.Array) -> jax.Array:
+    b, s, kv, g, d = x.shape
+    return x.reshape(b, s, kv * g, d)
+
+
+# --------------------------------------------------------------------------
+# naive attention (oracle)
+# --------------------------------------------------------------------------
+
+def naive_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, pos_q: jax.Array, pos_kv: jax.Array,
+    window: Optional[int] = None,
+    kv_valid: Optional[jax.Array] = None,
+) -> jax.Array:
+    n_kv = k.shape[2]
+    qg = _split_gqa(q, n_kv)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = _gqa_scores(qg, k, scale)                     # (B,KV,G,Sq,Skv)
+    mask = _mask_block(pos_q, pos_kv, window)              # (Sq,Skv)
+    if kv_valid is not None:
+        mask = mask & kv_valid[None, :]
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return _merge_gqa(_gqa_pv(p, v))
+
+
+# --------------------------------------------------------------------------
+# blocked online-softmax attention (training / prefill workhorse)
+# --------------------------------------------------------------------------
+
+def _online_block(carry, q_blk, k_blk, v_blk, mask_blk, scale):
+    """One online-softmax update. carry = (m, l, acc) for this q block."""
+    m, l, acc = carry
+    s = _gqa_scores(q_blk, k_blk, scale)                   # (B,KV,G,bq,bkv) fp32
+    s = jnp.where(mask_blk[None, None, None], s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    # guard fully-masked rows: keep m finite
+    m_new = jnp.maximum(m_new, -1e30)
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l_new = l * alpha + jnp.sum(p, axis=-1)
+    acc_new = acc * alpha[..., None] + jnp.einsum(
+        "bkgqs,bskd->bkgqd", p, v_blk.astype(jnp.float32))
+    return (m_new, l_new, acc_new)
+
+
+def blocked_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, pos_q: jax.Array, pos_kv: jax.Array,
+    window: Optional[int] = None,
+    block_q: int = 512, block_kv: int = 1024,
+    kv_valid: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Flash-style attention. If ``window`` is set, uses the banded path
+    (static-width KV band per q block — no rectangle waste)."""
+    b, sq, h, d = q.shape
+    skv, n_kv = k.shape[1], k.shape[2]
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    if sq % block_q != 0 or skv % block_kv != 0:
+        # fall back to naive for ragged shapes (smoke tests etc.)
+        return naive_attention(q, k, v, pos_q=pos_q, pos_kv=pos_kv,
+                               window=window, kv_valid=kv_valid)
+    scale = 1.0 / math.sqrt(d)
+    g = h // n_kv
+    nq = sq // block_q
+
+    qg = _split_gqa(q, n_kv)                               # (B,Sq,KV,G,D)
+    qg = qg.reshape(b, nq, block_q, n_kv, g, d)
+    pos_qb = pos_q.reshape(nq, block_q)
+
+    use_band = window is not None and window + block_q <= skv
+    if use_band:
+        band = block_kv * -(-(window + block_q) // block_kv)   # round up
+        band = min(band, skv)
+
+        def per_q_block(q_blk, pos_blk, blk_idx):
+            # static-width band ending at this q block's last kv position
+            q_start = blk_idx * block_q
+            start = jnp.clip(q_start + block_q - band, 0, skv - band)
+            k_band = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            v_band = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            pos_band = jax.lax.dynamic_slice_in_dim(pos_kv, start, band, axis=0)
+            valid = (None if kv_valid is None else
+                     jax.lax.dynamic_slice_in_dim(kv_valid, start, band, axis=0))
+            return _scan_kv(q_blk, k_band, v_band, pos_blk, pos_band, valid,
+                            window, block_kv, scale)
+
+        out = jax.lax.map(
+            lambda args: per_q_block(*args),
+            (qg.transpose(1, 0, 2, 3, 4, 5), pos_qb, jnp.arange(nq)),
+        )                                                   # (nq, B, bq, KV, G, D)
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, n_kv, g, d)
+        return _merge_gqa(out).astype(q.dtype)
+
+    def per_q_block(args):
+        q_blk, pos_blk = args
+        return _scan_kv(q_blk, k, v, pos_blk, pos_kv, kv_valid,
+                        window, block_kv, scale)
+
+    out = jax.lax.map(per_q_block, (qg.transpose(1, 0, 2, 3, 4, 5), pos_qb))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, n_kv, g, d)
+    return _merge_gqa(out).astype(q.dtype)
+
+
+def _scan_kv(q_blk, k_seq, v_seq, pos_blk, pos_kv_seq, kv_valid,
+             window, block_kv, scale):
+    """Inner online-softmax scan over KV blocks for one q block.
+
+    q_blk: (B, bq, KV, G, D); k_seq/v_seq: (B, Skv', KV, D).
+    Returns (B, bq, KV, G, D) float32 accumulator normalized by l.
+    """
+    b, bq, n_kv, g, d = q_blk.shape
+    skv = k_seq.shape[1]
+    nkv_blocks = skv // block_kv
+    kb = k_seq.reshape(b, nkv_blocks, block_kv, n_kv, d)
+    vb = v_seq.reshape(b, nkv_blocks, block_kv, n_kv, d)
+    pos_b = pos_kv_seq.reshape(nkv_blocks, block_kv)
+    valid_b = (kv_valid.reshape(nkv_blocks, block_kv)
+               if kv_valid is not None else None)
+
+    m0 = jnp.full((b, n_kv, g, bq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, n_kv, g, bq), jnp.float32)
+    a0 = jnp.zeros((b, n_kv, g, bq, d), jnp.float32)
+    qx = q_blk.transpose(0, 2, 3, 1, 4)  # unused view; keep layout simple
+
+    # checkpoint: the backward recomputes per-block scores/probabilities
+    # instead of saving the (bq x bkv) prob tensors for every block pair —
+    # that residual is what would otherwise reintroduce O(S²) memory.
+    @jax.checkpoint
+    def body(carry, xs):
+        if valid_b is not None:
+            k_i, v_i, pos_i, val_i = xs
+        else:
+            k_i, v_i, pos_i = xs
+            val_i = None
+        mask = _mask_block(pos_blk, pos_i, window)
+        if val_i is not None:
+            mask = mask & val_i[None, :]
+        new = _online_block(carry, q_blk, k_i, v_i, mask, scale)
+        return new, None
+
+    xs = (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4), pos_b)
+    if valid_b is not None:
+        xs = xs + (valid_b,)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), xs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]            # (B,KV,G,bq,D)
+    return out.transpose(0, 3, 1, 2, 4)                     # (B,bq,KV,G,D)
+
+
+# --------------------------------------------------------------------------
+# folded causal attention: exact-triangle compute with static trip counts
+# --------------------------------------------------------------------------
+
+def blocked_attention_folded(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, pos_q: jax.Array, pos_kv: jax.Array, block: int = 512,
+) -> jax.Array:
+    """Causal blocked attention WITHOUT the rectangle waste.
+
+    The plain blocked path scans every (q-block, kv-block) pair and masks
+    the upper triangle — half the MXU work is thrown away. Pairing q block
+    ``p`` with q block ``nq-1-p`` makes each pair's causal KV need exactly
+    ``(p+1) + (nq-p) = nq+1`` blocks — a *static* trip count. Each scan
+    iteration computes ONE bq x bkv block for whichever member of the pair
+    it belongs to, so total compute is the exact lower triangle
+    (~2x fewer FLOPs and ~2x less score HBM traffic at long S; measured in
+    EXPERIMENTS.md §Perf P1).
+
+    Requires sq == skv, divisible by ``block``, and an even block count;
+    the caller falls back to ``blocked_attention`` otherwise.
+    """
+    b, sq, h, d = q.shape
+    skv, n_kv = k.shape[1], k.shape[2]
+    assert sq == skv and sq % block == 0
+    nq = sq // block
+    assert nq % 2 == 0, nq
+    g = h // n_kv
+    scale = 1.0 / math.sqrt(d)
+
+    qg = _split_gqa(q, n_kv).reshape(b, nq, block, n_kv, g, d)
+    pos_qb = pos_q.reshape(nq, block)
+    kb = k.reshape(b, nq, block, n_kv, d)
+    vb = v.reshape(b, nq, block, n_kv, d)
+    pos_kb = pos_kv.reshape(nq, block)
+
+    n_pairs = nq // 2
+
+    def per_pair(args):
+        p_idx = args
+        lo, hi = p_idx, nq - 1 - p_idx
+        q_lo = jax.lax.dynamic_index_in_dim(qg, lo, 1, keepdims=False)
+        q_hi = jax.lax.dynamic_index_in_dim(qg, hi, 1, keepdims=False)
+        pos_lo = jax.lax.dynamic_index_in_dim(pos_qb, lo, 0, keepdims=False)
+        pos_hi = jax.lax.dynamic_index_in_dim(pos_qb, hi, 0, keepdims=False)
+
+        def init():
+            m = jnp.full((b, n_kv, g, block), -jnp.inf, jnp.float32)
+            l = jnp.zeros((b, n_kv, g, block), jnp.float32)
+            a = jnp.zeros((b, n_kv, g, block, d), jnp.float32)
+            return (m, l, a)
+
+        @jax.checkpoint
+        def body(carry, j):
+            (c_lo, c_hi) = carry
+            use_lo = j <= p_idx
+            kv_idx = jnp.where(use_lo, j, j - p_idx - 1)
+            k_j = jax.lax.dynamic_index_in_dim(kb, kv_idx, 1, keepdims=False)
+            v_j = jax.lax.dynamic_index_in_dim(vb, kv_idx, 1, keepdims=False)
+            pos_j = jax.lax.dynamic_index_in_dim(pos_kb, kv_idx, 0,
+                                                 keepdims=False)
+            q_blk = jnp.where(use_lo, q_lo, q_hi)
+            pos_blk = jnp.where(use_lo, pos_lo, pos_hi)
+            mask = _mask_block(pos_blk, pos_j, None)
+            cur = jax.tree.map(
+                lambda a_, b_: jnp.where(use_lo, a_, b_), c_lo, c_hi)
+            new = _online_block(cur, q_blk, k_j, v_j, mask, scale)
+            c_lo = jax.tree.map(
+                lambda n_, o_: jnp.where(use_lo, n_, o_), new, c_lo)
+            c_hi = jax.tree.map(
+                lambda n_, o_: jnp.where(use_lo, o_, n_), new, c_hi)
+            return (c_lo, c_hi), None
+
+        (c_lo, c_hi), _ = jax.lax.scan(body, (init(), init()),
+                                       jnp.arange(nq + 1))
+
+        def fin(c):
+            m, l, acc = c
+            return (acc / jnp.maximum(l, 1e-30)[..., None]).transpose(
+                0, 3, 1, 2, 4)                       # (B,block,KV,G,D)
+        return fin(c_lo), fin(c_hi)
+
+    out_lo, out_hi = jax.lax.map(per_pair, jnp.arange(n_pairs))
+    # out_lo: (n_pairs, B, block, KV, G, D) for q blocks 0..n_pairs-1
+    # out_hi: same for q blocks nq-1 .. n_pairs (descending)
+    out = jnp.concatenate([out_lo, out_hi[::-1]], axis=0)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, n_kv, g, d)
+    return _merge_gqa(out).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# decode attention (single query position against a cache)
+# --------------------------------------------------------------------------
+
+def decode_attention(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+    *, pos_q: jax.Array, pos_kv: jax.Array,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """q: (B,1,H,D); caches (B,L,KV,D); pos_kv (B,L) with -1 = empty slot.
+
+    Works with ring-buffer caches: masking is purely positional, so slot
+    order is irrelevant.
+    """
+    n_kv = k_cache.shape[2]
+    qg = _split_gqa(q, n_kv)                                # (B,1,KV,G,D)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqkgd,blkd->bkgql", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale  # (B,KV,G,1,L)
+    diff = pos_q[:, None] - pos_kv                          # (B, L)
+    mask = (pos_kv >= 0) & (diff >= 0)
+    if window is not None:
+        mask &= diff < window
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgql,blkd->bqkgd", p, v_cache.astype(p.dtype))
+    return _merge_gqa(out).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention entry point used by the blocks
+# --------------------------------------------------------------------------
+
+def attention(
+    q, k, v, *, pos_q, pos_kv, impl: str = "blocked",
+    window: Optional[int] = None, block_q: int = 512, block_kv: int = 1024,
+    kv_valid=None,
+):
+    if impl == "naive":
+        return naive_attention(q, k, v, pos_q=pos_q, pos_kv=pos_kv,
+                               window=window, kv_valid=kv_valid)
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as flash_ops
+        return flash_ops.flash_attention(q, k, v, pos_q=pos_q, pos_kv=pos_kv,
+                                         window=window)
+    if impl == "folded":
+        sq, skv = q.shape[1], k.shape[1]
+        nq = sq // min(block_q, sq)
+        if (window is None and kv_valid is None and sq == skv
+                and sq % block_q == 0 and nq % 2 == 0):
+            return blocked_attention_folded(q, k, v, pos_q=pos_q,
+                                            pos_kv=pos_kv, block=block_q)
+        # fall through to the plain blocked path for unsupported shapes
+    return blocked_attention(q, k, v, pos_q=pos_q, pos_kv=pos_kv,
+                             window=window, block_q=block_q,
+                             block_kv=block_kv, kv_valid=kv_valid)

@@ -1,0 +1,218 @@
+"""Mamba2 block in SSD (state-space duality) chunked form.
+
+Follows the Mamba2 paper's SSD algorithm: split the sequence into chunks;
+within a chunk the SSM output is a masked quadratic form (MXU-friendly);
+states are passed between chunks with a (compact) sequential scan over
+chunks. Decode is the classic O(1) recurrent update.
+
+Layout: d_inner = expand * d_model, heads H = d_inner / head_dim P,
+scalar A per head, B/C shared across heads in ``n_groups`` groups (we use
+n_groups=1, Mamba2's default "multi-value attention" analogue).
+
+State cache for decode:
+    {"ssm": (B, H, P, N), "conv": (B, d_conv-1, d_in + 2*N_groups*N)}
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models import layers as L
+from repro.models.params import ParamSpec
+
+
+def _dims(cfg: ModelConfig):
+    scfg = cfg.ssm
+    d_in = scfg.expand * cfg.d_model
+    n_heads = d_in // scfg.head_dim
+    conv_dim = d_in + 2 * scfg.n_groups * scfg.d_state
+    return d_in, n_heads, conv_dim
+
+
+def mamba2_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    scfg = cfg.ssm
+    d = cfg.d_model
+    d_in, n_heads, conv_dim = _dims(cfg)
+    n, gr = scfg.d_state, scfg.n_groups
+    return {
+        "norm": ParamSpec((d,), ("embed",), "zeros"),
+        # fused input projection: [z, x, B, C, dt]
+        "w_in": ParamSpec((d, 2 * d_in + 2 * gr * n + n_heads), ("embed", "mlp")),
+        "conv_w": ParamSpec((scfg.d_conv, conv_dim), (None, "mlp"), scale=0.1),
+        "conv_b": ParamSpec((conv_dim,), ("mlp",), "zeros"),
+        "a_log": ParamSpec((n_heads,), ("heads",), "zeros"),
+        "d_skip": ParamSpec((n_heads,), ("heads",), "ones"),
+        "dt_bias": ParamSpec((n_heads,), ("heads",), "zeros"),
+        "out_norm": ParamSpec((d_in,), ("mlp",), "zeros"),
+        "w_out": ParamSpec((d_in, d), ("mlp", "embed")),
+    }
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    scfg = cfg.ssm
+    d_in, n_heads, _ = _dims(cfg)
+    gn = scfg.n_groups * scfg.d_state
+    z, xbc_dt = jnp.split(proj, [d_in], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_in + 2 * gn], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv along seq. xbc: (B,S,C). conv_w: (K,C)."""
+    k = conv_w.shape[0]
+    if conv_state is not None:
+        xbc_pad = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    else:
+        xbc_pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    new_state = xbc_pad[:, -(k - 1):] if k > 1 else None
+    out = jnp.zeros_like(xbc)
+    for i in range(k):
+        out = out + xbc_pad[:, i:i + xbc.shape[1]] * conv_w[i]
+    return jax.nn.silu(out + conv_b.astype(xbc.dtype)), new_state
+
+
+def _segsum(log_a):
+    """Stable segment-sum: out[i,j] = sum_{j<m<=i} log_a[m], -inf for j>i.
+    log_a: (..., L). Returns (..., L, L)."""
+    L_ = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    idx = jnp.arange(L_)
+    mask = idx[:, None] >= idx[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD forward.
+
+    x: (B,S,H,P) values; dt: (B,S,H) positive step sizes; A: (H,) negative;
+    B, C: (B,S,G,N) with G groups broadcast over heads.
+    Returns y (B,S,H,P) and final state (B,H,P,N).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert h % g == 0
+    rep = h // g
+    if s % chunk != 0:
+        chunk = s
+    nc = s // chunk
+
+    xr = x.reshape(b, nc, chunk, h, p)
+    dtr = dt.reshape(b, nc, chunk, h)
+    Br = jnp.repeat(B.reshape(b, nc, chunk, g, n), rep, axis=3)   # (b,nc,l,h,n)
+    Cr = jnp.repeat(C.reshape(b, nc, chunk, g, n), rep, axis=3)
+
+    dA = dtr * A[None, None, None, :]                     # (b,nc,l,h) negative
+    dA_cum = jnp.cumsum(dA, axis=2)
+
+    # --- intra-chunk (diagonal blocks): masked quadratic form
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))     # (b,nc,h,l,l)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Cr, Br)     # (b,nc,h,l,l)
+    y_diag = jnp.einsum("bchls,bcsh,bcshp->bclhp",
+                        scores * Lmat, dtr, xr)
+
+    # --- chunk states: state_c = sum_l exp(dA_cum_end - dA_cum_l) * dt*B*x
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (b,nc,l,h)
+    states = jnp.einsum("bclhn,bclh,bclh,bclhp->bchpn",
+                        Br, decay_to_end, dtr, xr)         # (b,nc,h,p,n)
+
+    # --- inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])             # (b,nc,h)
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry                                  # emit state *before* this chunk
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # (b,nc,h,p,n)
+
+    # --- contribution of the carried-in state to each position
+    state_decay = jnp.exp(dA_cum)                          # (b,nc,l,h)
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp",
+                       Cr, prev_states.astype(Cr.dtype), state_decay)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final_state
+
+
+def mamba2_apply(
+    p, x: jax.Array, cfg: ModelConfig, *,
+    mode: str = "train",
+    cache: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x: (B,S,d). Decode: S=1 with cache {"ssm","conv"}."""
+    scfg = cfg.ssm
+    d_in, n_heads, conv_dim = _dims(cfg)
+    gr, n = scfg.n_groups, scfg.d_state
+    ph = scfg.head_dim
+    h = L.rms_norm(x, p["norm"], 1e-6)
+    proj = h @ p["w_in"].astype(h.dtype)
+    z, xbc, dt = _split_proj(proj, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    if mode == "decode":
+        xbc_act, conv_tail = _causal_conv(xbc, p["conv_w"].astype(h.dtype),
+                                          p["conv_b"], cache["conv"])
+        xs, B_, C_ = jnp.split(xbc_act, [d_in, d_in + gr * n], axis=-1)
+        xs = xs.reshape(-1, 1, n_heads, ph)[:, 0]          # (B,H,P)
+        B_ = B_.reshape(-1, gr, n)
+        C_ = C_.reshape(-1, gr, n)
+        rep = n_heads // gr
+        Bh = jnp.repeat(B_, rep, axis=1)                   # (B,H,N)
+        Ch = jnp.repeat(C_, rep, axis=1)
+        dt0 = dt[:, 0]                                     # (B,H)
+        decay = jnp.exp(dt0 * A[None, :])                  # (B,H)
+        ssm = cache["ssm"].astype(jnp.float32)
+        ssm = ssm * decay[..., None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dt0, xs.astype(jnp.float32), Bh.astype(jnp.float32))
+        y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(jnp.float32), ssm)
+        y = y + p["d_skip"][None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(-1, 1, d_in).astype(h.dtype)
+        new_cache = {"ssm": ssm.astype(cache["ssm"].dtype), "conv": conv_tail}
+    else:
+        xbc_act, conv_tail = _causal_conv(xbc, p["conv_w"].astype(h.dtype),
+                                          p["conv_b"])
+        b, s, _ = xbc_act.shape
+        xs, B_, C_ = jnp.split(xbc_act, [d_in, d_in + gr * n], axis=-1)
+        xs = xs.reshape(b, s, n_heads, ph)
+        B_ = B_.reshape(b, s, gr, n)
+        C_ = C_.reshape(b, s, gr, n)
+        y, final_state = ssd_chunked(xs.astype(jnp.float32), dt, A,
+                                     B_.astype(jnp.float32),
+                                     C_.astype(jnp.float32), scfg.chunk_size)
+        y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(b, s, d_in).astype(h.dtype)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"ssm": final_state.astype(jnp.bfloat16),
+                         "conv": conv_tail}
+
+    y = y * jax.nn.silu(z)
+    y = L.rms_norm(y, p["out_norm"], 1e-6)
+    out = y @ p["w_out"].astype(h.dtype)
+    return x + out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    scfg = cfg.ssm
+    d_in, n_heads, conv_dim = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, n_heads, scfg.head_dim, scfg.d_state), dtype),
+        "conv": jnp.zeros((batch, scfg.d_conv - 1, conv_dim), dtype),
+    }
+
+
+def mamba_cache_axes():
+    return {
+        "ssm": ("batch", "heads", "head_dim", "state"),
+        "conv": ("batch", "conv", "mlp"),
+    }

@@ -1,0 +1,213 @@
+"""Model facade: one interface over every backbone family.
+
+The PFL split (paper eq. (2)) is structural: every model is
+
+    trunk (shared, scan-stacked)  ->  final (the "last shared layer" ω̃,
+    kept separate because FedGradNorm differentiates F w.r.t. exactly this
+    piece)  ->  head (personalized, per client).
+
+Families: "mlp" (the paper's Table-I network), "dense" (covers GQA/RoPE/
+SWA/local:global and, via cfg.moe, the MoE archs; via cfg.modality, the
+audio/VLM backbones), "hybrid" (Zamba2), "xlstm", "ssm" (pure Mamba2
+stack).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models import layers as L
+from repro.models.params import ParamSpec
+
+# paper Table I: shared network FC dims (input 256 -> ... -> 256 out)
+PAPER_MLP_DIMS = (256, 512, 1024, 2048, 512, 256)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---------------- specs ----------------
+    def trunk_specs(self):
+        cfg = self.cfg
+        if cfg.family == "mlp":
+            dims = PAPER_MLP_DIMS
+            return {
+                f"fc{i}": {
+                    "w": ParamSpec((dims[i], dims[i + 1]), ("embed", "mlp")),
+                    "b": ParamSpec((dims[i + 1],), ("mlp",), "zeros"),
+                }
+                for i in range(len(dims) - 2)   # all but the last FC
+            }
+        if cfg.family in ("dense", "moe"):
+            from repro.models.transformer import dense_trunk_specs
+            return dense_trunk_specs(cfg)
+        if cfg.family == "hybrid":
+            from repro.models.hybrid import hybrid_trunk_specs
+            return hybrid_trunk_specs(cfg)
+        if cfg.family == "xlstm":
+            from repro.models.xlstm import xlstm_trunk_specs
+            return xlstm_trunk_specs(cfg)
+        if cfg.family == "ssm":
+            from repro.models.mamba2 import mamba2_specs
+            from repro.models.transformer import _stack
+            return {
+                "embed": ParamSpec((cfg.vocab_size, cfg.d_model),
+                                   ("vocab", "embed"), "embed"),
+                "layers": _stack(mamba2_specs(cfg), cfg.n_layers),
+            }
+        raise ValueError(cfg.family)
+
+    def final_specs(self):
+        cfg = self.cfg
+        if cfg.family == "mlp":
+            dims = PAPER_MLP_DIMS
+            return {
+                "w": ParamSpec((dims[-2], dims[-1]), ("embed", "mlp")),
+                "b": ParamSpec((dims[-1],), ("mlp",), "zeros"),
+            }
+        return {"norm": ParamSpec((cfg.d_model,), ("embed",), "zeros")}
+
+    def head_specs(self, n_out: Optional[int] = None):
+        cfg = self.cfg
+        if cfg.family == "mlp":
+            n_out = n_out or 8
+            return {
+                "w": ParamSpec((PAPER_MLP_DIMS[-1], n_out), ("embed", "vocab")),
+                "b": ParamSpec((n_out,), ("vocab",), "zeros"),
+            }
+        n_out = n_out or cfg.vocab_size
+        return {"w": ParamSpec((cfg.d_model, n_out), ("embed", "vocab"))}
+
+    # ---------------- apply ----------------
+    def trunk_apply(self, params, inputs, *, positions=None,
+                    mode: str = "train", cache=None, cache_len=None,
+                    param_hook=None):
+        cfg = self.cfg
+        if cfg.family == "mlp":
+            if param_hook is not None:
+                params = param_hook(params, "layers")
+            h = inputs
+            for i in range(len(PAPER_MLP_DIMS) - 2):
+                p = params[f"fc{i}"]
+                h = jax.nn.relu(h @ p["w"] + p["b"])
+            return h, jnp.zeros((), jnp.float32), None
+        if positions is None:
+            seq = inputs.shape[1]
+            positions = jnp.arange(seq)
+        if cfg.family in ("dense", "moe"):
+            from repro.models.transformer import dense_trunk_apply
+            return dense_trunk_apply(params, inputs, cfg, positions=positions,
+                                     mode=mode, cache=cache,
+                                     cache_len=cache_len,
+                                     param_hook=param_hook)
+        if cfg.family == "hybrid":
+            from repro.models.hybrid import hybrid_trunk_apply
+            return hybrid_trunk_apply(params, inputs, cfg, positions=positions,
+                                      mode=mode, cache=cache,
+                                      cache_len=cache_len,
+                                      param_hook=param_hook)
+        if cfg.family == "xlstm":
+            from repro.models.xlstm import xlstm_trunk_apply
+            return xlstm_trunk_apply(params, inputs, cfg, positions=positions,
+                                     mode=mode, cache=cache,
+                                     param_hook=param_hook)
+        if cfg.family == "ssm":
+            from repro.models.mamba2 import mamba2_apply
+            from repro.models.transformer import _scan_stack, _cdt
+            embed = params["embed"]
+            if param_hook is not None:
+                embed = param_hook(embed, "embed")
+            if jnp.issubdtype(inputs.dtype, jnp.integer):
+                x = embed.astype(_cdt(cfg))[inputs]
+            else:
+                x = inputs.astype(_cdt(cfg))
+
+            def fn(lp, h, c):
+                h2, c2 = mamba2_apply(lp, h, cfg, mode=mode, cache=c)
+                return h2, jnp.zeros((), jnp.float32), c2
+            return _scan_stack(fn, params["layers"], x, cache, cfg, mode,
+                               param_hook, "layers")
+        raise ValueError(cfg.family)
+
+    def final_apply(self, params, hidden):
+        cfg = self.cfg
+        if cfg.family == "mlp":
+            return jax.nn.relu(hidden @ params["w"] + params["b"])
+        return L.rms_norm(hidden, params["norm"], cfg.norm_eps)
+
+    def head_apply(self, params, features):
+        if self.cfg.family == "mlp":
+            return features @ params["w"] + params["b"]
+        return (features @ params["w"].astype(features.dtype)).astype(jnp.float32)
+
+    # ---------------- caches ----------------
+    def init_cache(self, batch: int, cache_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe"):
+            from repro.models.transformer import init_dense_cache
+            return init_dense_cache(cfg, batch, cache_len, dtype)
+        if cfg.family == "hybrid":
+            from repro.models.hybrid import init_hybrid_cache
+            return init_hybrid_cache(cfg, batch, cache_len, dtype)
+        if cfg.family == "xlstm":
+            from repro.models.xlstm import init_xlstm_cache
+            return init_xlstm_cache(cfg, batch, dtype)
+        if cfg.family == "ssm":
+            from repro.models.mamba2 import init_mamba_cache
+            one = init_mamba_cache(cfg, batch, dtype)
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape),
+                one)
+        raise ValueError(cfg.family)
+
+    def cache_axes(self):
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe"):
+            from repro.models.transformer import dense_cache_axes
+            return dense_cache_axes(cfg)
+        if cfg.family == "hybrid":
+            from repro.models.hybrid import hybrid_cache_axes
+            return hybrid_cache_axes(cfg)
+        if cfg.family == "xlstm":
+            from repro.models.xlstm import xlstm_cache_axes
+            return xlstm_cache_axes()
+        if cfg.family == "ssm":
+            from repro.models.mamba2 import mamba_cache_axes
+            return {k: ("layer",) + v for k, v in mamba_cache_axes().items()}
+        raise ValueError(cfg.family)
+
+    # ---------------- convenience ----------------
+    def backbone_specs(self):
+        return {"trunk": self.trunk_specs(), "final": self.final_specs()}
+
+    def forward_logits(self, backbone_params, head_params, inputs, *,
+                       positions=None, mode="train", cache=None,
+                       cache_len=None):
+        h, aux, new_cache = self.trunk_apply(
+            backbone_params["trunk"], inputs, positions=positions, mode=mode,
+            cache=cache, cache_len=cache_len)
+        feats = self.final_apply(backbone_params["final"], h)
+        logits = self.head_apply(head_params, feats)
+        return logits, aux, new_cache
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+def lm_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Cross-entropy over the vocab; logits (B,S,V) fp32, labels (B,S)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def cls_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)

@@ -1,0 +1,94 @@
+"""Mixture-of-Experts FFN block (Mixtral / Phi-3.5-MoE style).
+
+Top-k routing with capacity-based token dropping, implemented with the
+standard dispatch/combine einsum formulation (MaxText/Switch style) so the
+compute lowers to dense MXU-friendly einsums and the expert dimension is
+shardable (expert parallelism when n_experts divides the mesh axis).
+
+Tokens are grouped along the sequence dimension (group = ``group_size``
+contiguous tokens) so dispatch tensors stay small ((B, nG, g, E, C)) and all
+dispatch compute is local to the data shard. Capacity per group:
+    C = ceil(top_k * g / E * capacity_factor)
+Overflowing tokens are dropped (their combine weight is zero) — the
+textbook trade-off; the aux load-balance loss keeps the router near-uniform.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models import layers as L
+from repro.models.params import ParamSpec
+
+GROUP_SIZE = 512
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    e = cfg.moe.n_experts
+    return {
+        "norm": ParamSpec((d,), ("embed",), "zeros"),
+        "router": ParamSpec((d, e), ("embed", None), scale=0.02),
+        "w_gate": ParamSpec((e, d, f), ("expert", "embed", "mlp")),
+        "w_up": ParamSpec((e, d, f), ("expert", "embed", "mlp")),
+        "w_down": ParamSpec((e, f, d), ("expert", "mlp", "embed")),
+    }
+
+
+def _route(logits: jax.Array, top_k: int):
+    """logits (..., E) -> (gates (..., E), mask (..., E)) with top-k support."""
+    e = logits.shape[-1]
+    weights = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_vals, top_idx = jax.lax.top_k(weights, top_k)
+    mask = jnp.sum(jax.nn.one_hot(top_idx, e, dtype=jnp.float32), axis=-2)
+    gates = weights * mask
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, mask, weights
+
+
+def moe_apply(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d). Returns (y, aux_loss)."""
+    mcfg = cfg.moe
+    e, k = mcfg.n_experts, mcfg.top_k
+    b, s, d = x.shape
+    h = L.rms_norm(x, p["norm"], 1e-6)
+
+    g = min(GROUP_SIZE, s)
+    if s % g != 0:
+        g = s   # smoke-test shapes: one group
+    ng = s // g
+    hg = h.reshape(b, ng, g, d)
+
+    logits = jnp.einsum("bngd,de->bnge", hg, p["router"].astype(h.dtype))
+    gates, mask, weights = _route(logits, k)                 # (B,nG,g,E)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    frac_tokens = jnp.mean(mask, axis=(0, 1, 2))             # (E,)
+    frac_weight = jnp.mean(weights, axis=(0, 1, 2))
+    aux = e * jnp.sum(frac_tokens * frac_weight) * mcfg.aux_loss_weight
+
+    cap = int(jnp.ceil(k * g / e * mcfg.capacity_factor)) if False else \
+        max(int(k * g / e * mcfg.capacity_factor + 0.999), 1)
+
+    # position of each token within its expert queue (per group)
+    pos_in_expert = jnp.cumsum(mask, axis=2) * mask - 1.0    # (B,nG,g,E)
+    keep = (pos_in_expert >= 0) & (pos_in_expert < cap)
+    pos_clip = jnp.clip(pos_in_expert, 0, cap - 1).astype(jnp.int32)
+    onehot_cap = jax.nn.one_hot(pos_clip, cap, dtype=h.dtype)  # (B,nG,g,E,C)
+    dispatch = onehot_cap * keep[..., None].astype(h.dtype)    # (B,nG,g,E,C)
+    combine = dispatch * gates[..., None].astype(h.dtype)
+
+    # dispatch -> (B,nG,E,C,d)
+    xe = jnp.einsum("bngec,bngd->bnecd", dispatch, hg)
+    # expert FFN (SwiGLU), expert dim stays leading for EP sharding
+    gate_h = jnp.einsum("bnecd,edf->bnecf", xe, p["w_gate"].astype(h.dtype))
+    up_h = jnp.einsum("bnecd,edf->bnecf", xe, p["w_up"].astype(h.dtype))
+    act = jax.nn.silu(gate_h) * up_h
+    ye = jnp.einsum("bnecf,efd->bnecd", act, p["w_down"].astype(h.dtype))
+    # combine back to tokens
+    y = jnp.einsum("bngec,bnecd->bngd", combine, ye)
+
+    return x + y.reshape(b, s, d), aux

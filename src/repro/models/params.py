@@ -1,0 +1,83 @@
+"""Parameter specification system.
+
+Each module describes its parameters as a nested dict of ``ParamSpec``
+(shape + logical axes + initializer). From one spec tree we derive:
+
+* ``init_params``     — materialized arrays (seeded, correct dtype),
+* ``logical_axes``    — same-structure tree of logical-axis tuples,
+* ``abstract_params`` — ShapeDtypeStruct stand-ins for dry-run lowering
+                        (no host memory is ever allocated).
+
+Keeping shapes/axes/init in one place removes the classic failure mode of
+parallel "axes trees" drifting out of sync with the real params.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: Optional[float] = None  # stddev override; default fan-in scaled
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    if len(shape) == 1:
+        return shape[0]
+    # last dim is fan-out by convention; everything else fan-in
+    return int(np.prod(shape[:-1]))
+
+
+def init_params(specs, key: jax.Array, dtype=jnp.float32):
+    """Materialize a spec tree into arrays. One fold_in per leaf path."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    arrays = []
+    for i, spec in enumerate(leaves):
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, dtype)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, dtype)
+        else:
+            if spec.scale is not None:
+                std = spec.scale
+            elif spec.init == "embed":
+                std = 1.0
+            else:
+                std = 1.0 / np.sqrt(max(_fan_in(spec.shape), 1))
+            arr = (jax.random.normal(keys[i], spec.shape, jnp.float32) * std).astype(dtype)
+        arrays.append(arr)
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def logical_axes(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def abstract_params(specs, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs, is_leaf=_is_spec
+    )
+
+
+def param_count(specs) -> int:
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(specs, is_leaf=_is_spec))
+
+
+def spec_shapes(specs):
+    return jax.tree.map(lambda s: s.shape, specs, is_leaf=_is_spec)

@@ -1,0 +1,399 @@
+"""Dense decoder backbone: GQA + RoPE + SwiGLU, scan-stacked layers.
+
+Covers: starcoder2 (SWA), stablelm, qwen2.5 (qkv bias), musicgen (audio
+tokens), phi-3-vision (embeds input), and gemma3's 5:1 local:global pattern
+(two-level scan over super-blocks).
+
+Caches: dict of stacked arrays
+    {"k": (L, B, C, KV, D), "v": ..., "pos": (B, C)} with pos[b, slot] =
+    absolute position held by that slot (-1 = empty). Windowed layers use a
+    ring buffer of capacity min(window, cache_len); full layers capacity
+    cache_len. All layers in one stack share one pos table (same write
+    pattern), windowed stacks carry their own.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models import layers as L
+from repro.models.params import ParamSpec
+
+
+# --------------------------------------------------------------------------
+# param specs
+# --------------------------------------------------------------------------
+
+def _stack(specs, n: int):
+    """Prepend a ('layer',) stacking dim to every spec in a tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layer",) + s.axes, s.init, s.scale),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def attn_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    specs = {
+        "norm": ParamSpec((d,), ("embed",), "zeros"),
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec((h, hd), ("heads", "head_dim"), "zeros")
+        specs["bk"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"), "zeros")
+        specs["bv"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"), "zeros")
+    return specs
+
+
+def mlp_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    specs = {
+        "norm": ParamSpec((d,), ("embed",), "zeros"),
+        "w_up": ParamSpec((d, f), ("embed", "mlp")),
+        "w_down": ParamSpec((f, d), ("mlp", "embed")),
+    }
+    if cfg.mlp_act == "silu":
+        specs["w_gate"] = ParamSpec((d, f), ("embed", "mlp"))
+    return specs
+
+
+def dense_layer_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    if cfg.moe is not None:
+        from repro.models.moe import moe_specs
+        return {"attn": attn_specs(cfg), "mlp": moe_specs(cfg)}
+    return {"attn": attn_specs(cfg), "mlp": mlp_specs(cfg)}
+
+
+def dense_trunk_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), "embed"),
+    }
+    if cfg.local_global_ratio:
+        r = cfg.local_global_ratio
+        n_super = cfg.n_layers // (r + 1)
+        assert n_super * (r + 1) == cfg.n_layers, (cfg.n_layers, r)
+        specs["local"] = _stack(_stack(dense_layer_specs(cfg), r), n_super)
+        specs["global"] = _stack(dense_layer_specs(cfg), n_super)
+    else:
+        specs["layers"] = _stack(dense_layer_specs(cfg), cfg.n_layers)
+    return specs
+
+
+def final_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    """The 'last shared layer' ω̃ used by FedGradNorm (DESIGN.md §3.1)."""
+    return {"norm": ParamSpec((cfg.d_model,), ("embed",), "zeros")}
+
+
+# --------------------------------------------------------------------------
+# attention block apply
+# --------------------------------------------------------------------------
+
+def _project_qkv(p, x, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return q, k, v
+
+
+def attn_apply(
+    p, x: jax.Array, cfg: ModelConfig, *,
+    positions: jax.Array,           # (S,) for train/prefill; (B,) abs pos for decode
+    window: Optional[int],
+    theta: float,
+    mode: str,                      # "train" | "prefill" | "decode"
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cache_len: Optional[int] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    h = rms_in = L.rms_norm(x, p["norm"], 1e-6)
+    q, k, v = _project_qkv(p, h, cfg)
+
+    if mode == "decode":
+        # positions: (B,) absolute position of the incoming token
+        q = L.apply_rope(q, positions[:, None], theta)
+        k = L.apply_rope(k, positions[:, None], theta)
+        cap = cache["k"].shape[1]
+        slot = positions % cap if window is not None else positions
+        slot = jnp.clip(slot, 0, cap - 1)
+        bidx = jnp.arange(x.shape[0])
+        k_cache = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+        v_cache = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+        pos_tab = cache["pos"].at[bidx, slot].set(positions)
+        out = L.decode_attention(q, k_cache, v_cache,
+                                 pos_q=positions, pos_kv=pos_tab, window=window)
+        new_cache = {"k": k_cache, "v": v_cache, "pos": pos_tab}
+    else:
+        q = L.apply_rope(q, positions[None, :], theta)
+        k = L.apply_rope(k, positions[None, :], theta)
+        out = L.attention(
+            q, k, v, pos_q=positions, pos_kv=positions, impl=cfg.attn_impl,
+            window=window, block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv)
+        new_cache = None
+        if mode == "prefill":
+            s = k.shape[1]
+            total = cache_len if cache_len is not None else s + 1
+            if window is not None:
+                cap = min(window, total)
+                keep = min(cap, s)
+                # ring layout by absolute position
+                k_tail, v_tail = k[:, -keep:], v[:, -keep:]
+                pos_tail = jnp.broadcast_to(positions[-keep:], (x.shape[0], keep))
+                slot = positions[-keep:] % cap
+                order = jnp.argsort(slot)
+                k_tail = k_tail[:, order]
+                v_tail = v_tail[:, order]
+                pos_tail = pos_tail[:, order]
+                pad = cap - keep
+            else:
+                cap = total
+                keep = min(cap, s)
+                k_tail, v_tail = k[:, -keep:], v[:, -keep:]
+                pos_tail = jnp.broadcast_to(positions[-keep:], (x.shape[0], keep))
+                pad = cap - keep
+            if pad > 0:
+                padc = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+                k_tail, v_tail = padc(k_tail), padc(v_tail)
+                pos_tail = jnp.pad(pos_tail, ((0, 0), (0, pad)),
+                                   constant_values=-1)
+            new_cache = {"k": k_tail, "v": v_tail, "pos": pos_tail}
+
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return x + y, new_cache
+
+
+def mlp_block_apply(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = L.rms_norm(x, p["norm"], 1e-6)
+    h = L.mlp_apply({k: v.astype(x.dtype) for k, v in p.items() if k != "norm"},
+                    h, cfg.mlp_act)
+    return x + h
+
+
+def dense_layer_apply(p, x, cfg: ModelConfig, *, positions, window, theta,
+                      mode, cache=None, cache_len=None):
+    """Returns (x, aux_loss, new_cache)."""
+    x, new_cache = attn_apply(p["attn"], x, cfg, positions=positions,
+                              window=window, theta=theta, mode=mode,
+                              cache=cache, cache_len=cache_len)
+    if cfg.moe is not None:
+        from repro.models.moe import moe_apply
+        x, aux = moe_apply(p["mlp"], x, cfg)
+    else:
+        x = mlp_block_apply(p["mlp"], x, cfg)
+        aux = jnp.zeros((), jnp.float32)
+    return x, aux, new_cache
+
+
+# --------------------------------------------------------------------------
+# trunk forward (scan over stacked layers)
+# --------------------------------------------------------------------------
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _scan_stack(layer_fn, stack_params, x, cache, cfg: ModelConfig,
+                mode: str = "train", param_hook=None, hook_klass="layers",
+                hook_tags=()):
+    """Scan ``layer_fn`` over a stacked param tree (+ optional stacked cache).
+
+    ``layer_fn(lp, h, c) -> (h, aux, c)``. Returns (x, aux_sum, new_cache).
+    Modes: train — no caches; prefill — no input cache, output caches
+    stacked as scan ys; decode — stacked input caches, stacked outputs.
+    """
+    zero = jnp.zeros((), jnp.float32)
+    n = jax.tree.leaves(stack_params)[0].shape[0]
+    idxs = jnp.arange(n)
+
+    # the hook (FSDP/OTA gather) sits INSIDE the remat boundary: backward
+    # re-gathers each layer instead of saving gathered full params as scan
+    # residuals (which would cost full-model memory per device).
+    def hooked(lp, i, h, c):
+        if param_hook is not None:
+            lp = param_hook(lp, hook_klass, *hook_tags, i)
+        return layer_fn(lp, h, c)
+
+    fn = _remat(hooked, cfg)
+
+    if mode == "train":
+        def body(carry, xs):
+            h, aux = carry
+            lp, i = xs
+            h2, a, _ = fn(lp, i, h, None)
+            return (h2, aux + a), None
+        (x, aux), _ = jax.lax.scan(body, (x, zero), (stack_params, idxs))
+        return x, aux, None
+
+    if mode == "prefill":
+        def body(carry, xs):
+            h, aux = carry
+            lp, i = xs
+            h2, a, c2 = fn(lp, i, h, None)
+            return (h2, aux + a), c2
+        (x, aux), new_cache = jax.lax.scan(body, (x, zero), (stack_params, idxs))
+        return x, aux, new_cache
+
+    def body(carry, xs):
+        h, aux = carry
+        lp, c, i = xs
+        h2, a, c2 = fn(lp, i, h, c)
+        return (h2, aux + a), c2
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, zero), (stack_params, cache, idxs))
+    return x, aux, new_cache
+
+
+def dense_trunk_apply(
+    params, tokens_or_embeds, cfg: ModelConfig, *,
+    positions, mode: str = "train", cache=None, cache_len=None,
+    param_hook=None,
+):
+    """Returns (hidden_pre_final, aux_losses, new_cache)."""
+    embed = params["embed"]
+    if param_hook is not None:
+        embed = param_hook(embed, "embed")
+    if jnp.issubdtype(tokens_or_embeds.dtype, jnp.integer):
+        x = embed.astype(_cdt(cfg))[tokens_or_embeds]
+    else:
+        x = tokens_or_embeds.astype(_cdt(cfg))
+
+    if cfg.local_global_ratio:
+        theta_g = cfg.rope_theta_global or cfg.rope_theta
+        zero = jnp.zeros((), jnp.float32)
+        r = cfg.local_global_ratio
+        n_super = cfg.n_layers // (r + 1)
+        sup_idx = jnp.arange(n_super)
+
+        def local_fn(lp, h, c):
+            return dense_layer_apply(lp, h, cfg, positions=positions,
+                                     window=cfg.local_window,
+                                     theta=cfg.rope_theta, mode=mode, cache=c,
+                                     cache_len=cache_len)
+
+        def global_fn(lp, h, c):
+            return dense_layer_apply(lp, h, cfg, positions=positions,
+                                     window=None, theta=theta_g,
+                                     mode=mode, cache=c, cache_len=cache_len)
+
+        def hooked_global(lp, si, h, c):
+            if param_hook is not None:
+                lp = param_hook(lp, "layers", si, r)
+            return global_fn(lp, h, c)
+
+        g_fn = _remat(hooked_global, cfg)
+
+        if mode == "train":
+            def body(carry, xs):
+                h, aux = carry
+                lp_l, lp_g, si = xs
+                h, a1, _ = _scan_stack(local_fn, lp_l, h, None, cfg, mode,
+                                       param_hook, "layers", (si,))
+                h, a2, _ = g_fn(lp_g, si, h, None)
+                return (h, aux + a1 + a2), None
+            (x, aux), _ = jax.lax.scan(
+                body, (x, zero), (params["local"], params["global"], sup_idx))
+            new_cache = None
+        elif mode == "prefill":
+            def body(carry, xs):
+                h, aux = carry
+                lp_l, lp_g, si = xs
+                h, a1, nc_l = _scan_stack(local_fn, lp_l, h, None, cfg, mode,
+                                          param_hook, "layers", (si,))
+                h, a2, nc_g = g_fn(lp_g, si, h, None)
+                return (h, aux + a1 + a2), (nc_l, nc_g)
+            (x, aux), (nc_l, nc_g) = jax.lax.scan(
+                body, (x, zero), (params["local"], params["global"], sup_idx))
+            new_cache = {"local": nc_l, "global": nc_g}
+        else:
+            def body(carry, xs):
+                h, aux = carry
+                lp_l, lp_g, c_l, c_g, si = xs
+                h, a1, nc_l = _scan_stack(local_fn, lp_l, h, c_l, cfg, mode,
+                                          param_hook, "layers", (si,))
+                h, a2, nc_g = g_fn(lp_g, si, h, c_g)
+                return (h, aux + a1 + a2), (nc_l, nc_g)
+            (x, aux), (nc_l, nc_g) = jax.lax.scan(
+                body, (x, zero),
+                (params["local"], params["global"],
+                 cache["local"], cache["global"], sup_idx))
+            new_cache = {"local": nc_l, "global": nc_g}
+    else:
+        def layer_fn(lp, h, c):
+            return dense_layer_apply(lp, h, cfg, positions=positions,
+                                     window=cfg.sliding_window,
+                                     theta=cfg.rope_theta, mode=mode, cache=c,
+                                     cache_len=cache_len)
+        x, aux, new_cache = _scan_stack(layer_fn, params["layers"], x, cache,
+                                        cfg, mode, param_hook, "layers")
+
+    return x, aux, new_cache
+
+
+def final_apply(params, hidden, cfg: ModelConfig):
+    return L.rms_norm(hidden, params["norm"], 1e-6)
+
+
+def _cdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# --------------------------------------------------------------------------
+# cache construction
+# --------------------------------------------------------------------------
+
+def _layer_cache_shape(cfg: ModelConfig, batch: int, cache_len: int,
+                       window: Optional[int]):
+    cap = min(window, cache_len) if window is not None else cache_len
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return cap, kv, hd
+
+
+def init_dense_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                     dtype=jnp.bfloat16):
+    """Empty stacked cache for decode-from-scratch or abstract dry-run."""
+    def one(n_layers_stack, window, extra_lead=()):
+        cap, kv, hd = _layer_cache_shape(cfg, batch, cache_len, window)
+        lead = extra_lead + (n_layers_stack,)
+        return {
+            "k": jnp.zeros(lead + (batch, cap, kv, hd), dtype),
+            "v": jnp.zeros(lead + (batch, cap, kv, hd), dtype),
+            "pos": jnp.full(lead + (batch, cap), -1, jnp.int32),
+        }
+
+    if cfg.local_global_ratio:
+        r = cfg.local_global_ratio
+        n_super = cfg.n_layers // (r + 1)
+        local = one(r, cfg.local_window, extra_lead=(n_super,))
+        glob = one(n_super, None)
+        # reorder lead dims: scan expects (n_super, r, ...) for local ✓ and
+        # (n_super, ...) for global ✓ — `one` builds (n_super, r, ...) already
+        return {"local": local, "global": glob}
+    return one(cfg.n_layers, cfg.sliding_window)
+
+
+def dense_cache_axes(cfg: ModelConfig, long_context: bool = False):
+    """Logical axes for cache arrays (for sharding rules)."""
+    def one(n_lead):
+        lead = ("layer",) * n_lead
+        return {
+            "k": lead + ("batch", "cache_seq", "kv_heads", "head_dim"),
+            "v": lead + ("batch", "cache_seq", "kv_heads", "head_dim"),
+            "pos": lead + ("batch", "cache_seq"),
+        }
+    if cfg.local_global_ratio:
+        return {"local": one(2), "global": one(1)}
+    return one(1)

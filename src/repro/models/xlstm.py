@@ -1,0 +1,420 @@
+"""xLSTM blocks: mLSTM (matrix memory) + sLSTM (scalar memory).
+
+mLSTM is implemented in *chunkwise* form (the TPU-native adaptation — the
+same intra-chunk-quadratic / inter-chunk-state structure as SSD), with the
+exp-input-gate stabilizer m carried across chunks (online-softmax-style
+merge of intra- and inter-chunk contributions). Decode is the O(1)
+recurrent update. sLSTM has true recurrent (hidden-to-gate) connections, so
+it is sequential by construction — implemented as a lax.scan over time,
+exactly as the paper describes it (no parallel form exists).
+
+Block pattern (xlstm-1.3b): every ``slstm_every``-th block is sLSTM; the
+stack is scanned as super-blocks of (slstm_every-1 mLSTM + 1 sLSTM).
+
+Simplifications vs the reference implementation (documented in DESIGN.md):
+the short causal conv in front of q/k and per-block learnable skip scales
+are omitted; gates use exp input gate + sigmoid forget gate (one of the two
+variants the paper ablates).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models import layers as L
+from repro.models.params import ParamSpec
+
+CHUNK = 256
+
+
+def _dims(cfg: ModelConfig):
+    d_in = int(cfg.xlstm.proj_factor_mlstm * cfg.d_model)
+    dh = d_in // cfg.n_heads
+    return d_in, dh
+
+
+# --------------------------------------------------------------------------
+# specs
+# --------------------------------------------------------------------------
+
+def mlstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    h = cfg.n_heads
+    d_in, dh = _dims(cfg)
+    return {
+        "norm": ParamSpec((d,), ("embed",), "zeros"),
+        "w_up": ParamSpec((d, d_in), ("embed", "mlp")),
+        "w_gate_out": ParamSpec((d, d_in), ("embed", "mlp")),
+        "wq": ParamSpec((d_in, h, dh), ("mlp", "heads", "head_dim")),
+        "wk": ParamSpec((d_in, h, dh), ("mlp", "heads", "head_dim")),
+        "wv": ParamSpec((d_in, h, dh), ("mlp", "heads", "head_dim")),
+        "w_if": ParamSpec((d_in, h, 2), ("mlp", "heads", None), scale=0.02),
+        "b_if": ParamSpec((h, 2), ("heads", None), "zeros"),
+        "out_norm": ParamSpec((d_in,), ("mlp",), "zeros"),
+        "w_down": ParamSpec((d_in, d), ("mlp", "embed")),
+    }
+
+
+def slstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    f = int(cfg.xlstm.proj_factor_slstm * d)
+    return {
+        "norm": ParamSpec((d,), ("embed",), "zeros"),
+        # 4 gates (z, i, f, o), input + recurrent (block-diag per head)
+        "w_gates": ParamSpec((d, 4, h, dh), ("embed", None, "heads", "head_dim")),
+        "r_gates": ParamSpec((4, h, dh, dh), (None, "heads", "head_dim", None),
+                             scale=0.02),
+        "b_gates": ParamSpec((4, h, dh), (None, "heads", "head_dim"), "zeros"),
+        "out_norm": ParamSpec((d,), ("embed",), "zeros"),
+        "w_up": ParamSpec((d, f), ("embed", "mlp")),
+        "w_down": ParamSpec((f, d), ("mlp", "embed")),
+    }
+
+
+# --------------------------------------------------------------------------
+# mLSTM chunkwise forward
+# --------------------------------------------------------------------------
+
+def _mlstm_chunked(q, k, v, log_i, log_f, state=None):
+    """q,k,v: (B,S,H,D) (k pre-scaled by 1/sqrt(D)); log_i/log_f: (B,S,H).
+
+    Returns y (B,S,H,D) and final state (C̃ (B,H,D,D), ñ (B,H,D), m (B,H)).
+    """
+    b, s, h, d = q.shape
+    chunk = CHUNK if s % CHUNK == 0 else s
+    nc = s // chunk
+
+    qc = q.reshape(b, nc, chunk, h, d)
+    kc = k.reshape(b, nc, chunk, h, d)
+    vc = v.reshape(b, nc, chunk, h, d)
+    li = log_i.reshape(b, nc, chunk, h).astype(jnp.float32)
+    lf = log_f.reshape(b, nc, chunk, h).astype(jnp.float32)
+
+    a = jnp.cumsum(lf, axis=2)                              # (b,nc,l,h) decay from chunk start
+    a_end = a[:, :, -1, :]                                  # (b,nc,h)
+
+    if state is None:
+        C0 = jnp.zeros((b, h, d, d), jnp.float32)
+        n0 = jnp.zeros((b, h, d), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    # intra-chunk log weights: w[t,s] = a[t] - a[s] + li[s]  (s <= t)
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]
+
+    def chunk_step(carry, xs):
+        C_in, n_in, m_in = carry
+        q_i, k_i, v_i, a_i, li_i, aend_i = xs
+        # shapes: q_i (b,l,h,d); a_i (b,l,h); aend_i (b,h)
+        logw = (a_i[:, :, None, :] - a_i[:, None, :, :]
+                + li_i[:, None, :, :])                      # (b,t,s,h)
+        logw = jnp.where(causal[None, :, :, None], logw, -jnp.inf)
+        m_intra = jnp.max(logw, axis=2)                     # (b,t,h)
+        m_inter = a_i + m_in[:, None, :]                    # (b,t,h)
+        m_tot = jnp.maximum(jnp.maximum(m_intra, m_inter), -1e30)
+
+        w = jnp.exp(logw - m_tot[:, :, None, :])            # (b,t,s,h)
+        scores = jnp.einsum("bthd,bshd->btsh", q_i, k_i) * w
+        num = jnp.einsum("btsh,bshd->bthd", scores, v_i)
+        den = jnp.sum(scores, axis=2)                       # (b,t,h)
+
+        inter_scale = jnp.exp(m_inter - m_tot)              # (b,t,h)
+        num = num + jnp.einsum("bthd,bhde->bthe", q_i, C_in) * inter_scale[..., None]
+        den = den + jnp.einsum("bthd,bhd->bth", q_i, n_in) * inter_scale
+
+        y_i = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_tot))[..., None]
+
+        # state update to chunk end
+        m_out = jnp.maximum(m_in + aend_i,
+                            jnp.max(aend_i[:, None, :] - a_i + li_i, axis=1))
+        carry_scale = jnp.exp(m_in + aend_i - m_out)        # (b,h)
+        kv_w = jnp.exp(aend_i[:, None, :] - a_i + li_i - m_out[:, None, :])
+        C_out = (C_in * carry_scale[..., None, None]
+                 + jnp.einsum("bsh,bshd,bshe->bhde", kv_w, k_i, v_i))
+        n_out = (n_in * carry_scale[..., None]
+                 + jnp.einsum("bsh,bshd->bhd", kv_w, k_i))
+        return (C_out, n_out, m_out), y_i
+
+    xs = (qc.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+          kc.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+          vc.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+          a.transpose(1, 0, 2, 3), li.transpose(1, 0, 2, 3),
+          a_end.transpose(1, 0, 2))
+    (C_f, n_f, m_f), ys = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+    return y, (C_f, n_f, m_f)
+
+
+def _mlstm_decode(q, k, v, log_i, log_f, state):
+    """One-step recurrent mLSTM. q,k,v: (B,H,D); gates (B,H)."""
+    C, n, m = state
+    m_new = jnp.maximum(log_f + m, log_i)
+    f_s = jnp.exp(log_f + m - m_new)
+    i_s = jnp.exp(log_i - m_new)
+    C = C * f_s[..., None, None] + i_s[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k, v)
+    n = n * f_s[..., None] + i_s[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q, n))
+    y = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    return y, (C, n, m_new)
+
+
+def mlstm_apply(p, x, cfg: ModelConfig, *, mode="train", cache=None):
+    d_in, dh = _dims(cfg)
+    h_heads = cfg.n_heads
+    hid = L.rms_norm(x, p["norm"], 1e-6)
+    up = hid @ p["w_up"].astype(x.dtype)
+    gate = jax.nn.silu(hid @ p["w_gate_out"].astype(x.dtype))
+
+    q = jnp.einsum("bsd,dhe->bshe", up, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhe->bshe", up, p["wk"].astype(x.dtype)) / math.sqrt(dh)
+    v = jnp.einsum("bsd,dhe->bshe", up, p["wv"].astype(x.dtype))
+    gates = jnp.einsum("bsd,dhg->bshg", up, p["w_if"].astype(x.dtype)) + p["b_if"].astype(x.dtype)
+    log_i = gates[..., 0].astype(jnp.float32)               # exp input gate
+    log_f = jax.nn.log_sigmoid(gates[..., 1].astype(jnp.float32))
+
+    if mode == "decode":
+        state = (cache["C"].astype(jnp.float32),
+                 cache["n"].astype(jnp.float32),
+                 cache["m"].astype(jnp.float32))
+        y, (C, n_, m_) = _mlstm_decode(
+            q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+            v[:, 0].astype(jnp.float32), log_i[:, 0], log_f[:, 0], state)
+        y = y[:, None]                                       # (B,1,H,D)
+        new_cache = {"C": C.astype(cache["C"].dtype), "n": n_.astype(cache["n"].dtype),
+                     "m": m_}
+    else:
+        state = None
+        if cache is not None:
+            state = (cache["C"].astype(jnp.float32),
+                     cache["n"].astype(jnp.float32),
+                     cache["m"].astype(jnp.float32))
+        y, (C, n_, m_) = _mlstm_chunked(q.astype(jnp.float32),
+                                        k.astype(jnp.float32),
+                                        v.astype(jnp.float32), log_i, log_f,
+                                        state)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"C": C.astype(jnp.bfloat16), "n": n_.astype(jnp.bfloat16),
+                         "m": m_}
+
+    y = y.reshape(x.shape[0], -1, d_in).astype(x.dtype)
+    y = L.rms_norm(y, p["out_norm"], 1e-6) * gate
+    return x + y @ p["w_down"].astype(x.dtype), new_cache
+
+
+# --------------------------------------------------------------------------
+# sLSTM (sequential scan; true recurrence)
+# --------------------------------------------------------------------------
+
+def slstm_apply(p, x, cfg: ModelConfig, *, mode="train", cache=None):
+    b, s, d = x.shape
+    h_heads = cfg.n_heads
+    dh = d // h_heads
+    hid = L.rms_norm(x, p["norm"], 1e-6)
+    # input contributions for all 4 gates: (B,S,4,H,dh)
+    gx = jnp.einsum("bsd,dghe->bsghe", hid, p["w_gates"].astype(x.dtype))
+    gx = gx + p["b_gates"].astype(x.dtype)
+
+    if cache is not None:
+        c0 = cache["c"].astype(jnp.float32)
+        n0 = cache["n"].astype(jnp.float32)
+        hh0 = cache["h"].astype(jnp.float32)
+        m0 = cache["m"].astype(jnp.float32)
+    else:
+        c0 = jnp.zeros((b, h_heads, dh), jnp.float32)
+        n0 = jnp.ones((b, h_heads, dh), jnp.float32)
+        hh0 = jnp.zeros((b, h_heads, dh), jnp.float32)
+        m0 = jnp.zeros((b, h_heads, dh), jnp.float32)
+
+    r = p["r_gates"].astype(jnp.float32)                     # (4,H,dh,dh)
+
+    def step(carry, gx_t):
+        c, n, hh, m = carry
+        gr = jnp.einsum("bhe,ghef->bghf", hh, r)             # (B,4,H,dh)
+        g = gx_t.astype(jnp.float32) + gr
+        z = jnp.tanh(g[:, 0])
+        i_t = g[:, 1]
+        f_t = jax.nn.log_sigmoid(g[:, 2])
+        o = jax.nn.sigmoid(g[:, 3])
+        m_new = jnp.maximum(f_t + m, i_t)
+        i_s = jnp.exp(i_t - m_new)
+        f_s = jnp.exp(f_t + m - m_new)
+        c_new = f_s * c + i_s * z
+        n_new = f_s * n + i_s
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    (c_f, n_f, h_f, m_f), hs = jax.lax.scan(
+        step, (c0, n0, hh0, m0), gx.transpose(1, 0, 2, 3, 4))
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    y = L.rms_norm(y, p["out_norm"], 1e-6)
+    x = x + y
+    # feed-forward
+    hmlp = jax.nn.gelu(L.rms_norm(x, jnp.zeros_like(p["out_norm"]), 1e-6)
+                       @ p["w_up"].astype(x.dtype))
+    x = x + hmlp @ p["w_down"].astype(x.dtype)
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"c": c_f.astype(jnp.bfloat16), "n": n_f.astype(jnp.bfloat16),
+                     "h": h_f.astype(jnp.bfloat16), "m": m_f}
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------
+# trunk: super-blocks of (slstm_every-1 mLSTM + 1 sLSTM)
+# --------------------------------------------------------------------------
+
+def _layout(cfg: ModelConfig) -> Tuple[int, int]:
+    k = cfg.xlstm.slstm_every
+    assert cfg.n_layers % k == 0, (cfg.n_layers, k)
+    return cfg.n_layers // k, k - 1     # (n_super, mlstm_per_super)
+
+
+def xlstm_trunk_specs(cfg: ModelConfig) -> Dict:
+    from repro.models.transformer import _stack
+    n_super, m_per = _layout(cfg)
+    return {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                           "embed"),
+        "mlstm": _stack(_stack(mlstm_specs(cfg), m_per), n_super),
+        "slstm": _stack(slstm_specs(cfg), n_super),
+    }
+
+
+def xlstm_trunk_apply(params, tokens, cfg: ModelConfig, *,
+                      positions=None, mode: str = "train", cache=None,
+                      cache_len=None, param_hook=None):
+    from repro.models.transformer import _remat, _cdt
+    n_super, m_per = _layout(cfg)
+    embed = params["embed"]
+    if param_hook is not None:
+        embed = param_hook(embed, "embed")
+    if jnp.issubdtype(tokens.dtype, jnp.integer):
+        x = embed.astype(_cdt(cfg))[tokens]
+    else:
+        x = tokens.astype(_cdt(cfg))
+
+    def _m(lp, si, i, h, c):
+        if param_hook is not None:
+            lp = param_hook(lp, "mlstm", si, i)
+        return mlstm_apply(lp, h, cfg, mode=mode, cache=c)
+
+    def _s(lp, si, h, c):
+        if param_hook is not None:
+            lp = param_hook(lp, "slstm", si)
+        return slstm_apply(lp, h, cfg, mode=mode, cache=c)
+
+    m_fn = _remat(_m, cfg)
+    s_fn = _remat(_s, cfg)
+
+    sup = jnp.arange(n_super)
+    inner_idx = jnp.arange(m_per)
+
+    if mode == "train":
+        def body(h, xs):
+            lp_m, lp_s, si = xs
+
+            def inner(hh, ys):
+                lp, i = ys
+                h2, _ = m_fn(lp, si, i, hh, None)
+                return h2, None
+            h, _ = jax.lax.scan(inner, h, (lp_m, inner_idx))
+            h, _ = s_fn(lp_s, si, h, None)
+            return h, None
+        x, _ = jax.lax.scan(body, x, (params["mlstm"], params["slstm"], sup))
+        return x, jnp.zeros((), jnp.float32), None
+
+    if mode == "prefill":
+        def body(h, xs):
+            lp_m, lp_s, si = xs
+
+            def inner(hh, ys):
+                lp, i = ys
+                h2, c2 = m_fn(lp, si, i, hh, None)
+                return h2, c2
+            h, nc_m = jax.lax.scan(inner, h, (lp_m, inner_idx))
+            h, nc_s = s_fn(lp_s, si, h, None)
+            return h, (nc_m, nc_s)
+        x, (nc_m, nc_s) = jax.lax.scan(
+            body, x, (params["mlstm"], params["slstm"], sup))
+        return x, jnp.zeros((), jnp.float32), {"mlstm": nc_m, "slstm": nc_s}
+
+    def body(h, xs):
+        lp_m, lp_s, c_m, c_s, si = xs
+
+        def inner(hh, ys):
+            lp, c, i = ys
+            h2, c2 = m_fn(lp, si, i, hh, c)
+            return h2, c2
+        h, nc_m = jax.lax.scan(inner, h, (lp_m, c_m, inner_idx))
+        h, nc_s = s_fn(lp_s, si, h, c_s)
+        return h, (nc_m, nc_s)
+    x, (nc_m, nc_s) = jax.lax.scan(
+        body, x, (params["mlstm"], params["slstm"],
+                  cache["mlstm"], cache["slstm"], sup))
+    return x, jnp.zeros((), jnp.float32), {"mlstm": nc_m, "slstm": nc_s}
+
+
+def init_xlstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    n_super, m_per = _layout(cfg)
+
+    def bcast(tree, lead):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[(None,) * len(lead)], lead + a.shape),
+            tree)
+    return {
+        "mlstm": bcast(init_mlstm_cache(cfg, batch, dtype), (n_super, m_per)),
+        "slstm": bcast(init_slstm_cache(cfg, batch, dtype), (n_super,)),
+    }
+
+
+def xlstm_cache_axes():
+    m = {k: ("layer", "layer") + v for k, v in mlstm_cache_axes().items()}
+    s = {k: ("layer",) + v for k, v in slstm_cache_axes().items()}
+    return {"mlstm": m, "slstm": s}
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    _, dh = _dims(cfg)
+    h = cfg.n_heads
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), dtype),
+        "n": jnp.zeros((batch, h, dh), dtype),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    return {
+        "c": jnp.zeros((batch, h, dh), dtype),
+        "n": jnp.ones((batch, h, dh), dtype),
+        "h": jnp.zeros((batch, h, dh), dtype),
+        "m": jnp.zeros((batch, h, dh), jnp.float32),
+    }
+
+
+def mlstm_cache_axes():
+    return {"C": ("batch", "heads", "head_dim", "state"),
+            "n": ("batch", "heads", "head_dim"),
+            "m": ("batch", "heads")}
+
+
+def slstm_cache_axes():
+    return {k: ("batch", "heads", "head_dim") for k in ("c", "n", "h", "m")}

@@ -1,0 +1,9 @@
+from repro.optim.adam import AdamState, adam_init, adam_update
+from repro.optim.sgd import sgd_update
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine
+from repro.optim.clip import clip_by_global_norm
+
+__all__ = [
+    "AdamState", "adam_init", "adam_update", "sgd_update",
+    "constant", "cosine_decay", "linear_warmup_cosine", "clip_by_global_norm",
+]

@@ -1,0 +1,60 @@
+"""Adam/AdamW implemented directly on pytrees (no optax in this container).
+
+The paper uses Adam both for network training (lr β = 3e-4) and for the
+F_grad minimization in Algorithm 2 (lr α = 8e-3); this module serves both.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array      # scalar int32
+    mu: object           # first-moment pytree
+    nu: object           # second-moment pytree
+
+
+def adam_init(params) -> AdamState:
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), p)
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros(params), nu=zeros(params))
+
+
+def adam_update(
+    grads,
+    state: AdamState,
+    params,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+):
+    """One Adam(W) step. Returns (new_params, new_state)."""
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - jnp.power(b1, t)
+    bc2 = 1.0 - jnp.power(b2, t)
+
+    def _moment1(m, g):
+        return b1 * m + (1.0 - b1) * g.astype(jnp.float32)
+
+    def _moment2(v, g):
+        g32 = g.astype(jnp.float32)
+        return b2 * v + (1.0 - b2) * g32 * g32
+
+    mu = jax.tree.map(_moment1, state.mu, grads)
+    nu = jax.tree.map(_moment2, state.nu, grads)
+
+    def _upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(_upd, params, mu, nu)
+    return new_params, AdamState(step=step, mu=mu, nu=nu)

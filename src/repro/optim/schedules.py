@@ -1,0 +1,27 @@
+"""Learning-rate schedules as step -> lr callables (jit-traceable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def sched(step):
+        return jnp.asarray(lr, jnp.float32)
+    return sched
+
+
+def cosine_decay(lr: float, decay_steps: int, final_frac: float = 0.1):
+    def sched(step):
+        frac = jnp.clip(step.astype(jnp.float32) / decay_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return lr * (final_frac + (1.0 - final_frac) * cos)
+    return sched
+
+
+def linear_warmup_cosine(lr: float, warmup_steps: int, decay_steps: int, final_frac: float = 0.1):
+    cos = cosine_decay(lr, max(decay_steps - warmup_steps, 1), final_frac)
+    def sched(step):
+        step_f = step.astype(jnp.float32)
+        warm = lr * step_f / max(warmup_steps, 1)
+        return jnp.where(step_f < warmup_steps, warm, cos(step - warmup_steps))
+    return sched

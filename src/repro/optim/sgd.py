@@ -1,0 +1,9 @@
+"""Plain SGD (used for the τ_h / τ_ω local updates in Algorithm 1 when
+configured, and as a cheap baseline optimizer)."""
+from __future__ import annotations
+
+import jax
+
+
+def sgd_update(grads, params, lr):
+    return jax.tree.map(lambda p, g: (p - lr * g.astype(p.dtype)).astype(p.dtype), params, grads)

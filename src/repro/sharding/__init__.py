@@ -1,0 +1,16 @@
+from repro.sharding.rules import (
+    ShardingRules,
+    TRAIN_RULES,
+    SERVE_RULES,
+    LONGCTX_SERVE_RULES,
+    spec_for,
+    tree_specs,
+    tree_shardings,
+)
+from repro.sharding.mesh_utils import fl_view, flat_client_axes, data_axes_of
+
+__all__ = [
+    "ShardingRules", "TRAIN_RULES", "SERVE_RULES", "LONGCTX_SERVE_RULES",
+    "spec_for", "tree_specs", "tree_shardings", "fl_view",
+    "flat_client_axes", "data_axes_of",
+]

@@ -1,0 +1,61 @@
+"""Mesh helpers: the FL-refined view and axis bookkeeping.
+
+``make_production_mesh()`` (repro.launch.mesh) returns the assignment's
+meshes: (16,16) ("data","model") and (2,16,16) ("pod","data","model").
+The HOTA trainer needs to distinguish *clients within a cluster* (LAN
+aggregation) from *clusters* (over-the-air MAC). ``fl_view`` reshapes the
+same devices, in the same order, splitting "data" into
+("cluster", "client") — global array layouts are unchanged, only collective
+scoping differs. This mirrors the dp/fsdp axis split in MaxText.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+from jax.sharding import Mesh
+
+
+def fl_view(mesh: Mesh, n_clients: int) -> Mesh:
+    """Refine a production mesh's 'data' axis into ('cluster','client')."""
+    names = list(mesh.axis_names)
+    assert "data" in names and "model" in names, mesh
+    data_idx = names.index("data")
+    shape = list(mesh.devices.shape)
+    data_size = shape[data_idx]
+    assert data_size % n_clients == 0, (data_size, n_clients)
+    n_clusters = data_size // n_clients
+    new_shape = shape[:data_idx] + [n_clusters, n_clients] + shape[data_idx + 1:]
+    new_names = names[:data_idx] + ["cluster", "client"] + names[data_idx + 1:]
+    return Mesh(mesh.devices.reshape(new_shape), tuple(new_names))
+
+
+def data_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    """All batch-like axes of a mesh, in major-to-minor order."""
+    out = []
+    for name in mesh.axis_names:
+        if name in ("pod", "data", "cluster", "client"):
+            out.append(name)
+    return tuple(out)
+
+
+def flat_client_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes that enumerate FL clients (cluster x client, plus pod)."""
+    out = []
+    for name in mesh.axis_names:
+        if name in ("pod", "cluster", "client"):
+            out.append(name)
+    return tuple(out)
+
+
+def cluster_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes that enumerate clusters (the OTA MAC sums over these)."""
+    return tuple(n for n in mesh.axis_names if n in ("pod", "cluster"))
+
+
+def total_clients(mesh: Mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in ("pod", "cluster", "client"):
+        n *= sizes.get(a, 1)
+    return n

@@ -1,0 +1,180 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Every parameter/activation in the framework carries a tuple of *logical*
+axis names (e.g. ``("layer", "embed", "mlp")``). A ``ShardingRules`` maps
+each logical name to an ordered list of candidate mesh axes. Rule
+application enforces the two GSPMD constraints automatically:
+
+* divisibility — a dim is only sharded if its size is divisible by the
+  product of the mesh axes assigned to it;
+* exclusivity — a mesh axis may appear at most once per tensor; later
+  logical axes fall back to their next candidate (or replication).
+
+This mirrors how MaxText/levanter handle logical axis rules, and it is what
+lets one model zoo serve meshes of shape (16,16), (2,16,16) and the refined
+FL view (pod, cluster, client, model) without per-model sharding code.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# A candidate is a tuple of mesh axis names sharding one tensor dim jointly,
+# e.g. ("data",) or ("cluster", "client").
+Candidate = Tuple[str, ...]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    rules: Dict[str, Tuple[Candidate, ...]] = field(default_factory=dict)
+
+    def candidates(self, logical: Optional[str]) -> Tuple[Candidate, ...]:
+        if logical is None:
+            return ()
+        return self.rules.get(logical, ())
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _translate(cand: Candidate, mesh: Mesh) -> Optional[Candidate]:
+    """Translate the generic 'data' axis to whatever data-like axes the mesh
+    actually has (supports the FL-refined view and the pod axis)."""
+    sizes = _mesh_axis_sizes(mesh)
+    out = []
+    for ax in cand:
+        if ax in sizes:
+            out.append(ax)
+        elif ax == "data" and "cluster" in sizes and "client" in sizes:
+            out.extend(["cluster", "client"])
+        else:
+            return None
+    return tuple(out)
+
+
+def spec_for(
+    logical_axes: Sequence[Optional[str]],
+    rules: ShardingRules,
+    shape: Sequence[int],
+    mesh: Mesh,
+) -> P:
+    """Build a PartitionSpec for one tensor."""
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    sizes = _mesh_axis_sizes(mesh)
+    used: set = set()
+    spec = []
+    for dim, name in zip(shape, logical_axes):
+        chosen = None
+        for cand in rules.candidates(name):
+            cand = _translate(cand, mesh)
+            if cand is None:
+                continue
+            prod = int(np.prod([sizes[a] for a in cand]))
+            if any(a in used for a in cand):
+                continue
+            if prod == 0 or dim % prod != 0:
+                continue
+            chosen = cand
+            break
+        if chosen is None:
+            spec.append(None)
+        else:
+            used.update(chosen)
+            spec.append(chosen if len(chosen) > 1 else chosen[0])
+    return P(*spec)
+
+
+def tree_specs(axes_tree, shapes_tree, rules: ShardingRules, mesh: Mesh):
+    """Map spec_for over parallel pytrees of logical-axes tuples and shapes."""
+    return jax.tree.map(
+        lambda axes, shape: spec_for(axes, rules, shape, mesh),
+        axes_tree,
+        shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and (len(x) == 0 or not isinstance(x[0], tuple)),
+    )
+
+
+def tree_shardings(axes_tree, shapes_tree, rules: ShardingRules, mesh: Mesh):
+    specs = tree_specs(axes_tree, shapes_tree, rules, mesh)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def _mk(rules: Dict[str, Sequence[Sequence[str]]]) -> ShardingRules:
+    return ShardingRules({k: tuple(tuple(c) for c in v) for k, v in rules.items()})
+
+
+# --- canonical rule sets ------------------------------------------------------
+
+# Training: FSDP over the data axis on the embed dim, tensor parallel on
+# mlp/heads/vocab/expert dims. The "pod" axis replicates parameters (clusters
+# never span pods; see DESIGN.md §3.2) and shards the batch.
+TRAIN_RULES = _mk({
+    "batch":    [("pod", "data"), ("data",), ("pod",)],
+    "seq":      [],
+    "embed":    [("data",)],
+    "embed2":   [],                      # second embed-sized dim (e.g. out-proj rows)
+    "vocab":    [("model",)],
+    "mlp":      [("model",)],
+    "heads":    [("model",)],
+    "kv_heads": [("model",)],
+    "expert":   [("model",), ("data",)],
+    "clients":  [("pod", "data"), ("data",)],   # per-client personalized heads
+    "qkv":      [("model",)],
+    "state":    [],
+    "head_dim": [],
+    "layer":    [],
+    "conv":     [],
+    "cache_seq": [],
+})
+
+# Serving (prefill/decode): weights stay FSDP+TP sharded; batch over
+# (pod, data). The KV cache shards its *sequence* dim over "model" (kv-head
+# counts of 2-8 never divide a 16-way model axis; sequence always does) —
+# decode attention then runs as partial scores + GSPMD softmax collectives.
+SERVE_RULES = _mk({
+    "batch":    [("pod", "data"), ("data",), ("pod",)],
+    "seq":      [],
+    "embed":    [("data",)],
+    "embed2":   [],
+    "vocab":    [("model",)],
+    "mlp":      [("model",)],
+    "heads":    [("model",)],
+    "kv_heads": [],
+    "expert":   [("model",), ("data",)],
+    "clients":  [("pod", "data"), ("data",)],
+    "qkv":      [("model",)],
+    "state":    [],
+    "head_dim": [],
+    "layer":    [],
+    "conv":     [],
+    "cache_seq": [("model",)],
+})
+
+# Long-context serving (batch=1): batch is unshardable, so the KV cache
+# sequence dim takes the model axis (distributed attention: partial scores +
+# global softmax via GSPMD collectives); kv heads often indivisible anyway.
+LONGCTX_SERVE_RULES = _mk({
+    "batch":    [],
+    "seq":      [("data",)],
+    "embed":    [("data",)],
+    "embed2":   [],
+    "vocab":    [("model",)],
+    "mlp":      [("model",)],
+    "heads":    [("model",)],
+    "kv_heads": [],
+    "expert":   [("model",), ("data",)],
+    "clients":  [],
+    "qkv":      [("model",)],
+    "state":    [],
+    "head_dim": [],
+    "layer":    [],
+    "conv":     [],
+    "cache_seq": [("model",)],
+})

@@ -1,0 +1,20 @@
+"""Shared test fixtures. NOTE: no XLA device-count flags here — unit tests
+run single-device; multi-device (dist-path) tests run in subprocesses that
+set XLA_FLAGS before importing jax (see test_dist.py)."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,37 @@
+"""Distributed-path tests. Each runs in a subprocess so it can claim 8
+host devices before jax initializes (the main pytest process stays
+single-device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.abspath(os.path.join(HERE, "..", "src"))
+
+
+def _run(program: str, *args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "dist_programs", program), *args],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, (
+        f"{program} {args} failed:\nSTDOUT:{proc.stdout[-3000:]}\n"
+        f"STDERR:{proc.stderr[-3000:]}")
+    return proc.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode,mb", [("scatter", "1"), ("scatter", "2"),
+                                     ("naive", "1")])
+def test_dist_train_step(mode, mb):
+    out = _run("dist_train_step.py", mode, mb)
+    assert "DIST_TRAIN_OK" in out
+
+
+@pytest.mark.slow
+def test_dist_matches_sim():
+    out = _run("dist_vs_sim.py")
+    assert "DIST_VS_SIM_OK" in out

@@ -1,0 +1,63 @@
+"""HLO cost-model unit tests (the roofline extractor's parser)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_cost import analyze, parse_hlo
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_dot_flops_exact():
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    c = _compile(lambda x, y: x @ y, a, b)
+    t = analyze(c.as_text())
+    assert t.flops == 2 * 64 * 128 * 32, t.flops
+
+
+def test_scan_trip_count_multiplies():
+    L = 7
+
+    def f(ws, x):
+        def body(h, w):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, ws)
+        return h
+
+    ws = jax.ShapeDtypeStruct((L, 32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 32), jnp.float32)
+    t = analyze(_compile(f, ws, x).as_text())
+    assert t.flops == L * 2 * 8 * 32 * 32, t.flops
+
+
+def test_nested_scan_multiplies():
+    def f(ws, x):
+        def outer(h, w):
+            def inner(h2, _):
+                return jnp.tanh(h2 @ w), None
+            h3, _ = jax.lax.scan(inner, h, None, length=3)
+            return h3, None
+        h, _ = jax.lax.scan(outer, x, ws)
+        return h
+
+    ws = jax.ShapeDtypeStruct((5, 16, 16), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, 16), jnp.float32)
+    t = analyze(_compile(f, ws, x).as_text())
+    assert t.flops == 5 * 3 * 2 * 4 * 16 * 16, t.flops
+
+
+def test_bytes_nonzero_and_major_subset():
+    a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    c = _compile(lambda x: jnp.tanh(x @ x) @ x, a, )
+    t = analyze(c.as_text())
+    assert t.bytes > 0
+    assert 0 < t.bytes_major <= t.bytes
+
+
+def test_parser_finds_entry():
+    a = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    comps, entry = parse_hlo(_compile(lambda x: x + 1, a).as_text())
+    assert entry is not None and entry in comps

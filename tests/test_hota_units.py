@@ -1,0 +1,93 @@
+"""Single-device units for the distributed HOTA machinery (no mesh)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hota import (
+    KLASS_SALT, _fsdp_axis, build_axes_registry, fold_tags,
+)
+from repro.configs import get_smoke_config
+from repro.models.model import build_model
+from repro.models.params import logical_axes
+
+
+def test_fsdp_axis_selection():
+    assert _fsdp_axis(("embed", "mlp")) == 0
+    assert _fsdp_axis(("layer", "embed", "mlp")) == 0      # layer stripped
+    assert _fsdp_axis(("vocab", "embed")) == 1
+    assert _fsdp_axis(("mlp",)) == -1                      # replicated
+    assert _fsdp_axis(("heads", "head_dim")) == -1
+
+
+def test_fold_tags_unique_per_leaf_and_layer():
+    key = jax.random.PRNGKey(0)
+    seen = set()
+    for klass in ("layers", "embed", "final"):
+        for tag in (0, 1, 5):
+            for leaf in (0, 1, 2):
+                k = fold_tags(key, klass, (tag,), leaf)
+                seen.add(tuple(np.asarray(jax.random.key_data(k)).tolist())
+                         if hasattr(jax.random, "key_data")
+                         else tuple(np.asarray(k).tolist()))
+    assert len(seen) == 3 * 3 * 3
+
+
+@pytest.mark.parametrize("arch", ["starcoder2_3b", "zamba2_1_2b",
+                                  "xlstm_1_3b", "gemma3_12b",
+                                  "phi3_5_moe_42b"])
+def test_registry_covers_trunk_leaves(arch):
+    """Every hook call site's leaf count must match the registry — a
+    mismatch would silently mis-key the channel draws."""
+    model = build_model(get_smoke_config(arch))
+    reg = build_axes_registry(model)
+    ax = logical_axes(model.trunk_specs())
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+
+    def count(tree):
+        return len(jax.tree.leaves(tree, is_leaf=is_ax))
+
+    cfg = model.cfg
+    if cfg.family in ("dense", "moe"):
+        key = "layers" if "layers" in ax else "global"
+        assert len(reg["layers"]) == count(ax[key])
+        assert len(reg["embed"]) == 1
+    elif cfg.family == "hybrid":
+        assert len(reg["mamba"]) == count(ax["mamba"])
+        assert len(reg["shared_attn"]) == count(ax["shared_attn"])
+        assert len(reg["shared_mlp"]) == count(ax["shared_mlp"])
+    elif cfg.family == "xlstm":
+        assert len(reg["mlstm"]) == count(ax["mlstm"])
+        assert len(reg["slstm"]) == count(ax["slstm"])
+    assert len(reg["final"]) == len(jax.tree.leaves(
+        logical_axes(model.final_specs()), is_leaf=is_ax))
+
+
+def test_full_transmission_mask_region_structure():
+    """Scatter-mode full mask = concat of region masks along the FSDP axis
+    (must match the gather backward's per-region draws)."""
+    from repro.core.hota import (channel_mask_for, full_transmission_mask,
+                                 region_mask_key)
+    key = jax.random.PRNGKey(3)
+    shape, axis, n_reg = (8, 6), 0, 4
+    # no cluster axes in single-device test: use empty tuple via monkeypatch
+    # of cluster_index — instead exercise with cluster_axes=() shim:
+    import repro.core.hota as hota
+
+    def fake_cluster_index(axes):
+        return 0
+    orig = hota.cluster_index
+    hota.cluster_index = fake_cluster_index
+    try:
+        full = full_transmission_mask(key, shape, axis, n_reg, 1.0, 0.032,
+                                      jnp.float32(1.0), (), True)
+        pieces = [
+            channel_mask_for(region_mask_key(key, r), (2, 6), 1.0, 0.032,
+                             jnp.float32(1.0), ())
+            for r in range(n_reg)
+        ]
+        ref = jnp.concatenate(pieces, axis=0)
+        np.testing.assert_array_equal(np.asarray(full), np.asarray(ref))
+    finally:
+        hota.cluster_index = orig

@@ -1,0 +1,116 @@
+"""Model-zoo behaviour: forward/grad sanity + prefill/decode consistency
+for every backbone family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import (
+    HybridConfig, ModelConfig, MoEConfig, SSMConfig, XLSTMConfig,
+)
+from repro.models import build_model, init_params, lm_loss
+
+BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+            vocab_size=128, attn_block_q=16, attn_block_kv=16,
+            remat_policy="none", compute_dtype="float32")
+
+FAMILY_CONFIGS = {
+    "dense-gqa": ModelConfig(family="dense", **BASE),
+    "dense-swa": ModelConfig(family="dense", sliding_window=16, **BASE),
+    "dense-qkvbias": ModelConfig(family="dense", qkv_bias=True, **BASE),
+    "gemma3-style": ModelConfig(family="dense", local_global_ratio=2,
+                                local_window=16,
+                                **{**BASE, "n_layers": 6}),
+    "moe": ModelConfig(family="dense", moe=MoEConfig(n_experts=4, top_k=2),
+                       **BASE),
+    "mamba2": ModelConfig(family="ssm",
+                          ssm=SSMConfig(d_state=16, head_dim=16, chunk_size=8),
+                          **BASE),
+    "xlstm": ModelConfig(family="xlstm", xlstm=XLSTMConfig(slstm_every=4),
+                         **{**BASE, "n_layers": 8}),
+    "zamba2-hybrid": ModelConfig(
+        family="hybrid",
+        ssm=SSMConfig(d_state=16, head_dim=16, chunk_size=8),
+        hybrid=HybridConfig(attn_every=2, shared_attn_n_heads=4,
+                            shared_attn_n_kv=2),
+        sliding_window=16, **{**BASE, "n_layers": 5}),
+}
+
+
+@pytest.fixture(params=list(FAMILY_CONFIGS))
+def family_cfg(request):
+    return request.param, FAMILY_CONFIGS[request.param]
+
+
+def _setup(cfg):
+    m = build_model(cfg)
+    params = init_params(m.backbone_specs(), jax.random.PRNGKey(0))
+    head = init_params(m.head_specs(), jax.random.PRNGKey(1))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0,
+                              cfg.vocab_size)
+    return m, params, head, toks
+
+
+def test_forward_shapes_and_finite(family_cfg):
+    name, cfg = family_cfg
+    m, params, head, toks = _setup(cfg)
+    logits, aux, _ = m.forward_logits(params, head, toks, mode="train")
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits))), name
+    assert np.isfinite(float(aux))
+
+
+def test_grads_finite_nonzero(family_cfg):
+    name, cfg = family_cfg
+    m, params, head, toks = _setup(cfg)
+
+    def loss_fn(p):
+        lg, aux, _ = m.forward_logits(p, head, toks, mode="train")
+        return lm_loss(lg, toks) + aux
+
+    g = jax.grad(loss_fn)(params)
+    total = sum(float(jnp.sum(x.astype(jnp.float32) ** 2))
+                for x in jax.tree.leaves(g))
+    assert np.isfinite(total) and total > 0, name
+
+
+def test_decode_matches_full_forward(family_cfg):
+    """prefill(S) + decode(1) must agree with a full forward on S+1 tokens
+    (up to bf16 cache rounding)."""
+    name, cfg = family_cfg
+    m, params, head, toks = _setup(cfg)
+    extra = jax.random.randint(jax.random.PRNGKey(3), (2, 1), 0,
+                               cfg.vocab_size)
+    toks2 = jnp.concatenate([toks, extra], axis=1)
+    full, _, _ = m.forward_logits(params, head, toks2, mode="train")
+    _, _, cache = m.forward_logits(params, head, toks,
+                                   positions=jnp.arange(32), mode="prefill")
+    pos = jnp.full((2,), 32, jnp.int32)
+    dec, _, _ = m.forward_logits(params, head, toks2[:, 32:], positions=pos,
+                                 mode="decode", cache=cache)
+    err = float(jnp.max(jnp.abs(full[:, -1] - dec[:, 0])))
+    assert err < 0.02, (name, err)
+
+
+def test_causality(family_cfg):
+    """Changing a future token must not change past logits."""
+    name, cfg = family_cfg
+    m, params, head, toks = _setup(cfg)
+    logits1, _, _ = m.forward_logits(params, head, toks, mode="train")
+    toks_mut = toks.at[:, -1].set((toks[:, -1] + 1) % cfg.vocab_size)
+    logits2, _, _ = m.forward_logits(params, head, toks_mut, mode="train")
+    np.testing.assert_allclose(np.asarray(logits1[:, :-1]),
+                               np.asarray(logits2[:, :-1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_embeds_input_vlm_path():
+    """Vision/audio stub: float embeddings input instead of token ids."""
+    cfg = FAMILY_CONFIGS["dense-gqa"].replace(modality="vision")
+    m = build_model(cfg)
+    params = init_params(m.backbone_specs(), jax.random.PRNGKey(0))
+    head = init_params(m.head_specs(), jax.random.PRNGKey(1))
+    embeds = jax.random.normal(jax.random.PRNGKey(2), (2, 16, cfg.d_model))
+    logits, _, _ = m.forward_logits(params, head, embeds, mode="train")
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits)))

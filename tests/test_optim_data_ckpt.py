@@ -1,0 +1,110 @@
+"""Substrate tests: optimizer math, schedules, data pipeline, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.data.federated import FederatedBatcher
+from repro.data.lm import synthetic_lm_batches
+from repro.data.radcom import (
+    N_CLASSES, RadComConfig, TASKS, client_partition, make_radcom_dataset,
+)
+from repro.optim import (
+    adam_init, adam_update, clip_by_global_norm, cosine_decay,
+    linear_warmup_cosine,
+)
+
+
+# ----------------------------------------------------------------- optimizer
+def test_adam_matches_reference_formula():
+    p = {"w": jnp.array([1.0, -2.0])}
+    g = {"w": jnp.array([0.1, -0.3])}
+    st_ = adam_init(p)
+    p1, st_ = adam_update(g, st_, p, lr=0.01)
+    # step 1: mhat = g, vhat = g², delta = g/(|g|+eps) = sign(g)
+    want = np.array([1.0, -2.0]) - 0.01 * np.sign([0.1, -0.3])
+    np.testing.assert_allclose(np.asarray(p1["w"]), want, rtol=1e-5)
+
+
+def test_adam_converges_quadratic():
+    p = {"w": jnp.array([5.0, -3.0])}
+    st_ = adam_init(p)
+    for _ in range(500):
+        g = {"w": 2 * p["w"]}
+        p, st_ = adam_update(g, st_, p, lr=0.05)
+    assert float(jnp.max(jnp.abs(p["w"]))) < 0.05
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((4,)) * 3.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 6.0) < 1e-5
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-4
+
+
+def test_schedules():
+    s = linear_warmup_cosine(1.0, 10, 100)
+    assert float(s(jnp.array(0))) == 0.0
+    assert abs(float(s(jnp.array(10))) - 1.0) < 1e-5
+    c = cosine_decay(1.0, 100, final_frac=0.1)
+    assert float(c(jnp.array(100))) <= 0.11
+
+
+# ---------------------------------------------------------------------- data
+def test_radcom_schema():
+    data = make_radcom_dataset(RadComConfig(n_points=5000))
+    assert data["x"].shape == (5000, 256)
+    assert data["modulation"].max() < 6
+    assert data["signal"].max() < 8
+    assert set(np.unique(data["anomaly"])) <= {0, 1}
+    # anomaly definition: SNR < -4 dB
+    np.testing.assert_array_equal(data["anomaly"],
+                                  (data["snr_db"] < -4).astype(np.int64))
+
+
+def test_client_partition_tasks_distinct_within_cluster():
+    data = make_radcom_dataset(RadComConfig(n_points=3000))
+    parts = client_partition(data, 2, 3)
+    for cluster in parts:
+        tasks = [c["task"] for c in cluster]
+        assert tasks == list(TASKS)          # distinct tasks (paper Sec. II)
+        for c in cluster:
+            assert c["y"].max() < N_CLASSES[c["task"]]
+
+
+def test_batcher_flatten_client_major():
+    data = make_radcom_dataset(RadComConfig(n_points=3000))
+    parts = client_partition(data, 2, 2)
+    b = FederatedBatcher(parts, 4)
+    x, y = b.next_stacked()
+    assert x.shape == (2, 2, 4, 256)
+    flat = FederatedBatcher.flatten(x)
+    np.testing.assert_array_equal(flat[:4], x[0, 0])
+    np.testing.assert_array_equal(flat[4:8], x[0, 1])
+
+
+def test_lm_batches_deterministic():
+    it1 = synthetic_lm_batches(1000, 2, 16, seed=3)
+    it2 = synthetic_lm_batches(1000, 2, 16, seed=3)
+    t1, l1 = next(it1)
+    t2, l2 = next(it2)
+    np.testing.assert_array_equal(t1, t2)
+    np.testing.assert_array_equal(l1, l2)
+    assert t1.max() < 1000
+
+
+# ---------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"w": jnp.arange(6.0).reshape(2, 3),
+            "opt": {"mu": jnp.ones((4,), jnp.float32),
+                    "step": jnp.array(7, jnp.int32)}}
+    d = str(tmp_path)
+    save_checkpoint(d, 42, tree, {"note": "test"})
+    assert latest_step(d) == 42
+    like = jax.tree.map(jnp.zeros_like, tree)
+    back = restore_checkpoint(d, 42, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

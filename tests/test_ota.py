@@ -1,0 +1,96 @@
+"""Property tests for the OTA channel model (paper eqs. 3, 7-10)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.common.config import FLConfig
+from repro.core import ota
+
+
+def test_channel_inversion_cancellation():
+    """Faithful path (β = p/H then ×H on the MAC) must equal the fast path
+    (p·g masked) exactly — the paper's power-allocation design."""
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (1000,))
+    h = ota.sample_gain(jax.random.fold_in(key, 1), g.shape, 1.0)
+    mask = ota.gain_mask(h, 0.032)
+    p_i = jnp.float32(1.3)
+    x = ota.transmit_signal(p_i, g, h, mask)         # β ∘ g
+    received = jnp.where(mask, h * x, 0.0)           # MAC applies H
+    fast = jnp.where(mask, p_i * g, 0.0)
+    np.testing.assert_allclose(np.asarray(received), np.asarray(fast),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(10, 3000),
+    sigma2=st.floats(0.25, 4.0),
+    h_th=st.floats(0.0, 0.5),
+    seed=st.integers(0, 10_000),
+)
+def test_mask_rate_matches_gaussian_theory(n, sigma2, h_th, seed):
+    """P(|H|² ≥ th) = 2(1 − Φ(√th/σ)) — statistical property of eq. (7)."""
+    from math import erf, sqrt
+    key = jax.random.PRNGKey(seed)
+    h = ota.sample_gain(key, (n, 64), sigma2)
+    mask = ota.gain_mask(h, h_th)
+    rate = float(mask.mean())
+    phi = 0.5 * (1 + erf(sqrt(h_th) / sqrt(sigma2) / sqrt(2)))
+    expected = 2 * (1 - phi)
+    se = (expected * (1 - expected) / (n * 64)) ** 0.5
+    assert abs(rate - expected) < max(6 * se, 0.02), (rate, expected)
+
+
+def test_estimator_exact_when_noiseless_allpass():
+    """With z=0 and all channels above threshold, ĝ = mean over clusters of
+    (Σ_i p_i g_i)/N — eq. (10) reduces to the weighted average."""
+    C, N = 4, 3
+    key = jax.random.PRNGKey(1)
+    weighted = jax.random.normal(key, (C, 50))       # already Σ_i p_i g_i
+    masks = jnp.ones((C, 50), bool)
+    ghat = ota.ota_aggregate_leaf(weighted, masks, jnp.zeros(50), N)
+    np.testing.assert_allclose(np.asarray(ghat),
+                               np.asarray(weighted.mean(0) * C / (C * N)),
+                               rtol=1e-6)
+
+
+def test_estimator_guard_zero_contributors():
+    """|M_k(j)| = 0 entries are estimated as 0, never NaN/inf (guard on
+    eq. (10))."""
+    C, N = 3, 2
+    weighted = jnp.ones((C, 10))
+    masks = jnp.zeros((C, 10), bool)
+    noise = jnp.ones(10) * 5.0
+    ghat = ota.ota_aggregate_leaf(weighted, masks, noise, N)
+    np.testing.assert_array_equal(np.asarray(ghat), np.zeros(10))
+
+
+def test_ota_aggregate_tree_respects_per_cluster_sigma():
+    """σ² → 0 forces a cluster's mask empty (|H|² < th a.s.), so that
+    cluster never contributes."""
+    fl = FLConfig(n_clusters=2, n_clients=1, h_threshold=0.05,
+                  noise_std=0.0)
+    sigma2 = jnp.array([1e-12, 1.0])
+    # cluster 0 transmits huge values; they must be masked out
+    weighted = {"w": jnp.stack([jnp.full((200,), 1e6), jnp.ones((200,))])}
+    ghat = ota.ota_aggregate_tree(jax.random.PRNGKey(3), weighted, fl, sigma2)
+    assert float(jnp.max(jnp.abs(ghat["w"]))) < 1e5
+
+
+def test_final_layer_masks_consistent_with_keys():
+    """FGN masks (eq. 5) must reproduce the masks the transmission draws
+    for the same leaves (same fold-in scheme)."""
+    fl = FLConfig(n_clusters=2, n_clients=2)
+    sigma2 = jnp.ones(2)
+    tree = {"a": jnp.zeros((64,)), "b": jnp.zeros((8, 8))}
+    key = jax.random.PRNGKey(9)
+    masks1 = ota.final_layer_masks(key, tree, fl, sigma2)
+    masks2 = ota.final_layer_masks(key, tree, fl, sigma2)
+    for l1, l2 in zip(jax.tree.leaves(masks1), jax.tree.leaves(masks2)):
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    rate = float(jnp.concatenate(
+        [m.reshape(-1).astype(jnp.float32)
+         for m in jax.tree.leaves(masks1)]).mean())
+    assert 0.7 < rate < 0.95   # th=0.032, sigma=1 -> ~0.858

@@ -1,0 +1,53 @@
+"""Power-constraint math (paper eq. 4) vs Monte Carlo."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.power import (
+    calibrate_h_threshold, expected_entry_power, inv_h2_truncated_mean,
+    pass_rate,
+)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sigma2=st.floats(0.5, 2.0), h_th=st.floats(0.01, 0.5),
+       seed=st.integers(0, 100))
+def test_truncated_inverse_moment_matches_monte_carlo(sigma2, h_th, seed):
+    n = 400_000
+    h = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (n,))) \
+        * np.sqrt(sigma2)
+    mask = h * h >= h_th
+    mc = np.where(mask, 1.0 / np.maximum(h * h, 1e-20), 0.0).mean()
+    closed = float(inv_h2_truncated_mean(h_th, sigma2))
+    assert abs(mc - closed) / closed < 0.08, (mc, closed)
+
+
+def test_power_decreases_with_threshold():
+    vals = [float(expected_entry_power(1.0, 1.0, t, 1.0))
+            for t in (0.001, 0.01, 0.032, 0.1, 1.0)]
+    assert all(a > b for a, b in zip(vals, vals[1:])), vals
+
+
+def test_calibration_inverts_power():
+    p_budget = 2.5
+    th = calibrate_h_threshold(p_budget, [1.0, 1.1, 0.9], [1.0, 1.0, 1.0],
+                               1.0, n_entries=1)
+    from repro.core.power import expected_transmit_power
+    got = float(expected_transmit_power([1.0, 1.1, 0.9], [1.0] * 3,
+                                        th, 1.0, 1))
+    assert abs(got - p_budget) / p_budget < 1e-3, (got, float(th))
+
+
+def test_papers_threshold_sparsification_level():
+    """H_th = 3.2e-2 at σ²=1 transmits ~85.8% of entries (2Q(0.179))."""
+    rate = float(pass_rate(3.2e-2, 1.0))
+    assert abs(rate - 0.858) < 0.005, rate
+
+
+def test_zero_threshold_power_diverges():
+    """Inverting arbitrarily deep fades costs unbounded power — the reason
+    the paper thresholds at all."""
+    small = float(expected_entry_power(1.0, 1.0, 1e-10, 1.0))
+    ref = float(expected_entry_power(1.0, 1.0, 3.2e-2, 1.0))
+    assert small > 100 * ref

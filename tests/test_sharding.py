@@ -1,0 +1,75 @@
+"""Sharding rules + FL mesh refinement (no multi-device needed: meshes can
+be built abstractly over a device list of 1 for spec logic via mock)."""
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+import jax
+from repro.sharding.rules import SERVE_RULES, TRAIN_RULES, spec_for
+from repro.sharding.mesh_utils import fl_view
+
+
+class FakeMesh:
+    """Duck-typed mesh for spec_for (axis names + shape only)."""
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.zeros(shape)
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+FLMESH = FakeMesh((4, 4, 16), ("cluster", "client", "model"))
+PODMESH = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_embed_fsdp_mlp_tp():
+    spec = spec_for(("embed", "mlp"), TRAIN_RULES, (2560, 6912), MESH)
+    assert spec == P("data", "model")
+
+
+def test_divisibility_fallback():
+    # kv_heads = 2 cannot shard over model=16 -> replicated
+    spec = spec_for(("embed", "kv_heads", "head_dim"), TRAIN_RULES,
+                    (3072, 2, 128), MESH)
+    assert spec == P("data", None, None)
+
+
+def test_exclusivity_no_axis_reuse():
+    # expert takes model; mlp must NOT also get model
+    spec = spec_for(("expert", "embed", "mlp"), TRAIN_RULES,
+                    (16, 4096, 6400), MESH)
+    assert spec == P("model", "data", None)
+
+
+def test_expert_indivisible_falls_through():
+    # 8 experts don't divide 16; expert tries data (16) also no ->
+    # replicated; embed takes data, mlp takes model
+    spec = spec_for(("expert", "embed", "mlp"), TRAIN_RULES,
+                    (8, 6144, 16384), MESH)
+    assert spec == P(None, "data", "model")
+
+
+def test_data_translates_to_cluster_client():
+    spec = spec_for(("embed", "mlp"), TRAIN_RULES, (2560, 6912), FLMESH)
+    assert spec == P(("cluster", "client"), "model")
+
+
+def test_batch_over_pod_and_data():
+    spec = spec_for(("batch", "seq"), TRAIN_RULES, (256, 4096), PODMESH)
+    assert spec == P(("pod", "data"), None)
+
+
+def test_serve_cache_seq_over_model():
+    spec = spec_for(("batch", "cache_seq", "kv_heads", "head_dim"),
+                    SERVE_RULES, (128, 32768, 8, 128), MESH)
+    assert spec == P("data", "model", None, None)
+
+
+def test_fl_view_preserves_device_order():
+    import jax
+    devs = np.array(jax.devices())
+    if devs.size < 1:
+        pytest.skip("no devices")
+    mesh = Mesh(devs[:1].reshape(1, 1), ("data", "model"))
+    ref = fl_view(mesh, 1)
+    assert ref.axis_names == ("cluster", "client", "model")
+    assert ref.devices.flatten()[0] == mesh.devices.flatten()[0]

@@ -1,0 +1,80 @@
+"""Paper-scale simulator (Alg. 1) behaviour tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import FLConfig, ModelConfig, TrainConfig
+from repro.core.sim import HotaSim, masked_cls_loss
+from repro.data.federated import FederatedBatcher
+from repro.data.radcom import (
+    N_CLASSES, RadComConfig, TASKS, client_partition, make_radcom_dataset,
+)
+from repro.models.model import build_model
+
+
+def _make_sim(weighting="fedgradnorm", C=2, N=3, ota=True, noise=0.5,
+              sigma2=()):
+    data = make_radcom_dataset(RadComConfig(n_points=6000))
+    parts = client_partition(data, C, N)
+    batcher = FederatedBatcher(parts, 16)
+    n_cls = [N_CLASSES[TASKS[i % 3]] for i in range(N)]
+    model = build_model(ModelConfig(family="mlp"))
+    fl = FLConfig(n_clusters=C, n_clients=N, weighting=weighting, ota=ota,
+                  noise_std=noise, sigma2=sigma2)
+    sim = HotaSim(model, fl, TrainConfig(lr=3e-4), n_cls)
+    return sim, batcher
+
+
+def _run(sim, batcher, steps, seed=0):
+    state = sim.init(jax.random.PRNGKey(seed))
+    losses = []
+    for s in range(steps):
+        x, y = batcher.next_stacked()
+        state, m = sim.step(state, jnp.asarray(x), jnp.asarray(y),
+                            jax.random.PRNGKey(100 + s))
+        losses.append(np.asarray(m["loss"]).mean())
+    return state, np.array(losses), m
+
+
+@pytest.mark.slow
+def test_training_reduces_loss():
+    sim, batcher = _make_sim()
+    _, losses, m = _run(sim, batcher, 25)
+    assert losses[-5:].mean() < losses[:5].mean()
+    assert np.isfinite(losses).all()
+
+
+@pytest.mark.slow
+def test_weights_stay_normalized():
+    sim, batcher = _make_sim()
+    state, _, m = _run(sim, batcher, 10)
+    p = np.asarray(m["p"])
+    np.testing.assert_allclose(p.sum(axis=1), 3.0, rtol=1e-4)
+    assert (p > 0).all()
+
+
+@pytest.mark.slow
+def test_equal_weighting_keeps_p_one():
+    sim, batcher = _make_sim(weighting="equal")
+    _, _, m = _run(sim, batcher, 5)
+    np.testing.assert_allclose(np.asarray(m["p"]), 1.0)
+
+
+def test_masked_cls_loss_ignores_padded_classes():
+    logits = jnp.array([[2.0, 1.0, -1.0, 99.0]])   # class 3 is padding
+    labels = jnp.array([0])
+    l_masked = masked_cls_loss(logits, labels, jnp.array(3))
+    l_full = masked_cls_loss(logits, labels, jnp.array(4))
+    assert float(l_masked) < float(l_full)        # 99-logit padding excluded
+
+
+@pytest.mark.slow
+def test_ota_off_equals_noiseless_aggregation():
+    """fl.ota=False must remove both mask and noise: two runs with
+    different noise_std give identical trajectories."""
+    sim1, b1 = _make_sim(ota=False, noise=5.0)
+    sim2, b2 = _make_sim(ota=False, noise=0.0)
+    s1, l1, _ = _run(sim1, b1, 3)
+    s2, l2, _ = _run(sim2, b2, 3)
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)
