@@ -3,22 +3,22 @@
 Claim validated: the dynamic weighting trains FASTER (lower loss at equal
 epoch) on most tasks, and the hardest task's weight p rises before its
 loss drops (Fig. 2d dynamics).
+
+Both scenarios run as ONE compiled ScenarioBank sweep with common random
+numbers — the dynamic-vs-equal contrast is paired by construction.
 """
 from __future__ import annotations
 
 import sys
 
-from benchmarks.paper_common import run_experiment, summarize
+from benchmarks.paper_common import run_sweep, summarize
 
 
 def run(steps: int = 800, force: bool = False):
-    results = {
-        "fig2_hota_fgn": run_experiment(
-            "fig2_hota_fgn", weighting="fedgradnorm", steps=steps,
-            force=force),
-        "fig2_equal": run_experiment(
-            "fig2_equal", weighting="equal", steps=steps, force=force),
-    }
+    results = run_sweep({
+        "fig2_hota_fgn": dict(weighting="fedgradnorm"),
+        "fig2_equal": dict(weighting="equal"),
+    }, steps=steps, force=force)
     print(summarize(results, "Fig. 2 — dynamic vs equal (sigma²=1)"))
     return results
 

@@ -2,24 +2,23 @@
 
 Claim validated: a single degraded cluster hurts equal weighting much more
 than HOTA-FedGradNorm, which compensates via the channel-masked F_grad.
+
+Both weightings run as ONE compiled ScenarioBank sweep (shared data,
+shared channel draws — paired comparison).
 """
 from __future__ import annotations
 
 import sys
 
-from benchmarks.paper_common import run_experiment, summarize
+from benchmarks.paper_common import run_sweep, summarize
 
 
 def run(steps: int = 800, force: bool = False):
     sigma2 = (0.5,) + (1.0,) * 9
-    results = {
-        "fig3_hota_fgn": run_experiment(
-            "fig3_hota_fgn", weighting="fedgradnorm", sigma2=sigma2,
-            steps=steps, force=force),
-        "fig3_equal": run_experiment(
-            "fig3_equal", weighting="equal", sigma2=sigma2, steps=steps,
-            force=force),
-    }
+    results = run_sweep({
+        "fig3_hota_fgn": dict(weighting="fedgradnorm", sigma2=sigma2),
+        "fig3_equal": dict(weighting="equal", sigma2=sigma2),
+    }, steps=steps, force=force)
     print(summarize(results, "Fig. 3 — bad channel sigma1²=0.5"))
     return results
 
@@ -32,15 +31,11 @@ if __name__ == "__main__":
 def run_harsh(steps: int = 150, force: bool = False):
     """Supplementary: harsher regime where the bad cluster matters —
     C=3 clusters (1/3 of data behind the bad channel), σ₁² = 0.05
-    (pass rate ~0.43 at H_th=3.2e-2)."""
+    (pass rate ~0.43 at H_th=3.2e-2). Separate bank: C differs (static)."""
     sigma2 = (0.05, 1.0, 1.0)
-    results = {
-        "fig3b_harsh_hota_fgn": run_experiment(
-            "fig3b_harsh_hota_fgn", weighting="fedgradnorm", sigma2=sigma2,
-            steps=steps, n_clusters=3, force=force),
-        "fig3b_harsh_equal": run_experiment(
-            "fig3b_harsh_equal", weighting="equal", sigma2=sigma2,
-            steps=steps, n_clusters=3, force=force),
-    }
+    results = run_sweep({
+        "fig3b_harsh_hota_fgn": dict(weighting="fedgradnorm", sigma2=sigma2),
+        "fig3b_harsh_equal": dict(weighting="equal", sigma2=sigma2),
+    }, steps=steps, n_clusters=3, force=force)
     print(summarize(results, "Fig. 3b — harsh channel sigma1²=0.05, C=3"))
     return results

@@ -3,22 +3,24 @@
 
 Claim validated: HOTA-FedGradNorm is both more robust and faster to train
 under heterogeneous channel conditions.
+
+All four (σ₁², weighting) combinations run as ONE compiled ScenarioBank
+sweep — a single jit serves the whole figure.
 """
 from __future__ import annotations
 
 import sys
 
-from benchmarks.paper_common import run_experiment, summarize
+from benchmarks.paper_common import run_sweep, summarize
 
 
 def run(steps: int = 800, force: bool = False):
-    results = {}
+    experiments = {}
     for s1, tag in [(2.0, "s1_2.0"), (0.25, "s1_0.25")]:
         sigma2 = (s1, 0.75) + (1.0,) * 8
         for w in ("fedgradnorm", "equal"):
-            name = f"fig4_{tag}_{w}"
-            results[name] = run_experiment(
-                name, weighting=w, sigma2=sigma2, steps=steps, force=force)
+            experiments[f"fig4_{tag}_{w}"] = dict(weighting=w, sigma2=sigma2)
+    results = run_sweep(experiments, steps=steps, force=force)
     print(summarize(results, "Fig. 4 — diverse sigma"))
     return results
 

@@ -55,6 +55,79 @@ def run():
     return rows
 
 
+def sweep_rows(n_scenarios: int = 8, steps: int = 3, n_clusters: int = 10,
+               n_clients: int = 3, batch: int = 24):
+    """ScenarioBank (one jit, vmap over S scenarios) vs the old sequential
+    Python loop (S re-jitted HotaSims) on the paper-scale MLP config.
+    Reports steady-state per-round wall time for the WHOLE scenario set and
+    total wall including compilation."""
+    import dataclasses
+    import time as _time_mod
+
+    from repro.common.config import FLConfig, TrainConfig
+    from repro.core.paper_setup import paper_mlp_setup
+    from repro.core.sim import HotaSim
+    from repro.core.sweep import ScenarioBank
+
+    base_fl = FLConfig(n_clusters=n_clusters, n_clients=n_clients)
+    sim, batcher = paper_mlp_setup(base_fl, batch=batch, n_points=6000)
+
+    sigmas = [0.25, 0.5, 0.75, 1.0, 1.25, 1.5, 1.75, 2.0]
+    scenarios = [
+        dict(sigma2=(sigmas[s % len(sigmas)],),
+             weighting="fedgradnorm" if s % 2 == 0 else "equal")
+        for s in range(n_scenarios)
+    ]
+    batches = [[jnp.asarray(a) for a in batcher.next_stacked()]
+               for _ in range(steps + 1)]
+    keys = [jax.random.PRNGKey(s) for s in range(steps + 1)]
+
+    def _block(x):
+        jax.block_until_ready(jax.tree.leaves(x)[0])
+
+    # --- banked: one jit over all scenarios -------------------------------
+    bank = ScenarioBank(sim, scenarios)
+    t0 = _time_mod.perf_counter()
+    states = bank.init(jax.random.PRNGKey(0))
+    states, _ = bank.step(states, *batches[0], keys[0])   # compile
+    _block(states)
+    t_compile_bank = _time_mod.perf_counter() - t0
+    t0 = _time_mod.perf_counter()
+    for t in range(1, steps + 1):
+        states, _ = bank.step(states, *batches[t], keys[t])
+    _block(states)
+    bank_step = (_time_mod.perf_counter() - t0) / steps
+    bank_total = t_compile_bank + bank_step * steps
+
+    # --- sequential: one re-jitted HotaSim per scenario -------------------
+    t0 = _time_mod.perf_counter()
+    seq_steady = 0.0
+    n_cls = [int(c) for c in sim.n_classes]
+    for spec in scenarios:
+        fl_s = dataclasses.replace(base_fl, **spec)
+        sim_s = HotaSim(sim.model, fl_s, TrainConfig(lr=3e-4), n_cls)
+        st = sim_s.init(jax.random.PRNGKey(0))
+        st, _ = sim_s.step(st, *batches[0], keys[0])      # compile
+        _block(st)
+        t1 = _time_mod.perf_counter()
+        for t in range(1, steps + 1):
+            st, _ = sim_s.step(st, *batches[t], keys[t])
+        _block(st)
+        seq_steady += _time_mod.perf_counter() - t1
+    seq_total = _time_mod.perf_counter() - t0
+    seq_step = seq_steady / steps
+
+    return [
+        (f"sweep_bank_S{n_scenarios}_step", bank_step * 1e6,
+         f"total={bank_total:.2f}s(incl compile)"),
+        (f"sweep_seq_S{n_scenarios}_step", seq_step * 1e6,
+         f"total={seq_total:.2f}s(incl {n_scenarios}x compile)"),
+        (f"sweep_speedup_S{n_scenarios}", 0.0,
+         f"steady={seq_step/bank_step:.2f}x;"
+         f"end_to_end={seq_total/bank_total:.2f}x"),
+    ]
+
+
 if __name__ == "__main__":
-    for name, us, note in run():
+    for name, us, note in run() + sweep_rows():
         print(f"{name},{us:.0f},{note}")

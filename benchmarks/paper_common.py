@@ -4,6 +4,11 @@ Faithful setting (paper Sec. IV): C clusters x N=3 clients, tasks
 (modulation-6, signal-8, anomaly-2), synthetic RadComDynamic (DESIGN.md §2),
 Table-I MLP, γ=0.6, α=0.008, β=3e-4, Adam everywhere, H_th=3.2e-2,
 z ~ N(0,1). "Epoch" on the x-axis = EPOCH_STEPS global iterations.
+
+Each figure runs as ONE compiled ``ScenarioBank`` sweep (``run_sweep``):
+all of its scenarios share a single jit, a single data stream, and common
+random numbers — no Python loop over re-jitted sims. ``run_experiment``
+remains as the single-scenario convenience wrapper.
 """
 from __future__ import annotations
 
@@ -16,16 +21,100 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.config import FLConfig, ModelConfig, TrainConfig
-from repro.core.sim import HotaSim
-from repro.data.federated import FederatedBatcher
-from repro.data.radcom import (
-    N_CLASSES, RadComConfig, TASKS, client_partition, make_radcom_dataset,
-)
-from repro.models.model import build_model
+from repro.common.config import FLConfig
+from repro.core.paper_setup import paper_mlp_setup
+from repro.core.sweep import ScenarioBank
+from repro.data.radcom import TASKS
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "repro")
 EPOCH_STEPS = 10
+
+
+def _scenario_result(name: str, spec: Dict, losses: np.ndarray,
+                     ps: np.ndarray, steps: int, n_clients: int,
+                     wall_s: float, sweep_size: int) -> Dict:
+    """Per-scenario JSON payload from (steps, C, N) loss/p trajectories.
+    ``wall_s`` is the measured wall time of the WHOLE sweep this scenario
+    ran in (shared across its ``sweep_size`` scenarios — divide to
+    estimate a per-scenario share)."""
+    return {
+        "name": name,
+        "weighting": spec.get("weighting", "fedgradnorm"),
+        "sigma2": list(spec.get("sigma2", ())),
+        "steps": steps, "epoch_steps": EPOCH_STEPS,
+        "tasks": TASKS[:n_clients],
+        "loss_cluster0": losses[:, 0, :].tolist(),
+        "loss_mean_tasks": losses.mean(axis=1).tolist(),
+        "p_cluster0": ps[:, 0, :].tolist(),
+        "p_mean": ps.mean(axis=1).tolist(),
+        "final_loss_per_task": losses[-EPOCH_STEPS:].mean(axis=(0, 1)).tolist(),
+        "auc_loss_per_task": losses.mean(axis=(0, 1)).tolist(),
+        "wall_s": wall_s,
+        "sweep_size": sweep_size,
+    }
+
+
+def run_sweep(
+    experiments: Dict[str, Dict],
+    steps: int = 800,
+    n_clusters: int = 10,
+    n_clients: int = 3,
+    batch: int = 24,
+    seed: int = 0,
+    force: bool = False,
+    log_every: int = 50,
+) -> Dict[str, Dict]:
+    """Run ALL experiments as one compiled ScenarioBank sweep.
+
+    ``experiments`` maps result-name -> FLConfig channel overrides
+    (``weighting``, ``sigma2``, ``noise_std``, ``ota``). Every scenario sees
+    the same data stream and per-step keys (common random numbers), which is
+    exactly what the old sequential runner did one scenario at a time.
+    Results are cached per scenario under RESULTS_DIR.
+    """
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    paths = {n: os.path.join(RESULTS_DIR, n + ".json") for n in experiments}
+    if not force and all(os.path.exists(p) for p in paths.values()):
+        out = {}
+        for n, p in paths.items():
+            with open(p) as f:
+                out[n] = json.load(f)
+        return out
+
+    base_fl = FLConfig(n_clusters=n_clusters, n_clients=n_clients)
+    sim, batcher = paper_mlp_setup(base_fl, batch=batch, seed=seed)
+    names = list(experiments)
+    specs = [dict(experiments[n]) for n in names]
+    for sp in specs:
+        if "sigma2" in sp:
+            sp["sigma2"] = tuple(sp["sigma2"])
+    bank = ScenarioBank(sim, specs)
+    states = bank.init(jax.random.PRNGKey(seed))
+
+    losses, ps = [], []
+    t0 = time.time()
+    for step in range(steps):
+        x, y = batcher.next_stacked()
+        states, m = bank.step(states, jnp.asarray(x), jnp.asarray(y),
+                              jax.random.PRNGKey(seed * 7919 + step))
+        losses.append(np.asarray(m["loss"]))    # (S, C, N)
+        ps.append(np.asarray(m["p"]))
+        if step % log_every == 0:
+            print(f"  [sweep x{bank.n_scenarios}] step {step}/{steps} "
+                  f"loss {losses[-1].mean():.4f} "
+                  f"({(time.time()-t0)/(step+1):.2f}s/step)", flush=True)
+    wall_s = time.time() - t0
+
+    losses = np.stack(losses)   # (steps, S, C, N)
+    ps = np.stack(ps)
+    out = {}
+    for s, name in enumerate(names):
+        out[name] = _scenario_result(
+            name, specs[s], losses[:, s], ps[:, s], steps, n_clients,
+            wall_s, bank.n_scenarios)
+        with open(paths[name], "w") as f:
+            json.dump(out[name], f)
+    return out
 
 
 def run_experiment(
@@ -42,54 +131,12 @@ def run_experiment(
     force: bool = False,
     log_every: int = 50,
 ) -> Dict:
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    out_path = os.path.join(RESULTS_DIR, name + ".json")
-    if os.path.exists(out_path) and not force:
-        with open(out_path) as f:
-            return json.load(f)
-
-    data = make_radcom_dataset(RadComConfig())
-    parts = client_partition(data, n_clusters, n_clients, seed=seed)
-    batcher = FederatedBatcher(parts, batch, seed=seed + 1)
-    n_cls = [N_CLASSES[TASKS[i % 3]] for i in range(n_clients)]
-
-    model = build_model(ModelConfig(family="mlp"))
-    fl = FLConfig(n_clusters=n_clusters, n_clients=n_clients,
-                  weighting=weighting, sigma2=tuple(sigma2),
-                  noise_std=noise_std, ota=ota)
-    sim = HotaSim(model, fl, TrainConfig(lr=3e-4), n_cls)
-    state = sim.init(jax.random.PRNGKey(seed))
-
-    losses, ps = [], []
-    t0 = time.time()
-    for step in range(steps):
-        x, y = batcher.next_stacked()
-        state, m = sim.step(state, jnp.asarray(x), jnp.asarray(y),
-                            jax.random.PRNGKey(seed * 7919 + step))
-        losses.append(np.asarray(m["loss"]))
-        ps.append(np.asarray(m["p"]))
-        if step % log_every == 0:
-            print(f"  [{name}] step {step}/{steps} "
-                  f"loss {losses[-1].mean():.4f} "
-                  f"({(time.time()-t0)/(step+1):.2f}s/step)", flush=True)
-
-    losses = np.stack(losses)   # (steps, C, N)
-    ps = np.stack(ps)
-    result = {
-        "name": name, "weighting": weighting, "sigma2": list(sigma2),
-        "steps": steps, "epoch_steps": EPOCH_STEPS,
-        "tasks": TASKS[:n_clients],
-        "loss_cluster0": losses[:, 0, :].tolist(),
-        "loss_mean_tasks": losses.mean(axis=1).tolist(),
-        "p_cluster0": ps[:, 0, :].tolist(),
-        "p_mean": ps.mean(axis=1).tolist(),
-        "final_loss_per_task": losses[-EPOCH_STEPS:].mean(axis=(0, 1)).tolist(),
-        "auc_loss_per_task": losses.mean(axis=(0, 1)).tolist(),
-        "wall_s": time.time() - t0,
-    }
-    with open(out_path, "w") as f:
-        json.dump(result, f)
-    return result
+    """Single-scenario convenience wrapper (a bank of one)."""
+    return run_sweep(
+        {name: dict(weighting=weighting, sigma2=tuple(sigma2),
+                    noise_std=noise_std, ota=ota)},
+        steps=steps, n_clusters=n_clusters, n_clients=n_clients,
+        batch=batch, seed=seed, force=force, log_every=log_every)[name]
 
 
 def summarize(results: Dict[str, Dict], label: str) -> str:

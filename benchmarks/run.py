@@ -21,7 +21,10 @@ def _figure_rows(results: dict):
     """Derive the paper's claim metrics from cached loss curves."""
     rows = []
     for name, r in results.items():
-        wall_us = r.get("wall_s", 0.0) / max(r["steps"], 1) * 1e6
+        # wall_s covers the whole sweep; divide by sweep size for this
+        # scenario's share
+        wall_us = (r.get("wall_s", 0.0) / max(r.get("sweep_size", 1), 1)
+                   / max(r["steps"], 1) * 1e6)
         auc = sum(r["auc_loss_per_task"]) / len(r["auc_loss_per_task"])
         rows.append((name, wall_us, f"mean_auc_loss={auc:.4f}"))
     return rows
@@ -62,8 +65,11 @@ def main() -> None:
         pass
 
     # --- kernel microbenchmarks ------------------------------------------
-    from benchmarks.kernel_bench import run as kbench
+    from benchmarks.kernel_bench import run as kbench, sweep_rows
     rows += kbench()
+
+    # --- scenario-sweep engine: banked vs sequential ----------------------
+    rows += sweep_rows()
 
     # --- roofline table (from cached dry-run JSONs) -----------------------
     from benchmarks.roofline import load_all

@@ -1,21 +1,27 @@
 """The paper's contribution: HOTA-FedGradNorm.
 
+* channel.py      — traced ChannelParams pytree (the scenario axis)
 * ota.py          — fading-MAC channel model + OTA aggregation (eqs. 3-10)
 * fedgradnorm.py  — channel-sparsified FedGradNorm (Alg. 2, eqs. 5-6)
 * sim.py          — paper-scale faithful simulator (Alg. 1; vmap C x N)
+* sweep.py        — ScenarioBank: vmap'd multi-scenario sweeps, one jit
 * hota.py         — distributed machinery: custom-vjp OTA-FSDP gather
 * hota_step.py    — the production shard_map training step
 * power.py        — eq. (4): expected transmit power + H_th calibration
 """
+from repro.core.channel import (
+    ChannelParams, channel_params, cluster_channel, stack_channel_params,
+)
 from repro.core.fedgradnorm import (
-    FGNState, fgn_init, fgn_update, fgn_grad_p, fgn_targets, fgrad_value,
-    masked_tree_norm,
+    FGNState, fgn_init, fgn_update, fgn_update_gated, fgn_grad_p,
+    fgn_targets, fgrad_value, masked_tree_norm,
 )
 from repro.core.ota import (
     gain_mask, ota_aggregate_leaf, ota_aggregate_tree, power_allocation,
     sample_gain, transmit_signal, tree_channel,
 )
 from repro.core.sim import HotaSim, SimState, masked_cls_loss
+from repro.core.sweep import ScenarioBank
 from repro.core.hota import (
     OTACtx, build_axes_registry, make_ota_gather, make_param_hook,
 )
@@ -25,10 +31,12 @@ from repro.core.power import (
 )
 
 __all__ = [
-    "FGNState", "fgn_init", "fgn_update", "fgn_grad_p", "fgn_targets",
-    "fgrad_value", "masked_tree_norm", "gain_mask", "ota_aggregate_leaf",
-    "ota_aggregate_tree", "power_allocation", "sample_gain",
-    "transmit_signal", "tree_channel", "HotaSim", "SimState",
+    "ChannelParams", "channel_params", "cluster_channel",
+    "stack_channel_params", "ScenarioBank",
+    "FGNState", "fgn_init", "fgn_update", "fgn_update_gated", "fgn_grad_p",
+    "fgn_targets", "fgrad_value", "masked_tree_norm", "gain_mask",
+    "ota_aggregate_leaf", "ota_aggregate_tree", "power_allocation",
+    "sample_gain", "transmit_signal", "tree_channel", "HotaSim", "SimState",
     "masked_cls_loss", "OTACtx", "build_axes_registry", "make_ota_gather",
     "make_param_hook", "HotaState", "make_hota_train_step",
     "calibrate_h_threshold", "expected_transmit_power", "pass_rate",

@@ -1,0 +1,68 @@
+"""Traced channel/weighting parameters — the scenario axis of the sweep engine.
+
+``FLConfig`` is a frozen Python dataclass: its channel knobs (``sigma2``,
+``noise_std``, ``h_threshold``, ``ota``, ``weighting``) are hashed into the
+jit cache key, so every scenario historically meant a fresh trace. This
+module lifts exactly those knobs into ``ChannelParams``, a pytree of
+*arrays* that flows through the traced computation instead:
+
+* ``sigma2``      — (C,) per-cluster channel variance σ_l² (Sec. III-A)
+* ``h_threshold`` — scalar H_th of eq. (7)
+* ``noise_std``   — scalar AWGN std of eq. (8)
+* ``ota_on``      — 1.0 = fading MAC, 0.0 = error-free baseline (mask forced
+                    all-pass, noise zeroed) — the paper's "no channel" ablation
+* ``fgn_on``      — 1.0 = FedGradNorm dynamic weights (Alg. 2), 0.0 = equal
+                    weighting (the Fig. 2 naive baseline)
+
+Because every field is traced, a bank of S scenarios is just a
+``ChannelParams`` whose leaves carry a leading (S,) axis — ``vmap`` over it
+and one jit serves every scenario (see ``repro.core.sweep``).
+
+Topology knobs (``n_clusters``, ``n_clients``, ``tau_h``, ``tau_w``) and
+optimizer hyper-parameters (``gamma``, ``alpha``, ``p_min``) stay static in
+``FLConfig``: they change array shapes or scan lengths and genuinely require
+a re-trace.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import FLConfig
+
+
+class ChannelParams(NamedTuple):
+    """Runtime channel + weighting knobs as a traced pytree (see module doc)."""
+    sigma2: jax.Array        # (C,) — or scalar once cluster-indexed
+    h_threshold: jax.Array   # ()
+    noise_std: jax.Array     # ()
+    ota_on: jax.Array        # () 1.0 | 0.0
+    fgn_on: jax.Array        # () 1.0 | 0.0
+
+
+def channel_params(fl: FLConfig, n_clusters: Optional[int] = None) -> ChannelParams:
+    """Materialize the traced channel knobs of a static ``FLConfig``."""
+    c = n_clusters if n_clusters is not None else fl.n_clusters
+    return ChannelParams(
+        sigma2=jnp.asarray([fl.cluster_sigma2(i) for i in range(c)],
+                           jnp.float32),
+        h_threshold=jnp.asarray(fl.h_threshold, jnp.float32),
+        noise_std=jnp.asarray(fl.noise_std, jnp.float32),
+        ota_on=jnp.asarray(1.0 if fl.ota else 0.0, jnp.float32),
+        fgn_on=jnp.asarray(1.0 if fl.weighting == "fedgradnorm" else 0.0,
+                           jnp.float32),
+    )
+
+
+def cluster_channel(chan: ChannelParams, cluster: jax.Array | int) -> ChannelParams:
+    """This cluster's view: σ² narrowed from (C,) to a scalar."""
+    return chan._replace(sigma2=chan.sigma2[cluster])
+
+
+def stack_channel_params(chans: Sequence[ChannelParams]) -> ChannelParams:
+    """Stack S scenarios into one bank with leading (S,) on every leaf."""
+    if not chans:
+        raise ValueError("empty scenario list")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *chans)

@@ -89,6 +89,27 @@ def fgn_update(
     return p_new, FGNState(step=step, mu=mu, nu=nu), fval
 
 
+def fgn_update_gated(
+    p: jax.Array,
+    norms: jax.Array,
+    loss_ratios: jax.Array,
+    state: FGNState,
+    fl: FLConfig,
+    fgn_on: jax.Array,           # () traced gate: 1.0 = Alg. 2, 0.0 = equal
+) -> Tuple[jax.Array, FGNState, jax.Array]:
+    """Alg.-2 step behind a traced weighting gate (ChannelParams.fgn_on).
+
+    With the gate off, (p, state) pass through untouched and F_grad reads 0 —
+    exactly the static ``weighting="equal"`` branch — so dynamic-vs-equal
+    scenario pairs share one trace and differ only in this select.
+    """
+    p_fgn, st_fgn, fval = fgn_update(p, norms, loss_ratios, state, fl)
+    on = fgn_on > 0.5
+    p_new = jnp.where(on, p_fgn, p)
+    st_new = FGNState(*(jnp.where(on, a, b) for a, b in zip(st_fgn, state)))
+    return p_new, st_new, jnp.where(on, fval, 0.0)
+
+
 def masked_tree_norm(grad_tree, mask_tree) -> jax.Array:
     """‖ M ∘ g ‖ over a pytree (the n_i of eq. 6)."""
     total = jnp.zeros((), jnp.float32)

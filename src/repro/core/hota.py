@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import FLConfig, ModelConfig, TrainConfig
+from repro.core.channel import ChannelParams
 from repro.models.model import Model, lm_loss
 from repro.models.params import logical_axes
 from repro.optim.adam import adam_init, adam_update
@@ -67,6 +68,14 @@ def _zero_cot(x):
     return np.zeros(x.shape, jax.dtypes.float0)
 
 
+def _axis_size(name):
+    """jax.lax.axis_size is newer jax; psum of a literal 1 constant-folds
+    to the axis size on older versions."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
 class OTACtx(NamedTuple):
     """Traced context for the OTA backward. Passed as explicit custom_vjp
     arguments (closures over tracers break under scan)."""
@@ -88,7 +97,7 @@ def fold_tags(key: jax.Array, klass: str, tags, leaf_idx: int) -> jax.Array:
 def cluster_index(cluster_axes: Tuple[str, ...]) -> jax.Array:
     cidx = jax.lax.axis_index(cluster_axes[0])
     for a in cluster_axes[1:]:
-        cidx = cidx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        cidx = cidx * _axis_size(a) + jax.lax.axis_index(a)
     return cidx
 
 
@@ -197,8 +206,8 @@ def make_ota_gather(data_axes: Tuple[str, ...],
             # my FSDP piece = my cluster's sub-slice of my region
             cidx = jax.lax.axis_index(data_axes[1])
             for a in data_axes[2:]:
-                cidx = cidx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
-            n_sub = n_shards // jax.lax.axis_size(CLIENT_AXIS)
+                cidx = cidx * _axis_size(a) + jax.lax.axis_index(a)
+            n_sub = n_shards // n_clients   # CLIENT_AXIS size by construction
             sz = ghat_reg.shape[axis] // n_sub
             my = jax.lax.dynamic_slice_in_dim(ghat_reg, cidx * sz, sz, axis)
             return (my, jax.tree.map(_zero_cot, ctx))
@@ -215,7 +224,7 @@ def make_ota_gather(data_axes: Tuple[str, ...],
         if axis >= 0:
             me = jax.lax.axis_index(data_axes[0])
             for a in data_axes[1:]:
-                me = me * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+                me = me * _axis_size(a) + jax.lax.axis_index(a)
             sz = g.shape[axis] // n_shards
             ghat = jax.lax.dynamic_slice_in_dim(ghat, me * sz, sz, axis)
         return (ghat, jax.tree.map(_zero_cot, ctx))
@@ -264,14 +273,18 @@ def build_axes_registry(model: Model) -> Dict[str, List[tuple]]:
 
 
 def make_param_hook(gather, registry: Dict[str, List[tuple]],
-                    base_key: jax.Array, p_weight, sigma2, fl: FLConfig):
-    """hook(subtree, klass, *tags) -> gathered/OTA-wrapped subtree."""
+                    base_key: jax.Array, p_weight, chan: ChannelParams):
+    """hook(subtree, klass, *tags) -> gathered/OTA-wrapped subtree.
+
+    ``chan`` is this cluster's traced channel view (scalar σ² — see
+    ``repro.core.channel.cluster_channel``); its knobs become the OTACtx
+    consts, so sweeping scenarios never re-traces the gather."""
     consts = dict(
         p_weight=jnp.asarray(p_weight, jnp.float32),
-        sigma2=jnp.asarray(sigma2, jnp.float32),
-        h_th=jnp.asarray(fl.h_threshold, jnp.float32),
-        noise_std=jnp.asarray(fl.noise_std, jnp.float32),
-        ota_on=jnp.asarray(1.0 if fl.ota else 0.0, jnp.float32),
+        sigma2=jnp.asarray(chan.sigma2, jnp.float32),
+        h_th=jnp.asarray(chan.h_threshold, jnp.float32),
+        noise_std=jnp.asarray(chan.noise_std, jnp.float32),
+        ota_on=jnp.asarray(chan.ota_on, jnp.float32),
     )
 
     def hook(lp, klass, *tags):

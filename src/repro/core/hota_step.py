@@ -26,6 +26,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.common.config import FLConfig, TrainConfig
+from repro.core.channel import ChannelParams, channel_params, cluster_channel
 from repro.core.hota import (
     OTACtx, build_axes_registry, channel_mask_for, cluster_index, fold_tags,
     full_transmission_mask, identity_hook, make_ota_gather, make_param_hook,
@@ -37,6 +38,21 @@ from repro.models.params import init_params, logical_axes
 from repro.optim.adam import AdamState, adam_init, adam_update
 
 LOSS_CHUNK = 512
+
+
+def _shard_map(f, mesh, in_specs, out_specs, axis_names):
+    """jax.shard_map appeared in newer jax; fall back to the experimental
+    API. The fallback goes fully manual (no ``auto`` axes): on old
+    jax/jaxlib, axis_index inside a partially-manual region lowers to a
+    PartitionId op the SPMD partitioner rejects. No spec references the
+    "model" axis, so full-manual is spec-equivalent there."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=axis_names,
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
 
 
 def chunked_lm_loss(head, head_apply, feats, labels, chunk=LOSS_CHUNK):
@@ -107,8 +123,7 @@ def make_hota_train_step(
     gather = make_ota_gather(data_axes, cluster_axes, n_clients, n_shards,
                              compute_dtype, mode=fl.ota_mode)
     registry = build_axes_registry(model)
-    sigma2_arr = jnp.asarray(
-        [fl.cluster_sigma2(c) for c in range(n_total_clusters)], jnp.float32)
+    chan_all = channel_params(fl, n_clusters=n_total_clusters)
 
     head_specs = model.head_specs(n_out)
     final_axes = [a for a in jax.tree.leaves(
@@ -165,7 +180,7 @@ def make_hota_train_step(
     def _step(state: HotaState, tokens, labels, key):
         base_key = jax.random.fold_in(key, state.step)
         cidx = cluster_index(cluster_axes)
-        sigma2_c = sigma2_arr[cidx]
+        chan_c = cluster_channel(chan_all, cidx)
         head = jax.tree.map(lambda a: a[0], state.heads)
         head_opt = AdamState(step=state.head_opt.step,
                              mu=jax.tree.map(lambda a: a[0], state.head_opt.mu),
@@ -186,7 +201,7 @@ def make_hota_train_step(
         else:
             # ---- phase 0: trunk features (ω frozen; broadcast = gather) ----
             hook_fwd = make_param_hook(gather, registry, base_key, 1.0,
-                                       sigma2_c, fl)
+                                       chan_c)
             hidden, _, _ = model.trunk_apply(state.omega["trunk"], tokens,
                                              mode="train", param_hook=hook_fwd)
             hidden = jax.lax.stop_gradient(hidden)
@@ -210,7 +225,7 @@ def make_hota_train_step(
             # ---- phase B: FGN inputs + distributed Alg. 2 ----
             F_i, g_final = jax.value_and_grad(
                 lambda ff: tail_loss(ff, head))(final_full)
-            n_i = _masked_final_norm(g_final, final_axes, base_key, sigma2_c,
+            n_i = _masked_final_norm(g_final, final_axes, base_key, chan_c,
                                      fl, cluster_axes, n_clients)
             f0 = jnp.where(state.step == 0, F_i, f0_i)
             ratio = F_i / jnp.maximum(f0, 1e-12)
@@ -244,8 +259,7 @@ def make_hota_train_step(
         # identical across microbatches, so averaging the per-microbatch
         # estimates equals ONE MAC transmission of the round-averaged
         # x^(l) — exact Alg.-1 round semantics under grad accumulation.
-        hook = make_param_hook(gather, registry, base_key, p_new,
-                               sigma2_c, fl)
+        hook = make_param_hook(gather, registry, base_key, p_new, chan_c)
 
         def mb_loss(omega, hd, tok_mb, lab_mb):
             h, aux, _ = model.trunk_apply(omega["trunk"], tok_mb,
@@ -310,11 +324,11 @@ def make_hota_train_step(
         }
         return new_state, metrics
 
-    sharded_step = jax.shard_map(
+    sharded_step = _shard_map(
         _step, mesh=mesh,
         in_specs=(state_specs, batch_spec[0], batch_spec[1], P()),
         out_specs=(state_specs, metric_spec),
-        axis_names=manual_axes, check_vma=False)
+        axis_names=manual_axes)
 
     return init_fn, sharded_step, state_specs, batch_spec
 
@@ -333,19 +347,18 @@ def _plain_gather_tree(shards, axes_list, data_axes, compute_dtype):
     return jax.tree.unflatten(treedef, out)
 
 
-def _masked_final_norm(g_final, axes_list, base_key, sigma2_c, fl,
-                       cluster_axes, n_clients):
+def _masked_final_norm(g_final, axes_list, base_key, chan_c: ChannelParams,
+                       fl, cluster_axes, n_clients):
     """n_i = ‖M ∘ ∇_{ω̃}F_i‖ with the same masks the transmission uses
     (per-region draws in scatter mode — full_transmission_mask mirrors the
     gather backward's key scheme exactly)."""
     leaves = jax.tree.leaves(g_final)
     total = jnp.zeros((), jnp.float32)
-    ota_on = jnp.asarray(1.0 if fl.ota else 0.0)
     for i, (g, axes) in enumerate(zip(leaves, axes_list)):
         key = fold_tags(base_key, "final", (), i)
         mask = full_transmission_mask(
-            key, g.shape, _fsdp_axis(axes), n_clients, sigma2_c,
-            fl.h_threshold, ota_on, cluster_axes,
+            key, g.shape, _fsdp_axis(axes), n_clients, chan_c.sigma2,
+            chan_c.h_threshold, chan_c.ota_on, cluster_axes,
             scatter_mode=(fl.ota_mode == "scatter"))
         total = total + jnp.sum(
             jnp.where(mask, g.astype(jnp.float32), 0.0) ** 2)

@@ -26,7 +26,7 @@ from typing import List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.common.config import FLConfig
+from repro.core.channel import ChannelParams
 
 
 # --------------------------------------------------------------------------
@@ -114,10 +114,15 @@ def ota_aggregate_leaf(
 def ota_aggregate_tree(
     key: jax.Array,
     weighted_grads,              # pytree with leading (C, ...) leaves
-    fl: FLConfig,
-    sigma2_per_cluster: jax.Array,   # (C,)
+    chan: ChannelParams,         # traced knobs; chan.sigma2 is (C,)
+    n_clients: int,
 ):
-    """Sim-path OTA aggregation over a pytree of per-cluster weighted grads."""
+    """Sim-path OTA aggregation over a pytree of per-cluster weighted grads.
+
+    The ``ota_on`` gate is traced (no Python branch): off forces every mask
+    all-pass and zeroes the AWGN, so one jit serves fading and error-free
+    scenarios alike.
+    """
     leaves, treedef = jax.tree.flatten(weighted_grads)
     n_clusters = leaves[0].shape[0]
     out = []
@@ -126,33 +131,31 @@ def ota_aggregate_tree(
         # per-cluster gains: vmap the draw over the cluster axis
         hs = jax.vmap(
             lambda c: sample_gain(cluster_key(ks, c), wg.shape[1:],
-                                  sigma2_per_cluster[c])
+                                  chan.sigma2[c])
         )(jnp.arange(n_clusters))
-        masks = gain_mask(hs, fl.h_threshold)
+        masks = jnp.logical_or(gain_mask(hs, chan.h_threshold),
+                               chan.ota_on < 0.5)
         noise = (jax.random.normal(jax.random.fold_in(ks, 999), wg.shape[1:])
-                 * fl.noise_std if fl.ota else jnp.zeros(wg.shape[1:]))
-        if not fl.ota:
-            masks = jnp.ones_like(masks)
-        out.append(ota_aggregate_leaf(wg, masks, noise, fl.n_clients))
+                 * chan.noise_std * chan.ota_on)
+        out.append(ota_aggregate_leaf(wg, masks, noise, n_clients))
     return jax.tree.unflatten(treedef, out)
 
 
-def final_layer_masks(key: jax.Array, final_tree, fl: FLConfig,
-                      sigma2_per_cluster: jax.Array, leaf_offset: int = 0):
+def final_layer_masks(key: jax.Array, final_tree, chan: ChannelParams,
+                      leaf_offset: int = 0):
     """Masks M^(l) restricted to the last-shared-layer params ω̃, for the
     sparsified F_grad (eq. 5-7). Uses the same per-leaf keys as the full
     aggregation so FGN sees exactly the channel the transmission will use."""
     leaves, treedef = jax.tree.flatten(final_tree)
-    n_clusters = sigma2_per_cluster.shape[0]
+    n_clusters = chan.sigma2.shape[0]
     masks = []
     for i, leaf in enumerate(leaves):
         ks = leaf_key(key, leaf_offset + i)
         hs = jax.vmap(
             lambda c: sample_gain(cluster_key(ks, c), leaf.shape,
-                                  sigma2_per_cluster[c])
+                                  chan.sigma2[c])
         )(jnp.arange(n_clusters))
-        m = gain_mask(hs, fl.h_threshold)
-        if not fl.ota:
-            m = jnp.ones_like(m)
+        m = jnp.logical_or(gain_mask(hs, chan.h_threshold),
+                           chan.ota_on < 0.5)
         masks.append(m)
     return jax.tree.unflatten(treedef, masks)

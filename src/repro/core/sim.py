@@ -28,8 +28,9 @@ import jax.numpy as jnp
 
 from repro.common.config import FLConfig, TrainConfig
 from repro.core import ota
+from repro.core.channel import ChannelParams, channel_params
 from repro.core.fedgradnorm import (
-    FGNState, fgn_init, fgn_update, masked_tree_norm,
+    FGNState, fgn_init, fgn_update_gated, masked_tree_norm,
 )
 from repro.models.model import Model
 from repro.models.params import init_params
@@ -65,8 +66,9 @@ class HotaSim:
         self.tcfg = tcfg
         self.n_classes = jnp.asarray(n_classes_per_client, jnp.int32)  # (N,)
         self.max_classes = int(max_classes or int(max(n_classes_per_client)))
-        self.sigma2 = jnp.asarray(
-            [fl.cluster_sigma2(c) for c in range(fl.n_clusters)], jnp.float32)
+        # runtime channel/weighting knobs live in a traced pytree so scenario
+        # sweeps (repro.core.sweep) can batch them; this is the default row.
+        self.chan = channel_params(fl)
 
     # ------------------------------------------------------------------
     def init(self, key: jax.Array) -> SimState:
@@ -132,9 +134,24 @@ class HotaSim:
         return head, head_opt, g_avg, f_avg
 
     # ------------------------------------------------------------------
+    def step(self, state: SimState, xb, yb, key,
+             chan: ChannelParams = None):
+        """One Alg.-1 round. xb: (C,N,B,d) float32; yb: (C,N,B) int32.
+
+        ``chan`` overrides the channel/weighting knobs at trace time
+        (defaults to this sim's ``FLConfig``); the sweep engine vmaps
+        ``step_with_channel`` over a bank of them."""
+        return self._step(state, xb, yb, key,
+                          self.chan if chan is None else chan)
+
     @partial(jax.jit, static_argnums=0)
-    def step(self, state: SimState, xb, yb, key):
-        """xb: (C,N,B,d) float32; yb: (C,N,B) int32."""
+    def _step(self, state, xb, yb, key, chan):
+        return self.step_with_channel(state, xb, yb, key, chan)
+
+    def step_with_channel(self, state: SimState, xb, yb, key,
+                          chan: ChannelParams):
+        """Un-jitted step body with explicit traced ChannelParams — the
+        vmap target of ``repro.core.sweep.ScenarioBank``."""
         fl, tcfg = self.fl, self.tcfg
         upd = jax.vmap(jax.vmap(self._client_update,
                                 in_axes=(None, 0, 0, 0, 0, 0)),
@@ -150,7 +167,7 @@ class HotaSim:
         ratios = F / jnp.maximum(f0, 1e-12)
 
         final_masks = ota.final_layer_masks(
-            chan_key, state.omega["final"], fl, self.sigma2)  # leaves (C, ...)
+            chan_key, state.omega["final"], chan)   # leaves (C, ...)
 
         def cluster_norms(c):
             mask_c = jax.tree.map(lambda m: m[c], final_masks)
@@ -160,18 +177,17 @@ class HotaSim:
             )(jnp.arange(fl.n_clients))
         norms = jax.vmap(cluster_norms)(jnp.arange(fl.n_clusters))  # (C,N)
 
-        if fl.weighting == "fedgradnorm":
-            p_new, fgn_state, fval = jax.vmap(
-                lambda pc, nc, rc, st: fgn_update(pc, nc, rc, st, fl)
-            )(state.p, norms, ratios, state.fgn)
-        else:
-            p_new, fgn_state = state.p, state.fgn
-            fval = jnp.zeros((fl.n_clusters,))
+        # weighting gate is traced (chan.fgn_on): "equal" scenarios take the
+        # same trace and just select the passthrough
+        p_new, fgn_state, fval = jax.vmap(
+            lambda pc, nc, rc, st: fgn_update_gated(
+                pc, nc, rc, st, fl, chan.fgn_on)
+        )(state.p, norms, ratios, state.fgn)
 
         # --- eqs. (3), (8)-(10): weighted transmission + OTA --------------
         weighted = jax.tree.map(
             lambda gl: jnp.einsum("cn,cn...->c...", p_new, gl), g)
-        ghat = ota.ota_aggregate_tree(chan_key, weighted, fl, self.sigma2)
+        ghat = ota.ota_aggregate_tree(chan_key, weighted, chan, fl.n_clients)
 
         # --- PS update (line 20) -------------------------------------------
         omega, ps_opt = adam_update(ghat, state.ps_opt, state.omega, tcfg.lr)

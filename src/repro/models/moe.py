@@ -49,8 +49,22 @@ def _route(logits: jax.Array, top_k: int):
     return gates, mask, weights
 
 
-def moe_apply(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
-    """x: (B, S, d). Returns (y, aux_loss)."""
+def moe_apply(p, x: jax.Array, cfg: ModelConfig,
+              train: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d). Returns (y, aux_loss).
+
+    ``train=False`` (prefill/decode) disables capacity dropping: capacity
+    is a train-time compute/quality trade-off, and inference must be
+    length-invariant — a token's expert assignment cannot depend on how
+    many tokens share its group (prefill+decode must equal a full pass).
+    The dropless path runs every expert densely and weights by the top-k
+    gates: identical math to capacity=g dispatch (the FLOPs of the padded
+    einsums are the same) without materializing the (g, E, cap) one-hot
+    dispatch/combine tensors sized for worst-case all-to-one routing. It
+    still pays E/top_k times the strictly-needed expert FLOPs; a
+    sort/gather token-grouping path that computes only the selected
+    experts is the planned optimization (see ROADMAP).
+    """
     mcfg = cfg.moe
     e, k = mcfg.n_experts, mcfg.top_k
     b, s, d = x.shape
@@ -70,8 +84,16 @@ def moe_apply(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
     frac_weight = jnp.mean(weights, axis=(0, 1, 2))
     aux = e * jnp.sum(frac_tokens * frac_weight) * mcfg.aux_loss_weight
 
-    cap = int(jnp.ceil(k * g / e * mcfg.capacity_factor)) if False else \
-        max(int(k * g / e * mcfg.capacity_factor + 0.999), 1)
+    if not train:
+        # dropless inference: every expert on every token, masked by gates
+        gate_h = jnp.einsum("bngd,edf->bngef", hg, p["w_gate"].astype(h.dtype))
+        up_h = jnp.einsum("bngd,edf->bngef", hg, p["w_up"].astype(h.dtype))
+        act = jax.nn.silu(gate_h) * up_h
+        ye = jnp.einsum("bngef,efd->bnged", act, p["w_down"].astype(h.dtype))
+        y = jnp.einsum("bnge,bnged->bngd", gates.astype(h.dtype), ye)
+        return x + y.reshape(b, s, d), aux
+
+    cap = max(int(k * g / e * mcfg.capacity_factor + 0.999), 1)
 
     # position of each token within its expert queue (per group)
     pos_in_expert = jnp.cumsum(mask, axis=2) * mask - 1.0    # (B,nG,g,E)

@@ -186,7 +186,7 @@ def dense_layer_apply(p, x, cfg: ModelConfig, *, positions, window, theta,
                               cache=cache, cache_len=cache_len)
     if cfg.moe is not None:
         from repro.models.moe import moe_apply
-        x, aux = moe_apply(p["mlp"], x, cfg)
+        x, aux = moe_apply(p["mlp"], x, cfg, train=(mode == "train"))
     else:
         x = mlp_block_apply(p["mlp"], x, cfg)
         aux = jnp.zeros((), jnp.float32)

@@ -1,14 +1,103 @@
 """Shared test fixtures. NOTE: no XLA device-count flags here — unit tests
 run single-device; multi-device (dist-path) tests run in subprocesses that
-set XLA_FLAGS before importing jax (see test_dist.py)."""
+set XLA_FLAGS before importing jax (see test_dist.py).
+
+Also installs a minimal ``hypothesis`` fallback when the real package is
+absent (this container): ``@given`` runs each property test over a small
+fixed-seed sample of the strategy space instead of erroring at import.
+CI installs real hypothesis, so the full property search still runs there.
+"""
+import functools
 import os
+import random
 import sys
+import types
 
 import numpy as np
 import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis shim (fixed-seed fallback for @given)
+# ---------------------------------------------------------------------------
+
+_SHIM_EXAMPLES = 3   # deterministic draws per property test
+
+
+def _install_hypothesis_shim():
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw   # draw(random.Random) -> value
+
+    def integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    def floats(min_value, max_value, **_kw):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    def booleans():
+        return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda r: elements[r.randrange(len(elements))])
+
+    def just(value):
+        return _Strategy(lambda r: value)
+
+    def given(*_args, **strategies):
+        if _args:
+            raise TypeError("hypothesis shim supports keyword strategies only")
+
+        def deco(fn):
+            import inspect
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                for ex in range(_SHIM_EXAMPLES):
+                    r = random.Random(f"{fn.__module__}.{fn.__qualname__}:{ex}")
+                    drawn = {k: s.draw(r) for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+            # pytest must not see the strategy params (they'd look like
+            # missing fixtures) but MUST still see any real fixture params
+            # the test takes alongside @given
+            del wrapper.__wrapped__
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategies])
+            wrapper.hypothesis_shim = True
+            return wrapper
+        return deco
+
+    def settings(*_a, **_kw):
+        return lambda fn: fn
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    st_mod.floats = floats
+    st_mod.booleans = booleans
+    st_mod.sampled_from = sampled_from
+    st_mod.just = just
+
+    hyp_mod = types.ModuleType("hypothesis")
+    hyp_mod.given = given
+    hyp_mod.settings = settings
+    hyp_mod.strategies = st_mod
+    hyp_mod.HealthCheck = types.SimpleNamespace(too_slow=None)
+    hyp_mod.__is_shim__ = True
+
+    sys.modules["hypothesis"] = hyp_mod
+    sys.modules["hypothesis.strategies"] = st_mod
+
+
+try:
+    import hypothesis  # noqa: F401  (real package wins when available)
+except ImportError:
+    _install_hypothesis_shim()
 
 
 @pytest.fixture(scope="session")

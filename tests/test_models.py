@@ -75,14 +75,17 @@ def test_grads_finite_nonzero(family_cfg):
 
 
 def test_decode_matches_full_forward(family_cfg):
-    """prefill(S) + decode(1) must agree with a full forward on S+1 tokens
-    (up to bf16 cache rounding)."""
+    """prefill(S) + decode(1) must agree with a full inference pass on S+1
+    tokens (up to bf16 cache rounding). The reference is a prefill — the
+    same inference semantics the incremental path implements (train-only
+    behaviours like MoE capacity dropping are legitimately absent)."""
     name, cfg = family_cfg
     m, params, head, toks = _setup(cfg)
     extra = jax.random.randint(jax.random.PRNGKey(3), (2, 1), 0,
                                cfg.vocab_size)
     toks2 = jnp.concatenate([toks, extra], axis=1)
-    full, _, _ = m.forward_logits(params, head, toks2, mode="train")
+    full, _, _ = m.forward_logits(params, head, toks2,
+                                  positions=jnp.arange(33), mode="prefill")
     _, _, cache = m.forward_logits(params, head, toks,
                                    positions=jnp.arange(32), mode="prefill")
     pos = jnp.full((2,), 32, jnp.int32)

@@ -6,6 +6,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.common.config import FLConfig
 from repro.core import ota
+from repro.core.channel import channel_params
 
 
 def test_channel_inversion_cancellation():
@@ -71,23 +72,54 @@ def test_ota_aggregate_tree_respects_per_cluster_sigma():
     """σ² → 0 forces a cluster's mask empty (|H|² < th a.s.), so that
     cluster never contributes."""
     fl = FLConfig(n_clusters=2, n_clients=1, h_threshold=0.05,
-                  noise_std=0.0)
-    sigma2 = jnp.array([1e-12, 1.0])
+                  noise_std=0.0, sigma2=(1e-12, 1.0))
+    chan = channel_params(fl)
     # cluster 0 transmits huge values; they must be masked out
     weighted = {"w": jnp.stack([jnp.full((200,), 1e6), jnp.ones((200,))])}
-    ghat = ota.ota_aggregate_tree(jax.random.PRNGKey(3), weighted, fl, sigma2)
+    ghat = ota.ota_aggregate_tree(jax.random.PRNGKey(3), weighted, chan,
+                                  fl.n_clients)
     assert float(jnp.max(jnp.abs(ghat["w"]))) < 1e5
+
+
+def test_tree_estimator_zero_when_all_below_threshold():
+    """|M_k| = 0 everywhere (every gain below H_th): ĝ must be exactly 0 on
+    every leaf — never NaN/inf — even with noise present (eq. 10 guard)."""
+    fl = FLConfig(n_clusters=3, n_clients=2, h_threshold=0.5,
+                  noise_std=5.0, sigma2=(1e-14,))
+    chan = channel_params(fl)
+    weighted = {"w": jnp.full((3, 100), 1e6), "b": jnp.ones((3, 4, 4))}
+    ghat = ota.ota_aggregate_tree(jax.random.PRNGKey(11), weighted, chan,
+                                  fl.n_clients)
+    for leaf in jax.tree.leaves(ghat):
+        arr = np.asarray(leaf)
+        assert np.isfinite(arr).all()
+        np.testing.assert_array_equal(arr, np.zeros_like(arr))
+
+
+def test_ota_off_equals_plain_weighted_mean():
+    """ota=False removes mask AND noise: ĝ = (Σ_l Σ_i p_i g_i) / (C·N) — a
+    plain weighted mean over all C·N clients (error-free baseline)."""
+    fl = FLConfig(n_clusters=4, n_clients=3, noise_std=7.0, ota=False)
+    chan = channel_params(fl)
+    key = jax.random.PRNGKey(5)
+    weighted = {"w": jax.random.normal(key, (4, 64)),
+                "b": jax.random.normal(jax.random.fold_in(key, 1), (4, 8, 2))}
+    ghat = ota.ota_aggregate_tree(jax.random.PRNGKey(2), weighted, chan,
+                                  fl.n_clients)
+    for g, wg in zip(jax.tree.leaves(ghat), jax.tree.leaves(weighted)):
+        ref = np.asarray(wg).sum(axis=0) / (fl.n_clusters * fl.n_clients)
+        np.testing.assert_allclose(np.asarray(g), ref, rtol=1e-6, atol=1e-7)
 
 
 def test_final_layer_masks_consistent_with_keys():
     """FGN masks (eq. 5) must reproduce the masks the transmission draws
     for the same leaves (same fold-in scheme)."""
     fl = FLConfig(n_clusters=2, n_clients=2)
-    sigma2 = jnp.ones(2)
+    chan = channel_params(fl)
     tree = {"a": jnp.zeros((64,)), "b": jnp.zeros((8, 8))}
     key = jax.random.PRNGKey(9)
-    masks1 = ota.final_layer_masks(key, tree, fl, sigma2)
-    masks2 = ota.final_layer_masks(key, tree, fl, sigma2)
+    masks1 = ota.final_layer_masks(key, tree, chan)
+    masks2 = ota.final_layer_masks(key, tree, chan)
     for l1, l2 in zip(jax.tree.leaves(masks1), jax.tree.leaves(masks2)):
         np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
     rate = float(jnp.concatenate(

@@ -1,0 +1,121 @@
+"""ScenarioBank: vectorized sweep vs sequential oracle + common random numbers."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import FLConfig, TrainConfig
+from repro.core import ota
+from repro.core.channel import channel_params, stack_channel_params
+from repro.core.paper_setup import paper_mlp_setup
+from repro.core.sim import HotaSim
+from repro.core.sweep import ScenarioBank
+
+C, N = 2, 3
+
+
+def _setup(base_fl: FLConfig):
+    sim, batcher = paper_mlp_setup(base_fl, batch=8, n_points=3000)
+    n_cls = [int(c) for c in sim.n_classes]
+    return sim, batcher, sim.model, n_cls
+
+
+SCENARIOS = [
+    dict(),                                        # baseline fading MAC + FGN
+    dict(weighting="equal"),                       # Fig. 2 naive baseline
+    dict(sigma2=(0.05, 1.0)),                      # Fig. 3 bad channel
+    dict(sigma2=(2.0, 0.75)),                      # Fig. 4 diverse sigma
+    dict(sigma2=(0.25, 0.75), weighting="equal"),
+    dict(noise_std=3.0),
+    dict(ota=False),                               # error-free baseline
+    dict(ota=False, weighting="equal"),
+]
+
+
+@pytest.mark.slow
+def test_bank_matches_sequential_oracle():
+    """A single-jit bank of 8 scenarios must reproduce 8 sequential
+    per-scenario HotaSim runs leaf-for-leaf (states AND metrics)."""
+    base_fl = FLConfig(n_clusters=C, n_clients=N)
+    sim, batcher, model, n_cls = _setup(base_fl)
+    bank = ScenarioBank(sim, SCENARIOS)
+    assert bank.n_scenarios == 8
+
+    steps = 3
+    key0 = jax.random.PRNGKey(0)
+    batches = [batcher.next_stacked() for _ in range(steps)]
+    step_keys = [jax.random.PRNGKey(100 + s) for s in range(steps)]
+
+    states = bank.init(key0)
+    bank_ms = []
+    for (x, y), k in zip(batches, step_keys):
+        states, m = bank.step(states, jnp.asarray(x), jnp.asarray(y), k)
+        bank_ms.append(m)
+
+    for s, overrides in enumerate(SCENARIOS):
+        fl_s = dataclasses.replace(base_fl, **overrides)
+        seq = HotaSim(model, fl_s, TrainConfig(lr=3e-4), n_cls)
+        st = seq.init(key0)
+        for t, ((x, y), k) in enumerate(zip(batches, step_keys)):
+            st, m = seq.step(st, jnp.asarray(x), jnp.asarray(y), k)
+            for a, b in zip(jax.tree.leaves(m),
+                            jax.tree.leaves(
+                                jax.tree.map(lambda z: z[s], bank_ms[t]))):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=2e-4, atol=1e-5)
+        for a, b in zip(jax.tree.leaves(st),
+                        jax.tree.leaves(bank.scenario_state(states, s))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=1e-5)
+
+
+def test_common_random_numbers_share_channel_masks():
+    """Two scenarios differing ONLY in weighting draw identical channel
+    masks from the shared per-step key — the CRN guarantee behind paired
+    dynamic-vs-equal comparisons."""
+    fl_dyn = FLConfig(n_clusters=C, n_clients=N, weighting="fedgradnorm")
+    fl_eq = dataclasses.replace(fl_dyn, weighting="equal")
+    bank = stack_channel_params([channel_params(fl_dyn),
+                                 channel_params(fl_eq)])
+    tree = {"w": jnp.zeros((16, 8)), "b": jnp.zeros((8,))}
+    key = jax.random.PRNGKey(42)
+    masks = jax.vmap(lambda ch: ota.final_layer_masks(key, tree, ch))(bank)
+    for leaf in jax.tree.leaves(masks):
+        np.testing.assert_array_equal(np.asarray(leaf[0]),
+                                      np.asarray(leaf[1]))
+        # and the masks are non-trivial (some pass, some blocked)
+        frac = np.asarray(leaf[0], np.float32).mean()
+        assert 0.0 < frac < 1.0
+
+
+@pytest.mark.slow
+def test_crn_equalizes_grad_norms_across_weighting():
+    """End-to-end CRN: from identical init, the first round's masked grad
+    norms must be bit-identical between the dynamic and equal scenarios
+    (same data, same gains, same masks — only the p-update differs)."""
+    base_fl = FLConfig(n_clusters=C, n_clients=N)
+    sim, batcher, _, _ = _setup(base_fl)
+    bank = ScenarioBank(sim, [dict(), dict(weighting="equal")])
+    states = bank.init(jax.random.PRNGKey(1))
+    # drive via run(): metrics come back stacked (T, S, ...)
+    states, hist = bank.run(states, [batcher.next_stacked()],
+                            [jax.random.PRNGKey(7)])
+    m = jax.tree.map(lambda a: a[0], hist)
+    norms = np.asarray(m["grad_norms"])           # (S, C, N)
+    np.testing.assert_array_equal(norms[0], norms[1])
+    # the weighting gate did diverge p
+    p = np.asarray(m["p"])
+    assert not np.allclose(p[0], p[1])
+    np.testing.assert_allclose(p[1], 1.0)
+
+
+def test_bank_rejects_static_mismatch():
+    base_fl = FLConfig(n_clusters=C, n_clients=N)
+    sim, _, _, _ = _setup(base_fl)
+    with pytest.raises(ValueError, match="n_clients"):
+        ScenarioBank(sim, [dict(), dict(n_clients=N + 1)])
+    # non-traced knobs are rejected too, not silently dropped
+    with pytest.raises(ValueError, match="ota_mode"):
+        ScenarioBank(sim, [dict(ota_mode="naive")])
