@@ -35,57 +35,81 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="recompute paper figures at full length")
     ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--kernels", action="store_true",
+                    help="kernel/packed/sweep rows only (skip paper figures "
+                         "and roofline)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast variant of every kernel row (CI)")
+    ap.add_argument("--json", nargs="?", const="BENCH_kernels.json",
+                    default=None, metavar="PATH",
+                    help="also write the kernel rows to PATH as JSON "
+                         "(default BENCH_kernels.json) — the perf "
+                         "trajectory artifact")
     args, _ = ap.parse_known_args()
 
     rows = []
 
-    # --- paper figures (Figs. 2-4) ---------------------------------------
-    steps = args.steps or (500 if args.full else 40)
-    from benchmarks.fig2_dynamic_vs_equal import run as fig2
-    from benchmarks.fig3_bad_channel import run as fig3
-    from benchmarks.fig4_diverse_sigma import run as fig4
-    rows += _figure_rows(fig2(steps=steps))
-    rows += _figure_rows(fig3(steps=steps))
-    rows += _figure_rows(fig4(steps=steps))
+    if not args.kernels:
+        # --- paper figures (Figs. 2-4) -----------------------------------
+        steps = args.steps or (500 if args.full else 40)
+        from benchmarks.fig2_dynamic_vs_equal import run as fig2
+        from benchmarks.fig3_bad_channel import run as fig3
+        from benchmarks.fig4_diverse_sigma import run as fig4
+        rows += _figure_rows(fig2(steps=steps))
+        rows += _figure_rows(fig3(steps=steps))
+        rows += _figure_rows(fig4(steps=steps))
 
-    # claim check: dynamic beats equal on loss-AUC (Fig. 2 headline)
-    try:
-        from benchmarks.paper_common import RESULTS_DIR
-        for fig in ("fig2", "fig3"):
-            with open(os.path.join(RESULTS_DIR, f"{fig}_hota_fgn.json")) as f:
-                dyn = json.load(f)
-            with open(os.path.join(RESULTS_DIR, f"{fig}_equal.json")) as f:
-                eq = json.load(f)
-            adv = (sum(eq["auc_loss_per_task"])
-                   - sum(dyn["auc_loss_per_task"]))
-            rows.append((f"{fig}_claim_dynamic_faster", 0.0,
-                         f"auc_advantage={adv:+.4f} "
-                         f"({'PASS' if adv > 0 else 'CHECK'})"))
-    except FileNotFoundError:
-        pass
+        # claim check: dynamic beats equal on loss-AUC (Fig. 2 headline)
+        try:
+            from benchmarks.paper_common import RESULTS_DIR
+            for fig in ("fig2", "fig3"):
+                with open(os.path.join(RESULTS_DIR,
+                                       f"{fig}_hota_fgn.json")) as f:
+                    dyn = json.load(f)
+                with open(os.path.join(RESULTS_DIR, f"{fig}_equal.json")) as f:
+                    eq = json.load(f)
+                adv = (sum(eq["auc_loss_per_task"])
+                       - sum(dyn["auc_loss_per_task"]))
+                rows.append((f"{fig}_claim_dynamic_faster", 0.0,
+                             f"auc_advantage={adv:+.4f} "
+                             f"({'PASS' if adv > 0 else 'CHECK'})"))
+        except FileNotFoundError:
+            pass
 
     # --- kernel microbenchmarks ------------------------------------------
-    from benchmarks.kernel_bench import run as kbench, sweep_rows
-    rows += kbench()
+    from benchmarks.kernel_bench import packed_rows, run as kbench, sweep_rows
+    kernel_rows = kbench()
+
+    # --- flat-packed OTA engine vs per-leaf jnp path ----------------------
+    kernel_rows += packed_rows(quick=args.smoke)
 
     # --- scenario-sweep engine: banked vs sequential ----------------------
-    rows += sweep_rows()
+    if not args.smoke:
+        kernel_rows += sweep_rows()
+    rows += kernel_rows
 
-    # --- roofline table (from cached dry-run JSONs) -----------------------
-    from benchmarks.roofline import load_all
-    dr = load_all()
-    ok = [r for r in dr if r["status"] == "ok"]
-    skipped = [r for r in dr if r["status"] == "skipped"]
-    err = [r for r in dr if r["status"] == "error"]
-    rows.append(("dryrun_pairs", 0.0,
-                 f"ok={len(ok)} skipped={len(skipped)} error={len(err)} "
-                 f"total={len(dr)}"))
-    for r in ok:
-        rl = r["roofline"]
-        rows.append((
-            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}", 0.0,
-            f"dom={rl['dominant']};c={rl['compute_s']:.3f}s;"
-            f"m={rl['memory_s']:.3f}s;coll={rl['collective_s']:.3f}s"))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": [
+                {"name": n, "us_per_call": round(us, 1), "derived": d}
+                for n, us, d in kernel_rows]}, f, indent=1)
+
+    if not args.kernels:
+        # --- roofline table (from cached dry-run JSONs) -------------------
+        from benchmarks.roofline import load_all
+        dr = load_all()
+        ok = [r for r in dr if r["status"] == "ok"]
+        skipped = [r for r in dr if r["status"] == "skipped"]
+        err = [r for r in dr if r["status"] == "error"]
+        rows.append(("dryrun_pairs", 0.0,
+                     f"ok={len(ok)} skipped={len(skipped)} error={len(err)} "
+                     f"total={len(dr)}"))
+        for r in ok:
+            rl = r["roofline"]
+            rows.append((
+                f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}", 0.0,
+                f"dom={rl['dominant']};c={rl['compute_s']:.3f}s;"
+                f"m={rl['memory_s']:.3f}s;coll={rl['collective_s']:.3f}s"))
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

@@ -1,0 +1,176 @@
+"""Flat-packing of parameter pytrees for the fused OTA aggregation engine.
+
+The paper's channel model is per-entry: every parameter entry j gets its
+own gain draw, threshold test and superposition (eqs. 7-10) — nothing in
+the math cares about the pytree structure. The per-leaf implementation in
+``repro.core.ota`` therefore pays pure overhead: dozens of small
+memory-bound kernels (one gain/mask/noise draw per leaf per cluster) per
+round, multiplied by the scenario count under ``ScenarioBank``.
+
+``TreePacker`` ravels the shared-model pytree ONCE into a lane-aligned
+``(P,)`` slab with static per-leaf offsets, so the whole round's channel
+can be drawn, thresholded and aggregated in a single fused Pallas pass
+(``repro.kernels.ota_channel.ota_aggregate``).
+
+Layout contract (relied on by ``repro.core.ota.final_layer_masks_packed``):
+
+* leaves are packed in flatten order, **except** the leaves of the
+  ``tail`` subtree (the last-shared-layer params ω̃), which are packed
+  last, forming one contiguous tail slice of the slab;
+* the head and tail sections are each zero-padded up to a multiple of
+  ``ROW_QUANTUM`` (= 8·128), so every section — and the whole slab —
+  reshapes exactly to the kernels' (rows, 128) view and each section can
+  be drawn from its own counter-based bit stream;
+* FedGradNorm's sparsified F_grad (eqs. 5-7) needs exactly the masks of
+  ω̃: with this layout they are the tail slice of the same flat channel
+  draw the transmission uses — no second per-leaf mask loop.
+
+Packers are cached on (treedef, shapes, dtypes, tail), so tracing a step
+re-uses the offsets computed at the first call.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import jax.tree_util as jtu
+
+from repro.kernels.slab import LANE, ROW_QUANTUM, round_up
+
+
+class LeafSlot(NamedTuple):
+    offset: int                # start index into the (P,) slab
+    size: int                  # element count
+    shape: Tuple[int, ...]
+    dtype: Any
+
+
+def _in_tail(path, tail: Optional[str]) -> bool:
+    if tail is None or not path:
+        return False
+    step = path[0]
+    key = getattr(step, "key", getattr(step, "name", None))
+    return key == tail
+
+
+class TreePacker:
+    """Static pack/unpack between a pytree and a lane-aligned (P,) slab.
+
+    ``tail`` names a top-level key of ``template`` (usually ``"final"``)
+    whose leaves are laid out as the contiguous tail of the slab; pass
+    ``None`` to pack everything as one head section.
+    """
+
+    def __init__(self, template, tail: Optional[str] = "final"):
+        paths_leaves, treedef = jtu.tree_flatten_with_path(template)
+        self.treedef = treedef
+        self.tail_name = tail
+
+        head_idx = [i for i, (p, _) in enumerate(paths_leaves)
+                    if not _in_tail(p, tail)]
+        tail_idx = [i for i, (p, _) in enumerate(paths_leaves)
+                    if _in_tail(p, tail)]
+        # pack order: head leaves in flatten order, tail leaves last
+        self.order: List[int] = head_idx + tail_idx
+        self.tail_indices = tail_idx
+
+        self.slots: Dict[int, LeafSlot] = {}
+        off = 0
+        for i in head_idx:
+            leaf = paths_leaves[i][1]
+            self.slots[i] = LeafSlot(off, int(leaf.size), tuple(leaf.shape),
+                                     jnp.dtype(leaf.dtype))
+            off += int(leaf.size)
+        self.head_len = round_up(off, ROW_QUANTUM)      # section boundary
+        off = self.head_len
+        for i in tail_idx:
+            leaf = paths_leaves[i][1]
+            self.slots[i] = LeafSlot(off, int(leaf.size), tuple(leaf.shape),
+                                     jnp.dtype(leaf.dtype))
+            off += int(leaf.size)
+        self.tail_len = round_up(off - self.head_len, ROW_QUANTUM)
+        self.size = self.head_len + self.tail_len       # P, lane-aligned
+        if self.size == 0:
+            raise ValueError("cannot pack an empty pytree")
+        self.n_rows = self.size // LANE
+
+    # ------------------------------------------------------------------
+    def pack(self, tree) -> jax.Array:
+        """Pytree -> (..., P) f32 slab (section padding stays zero).
+
+        Leaves may carry identical leading batch dims (e.g. the (C,)
+        cluster axis — compare against ``slots[i].shape``); the batch
+        axes are preserved: output is (*batch, P).
+
+        Implementation note: a chain of static dynamic_update_slices into
+        a zeros slab, NOT one big concatenate — XLA updates the buffer in
+        place, while a wide concatenate of odd-sized segments falls off
+        the vectorized copy path (~10x slower at 16M params on CPU).
+        """
+        leaves = self.treedef.flatten_up_to(tree)
+        i0 = self.order[0]
+        nb = leaves[i0].ndim - len(self.slots[i0].shape)
+        batch = tuple(leaves[i0].shape[:nb])
+        slab = jnp.zeros(batch + (self.size,), jnp.float32)
+        for i in self.order:
+            piece = leaves[i].astype(jnp.float32).reshape(batch + (-1,))
+            slab = jax.lax.dynamic_update_slice(
+                slab, piece, (0,) * nb + (self.slots[i].offset,))
+        return slab
+
+    # ------------------------------------------------------------------
+    def unpack(self, slab: jax.Array):
+        """(..., P) slab -> pytree with leaves (..., *shape)."""
+        batch = slab.shape[:-1]
+        leaves = [None] * len(self.slots)
+        for i, slot in self.slots.items():
+            piece = jax.lax.slice_in_dim(slab, slot.offset,
+                                         slot.offset + slot.size, axis=-1)
+            leaves[i] = piece.reshape(batch + slot.shape).astype(slot.dtype)
+        return self.treedef.unflatten(leaves)
+
+    # ------------------------------------------------------------------
+    def tail_slice(self, slab: jax.Array) -> jax.Array:
+        """The contiguous last-shared-layer tail of a (..., P) slab."""
+        return jax.lax.slice_in_dim(slab, self.head_len, self.size, axis=-1)
+
+    def unpack_tail(self, tail_slab: jax.Array):
+        """(..., tail_len) tail slice -> the ``tail`` subtree's pytree,
+        leaves (..., *shape) — dtype is NOT cast (masks stay bool etc.)."""
+        batch = tail_slab.shape[:-1]
+        sub_leaves = []
+        for i in self.tail_indices:
+            slot = self.slots[i]
+            off = slot.offset - self.head_len
+            piece = jax.lax.slice_in_dim(tail_slab, off, off + slot.size,
+                                         axis=-1)
+            sub_leaves.append(piece.reshape(batch + slot.shape))
+        full = self.treedef.unflatten(list(range(len(self.slots))))
+        _, tail_def = jtu.tree_flatten(full[self.tail_name])
+        return jtu.tree_unflatten(tail_def, sub_leaves)
+
+
+# ---------------------------------------------------------------------------
+# packer cache — keyed on static structure, reused across traces
+# ---------------------------------------------------------------------------
+
+_PACKER_CACHE: Dict[Any, TreePacker] = {}
+
+
+def packer_for(tree, tail: Optional[str] = "final") -> TreePacker:
+    """Cached TreePacker for ``tree``'s (treedef, shapes, dtypes, tail).
+
+    ``tree`` may hold arrays, tracers or ShapeDtypeStructs — only the
+    static structure is read.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    key = (treedef, tuple((tuple(l.shape), jnp.dtype(l.dtype).name)
+                          for l in leaves), tail)
+    packer = _PACKER_CACHE.get(key)
+    if packer is None:
+        packer = TreePacker(
+            treedef.unflatten([jax.ShapeDtypeStruct(tuple(l.shape), l.dtype)
+                               for l in leaves]), tail)
+        _PACKER_CACHE[key] = packer
+    return packer

@@ -17,13 +17,15 @@ from repro.core.fedgradnorm import (
     fgn_targets, fgrad_value, masked_tree_norm,
 )
 from repro.core.ota import (
-    gain_mask, ota_aggregate_leaf, ota_aggregate_tree, power_allocation,
-    sample_gain, transmit_signal, tree_channel,
+    final_layer_masks_packed, gain_mask, ota_aggregate_leaf,
+    ota_aggregate_packed, ota_aggregate_tree, packed_gain_bits,
+    power_allocation, sample_gain, transmit_signal, tree_channel,
 )
 from repro.core.sim import HotaSim, SimState, masked_cls_loss
 from repro.core.sweep import ScenarioBank
 from repro.core.hota import (
-    OTACtx, build_axes_registry, make_ota_gather, make_param_hook,
+    OTACtx, build_axes_registry, make_ota_gather, make_packed_final_gather,
+    make_param_hook, packed_final_norm,
 )
 from repro.core.hota_step import HotaState, make_hota_train_step
 from repro.core.power import (
@@ -35,9 +37,11 @@ __all__ = [
     "stack_channel_params", "ScenarioBank",
     "FGNState", "fgn_init", "fgn_update", "fgn_update_gated", "fgn_grad_p",
     "fgn_targets", "fgrad_value", "masked_tree_norm", "gain_mask",
-    "ota_aggregate_leaf", "ota_aggregate_tree", "power_allocation",
+    "final_layer_masks_packed", "ota_aggregate_leaf", "ota_aggregate_packed",
+    "ota_aggregate_tree", "packed_gain_bits", "power_allocation",
     "sample_gain", "transmit_signal", "tree_channel", "HotaSim", "SimState",
     "masked_cls_loss", "OTACtx", "build_axes_registry", "make_ota_gather",
-    "make_param_hook", "HotaState", "make_hota_train_step",
+    "make_packed_final_gather", "make_param_hook", "packed_final_norm",
+    "HotaState", "make_hota_train_step",
     "calibrate_h_threshold", "expected_transmit_power", "pass_rate",
 ]

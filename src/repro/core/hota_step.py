@@ -29,7 +29,8 @@ from repro.common.config import FLConfig, TrainConfig
 from repro.core.channel import ChannelParams, channel_params, cluster_channel
 from repro.core.hota import (
     OTACtx, build_axes_registry, channel_mask_for, cluster_index, fold_tags,
-    full_transmission_mask, identity_hook, make_ota_gather, make_param_hook,
+    full_transmission_mask, identity_hook, make_ota_gather,
+    make_packed_final_gather, make_param_hook, packed_final_norm,
     shard_specs_for, _fsdp_axis, _is_axes, _mesh_client_axes,
     _mesh_cluster_axes, _mesh_data_axes,
 )
@@ -128,6 +129,11 @@ def make_hota_train_step(
     head_specs = model.head_specs(n_out)
     final_axes = [a for a in jax.tree.leaves(
         logical_axes(model.final_specs()), is_leaf=_is_axes)]
+    # ω̃ rides the flat-packed OTA path: one slab, one fused mask kernel,
+    # one set of psums for the whole subtree (see make_packed_final_gather).
+    final_gather = (make_packed_final_gather(
+        data_axes, cluster_axes, n_clients, n_shards, compute_dtype,
+        final_axes) if fl.use_pallas_ota else None)
 
     if loss_kind == "lm":
         loss_fn = lambda head, feats, labels: chunked_lm_loss(
@@ -225,8 +231,12 @@ def make_hota_train_step(
             # ---- phase B: FGN inputs + distributed Alg. 2 ----
             F_i, g_final = jax.value_and_grad(
                 lambda ff: tail_loss(ff, head))(final_full)
-            n_i = _masked_final_norm(g_final, final_axes, base_key, chan_c,
-                                     fl, cluster_axes, n_clients)
+            if final_gather is not None:
+                n_i = packed_final_norm(g_final, base_key, chan_c,
+                                        cluster_axes)
+            else:
+                n_i = _masked_final_norm(g_final, final_axes, base_key,
+                                         chan_c, fl, cluster_axes, n_clients)
             f0 = jnp.where(state.step == 0, F_i, f0_i)
             ratio = F_i / jnp.maximum(f0, 1e-12)
 
@@ -259,7 +269,8 @@ def make_hota_train_step(
         # identical across microbatches, so averaging the per-microbatch
         # estimates equals ONE MAC transmission of the round-averaged
         # x^(l) — exact Alg.-1 round semantics under grad accumulation.
-        hook = make_param_hook(gather, registry, base_key, p_new, chan_c)
+        hook = make_param_hook(gather, registry, base_key, p_new, chan_c,
+                               final_packed_gather=final_gather)
 
         def mb_loss(omega, hd, tok_mb, lab_mb):
             h, aux, _ = model.trunk_apply(omega["trunk"], tok_mb,

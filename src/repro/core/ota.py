@@ -15,9 +15,24 @@ faithful-but-redundant inversion is implemented in ``faithful=True`` mode
 (used by property tests to verify the cancellation); the fast path sums the
 masked weighted gradients directly, which is bit-for-bit the same math.
 
-All functions operate leaf-wise on pytrees; per-leaf channel keys are
-derived with ``fold_in(cluster_key, leaf_index)``, which realizes the
-paper's "one i.i.d. gain per parameter entry" over an arbitrary pytree.
+Two implementations share the math:
+
+* the **per-leaf path** (this module's historical core) walks the pytree,
+  drawing gains/masks/noise per leaf per cluster with ``jax.random`` —
+  the readable oracle the property tests pin everything to;
+* the **flat-packed path** (``ota_aggregate_packed``) ravels the whole
+  tree into a lane-aligned slab (``repro.common.flatpack.TreePacker``)
+  and runs eqs. 7-10 for every parameter of every cluster in ONE fused
+  Pallas kernel (``repro.kernels.ota_channel.ota_aggregate``); the
+  last-shared-layer masks FedGradNorm needs (eq. 5) are the tail slice
+  of the same flat draw (``final_layer_masks_packed``).
+
+Per-leaf channel keys are derived with ``fold_in(cluster_key, leaf_index)``,
+which realizes the paper's "one i.i.d. gain per parameter entry" over an
+arbitrary pytree. Noise keys live in a disjoint fold-in domain
+(``NOISE_FOLD``, near 2³¹) so they can never collide with a cluster
+index; the packed path folds section salts (``PACKED_*_FOLD``) from the
+same reserved range.
 """
 from __future__ import annotations
 
@@ -26,12 +41,25 @@ from typing import List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.common.flatpack import TreePacker
 from repro.core.channel import ChannelParams
+from repro.kernels.ota_channel.kernel import CHUNK_ROWS
+from repro.kernels.ota_channel.ops import _ON_TPU, _ota_aggregate_fused_impl
+from repro.kernels.ota_channel.ref import bits_to_mask
+from repro.kernels.slab import LANE
 
 
 # --------------------------------------------------------------------------
-# per-leaf channel draws
+# key schedule
 # --------------------------------------------------------------------------
+# Reserved fold-in values near 2³¹ — structurally disjoint from cluster and
+# leaf indices (both bounded by topology sizes far below 2³¹). The noise
+# fold used to be 999, which collided with cluster_key(ks, 999) once
+# n_clusters > 999.
+NOISE_FOLD = 0x7FFFFFFF          # AWGN stream (per-leaf AND packed)
+PACKED_HEAD_FOLD = 0x7FFF0001    # gain bits for the packed head section
+PACKED_TAIL_FOLD = 0x7FFF0002    # gain bits for the packed tail (ω̃) section
+
 
 def cluster_key(key: jax.Array, cluster: jax.Array | int) -> jax.Array:
     return jax.random.fold_in(key, cluster)
@@ -39,6 +67,11 @@ def cluster_key(key: jax.Array, cluster: jax.Array | int) -> jax.Array:
 
 def leaf_key(ckey: jax.Array, leaf_idx: int) -> jax.Array:
     return jax.random.fold_in(ckey, leaf_idx)
+
+
+def noise_key(key: jax.Array) -> jax.Array:
+    """AWGN key in a fold-in domain no cluster index can reach."""
+    return jax.random.fold_in(key, NOISE_FOLD)
 
 
 def sample_gain(key: jax.Array, shape, sigma2) -> jax.Array:
@@ -135,10 +168,135 @@ def ota_aggregate_tree(
         )(jnp.arange(n_clusters))
         masks = jnp.logical_or(gain_mask(hs, chan.h_threshold),
                                chan.ota_on < 0.5)
-        noise = (jax.random.normal(jax.random.fold_in(ks, 999), wg.shape[1:])
+        noise = (jax.random.normal(noise_key(ks), wg.shape[1:])
                  * chan.noise_std * chan.ota_on)
         out.append(ota_aggregate_leaf(wg, masks, noise, n_clients))
     return jax.tree.unflatten(treedef, out)
+
+
+# --------------------------------------------------------------------------
+# flat-packed OTA aggregation (the fused hot path)
+# --------------------------------------------------------------------------
+#
+# Key schedule: one gain-bit stream per (section, cluster) —
+#   bits_sec[c] = random.bits(fold_in(fold_in(key, PACKED_*_FOLD), c))
+# — and one AWGN stream per round (fold_in(key, NOISE_FOLD)). Sections are
+# the TreePacker's head (trunk) and tail (ω̃) slices, each lane-aligned,
+# so ``final_layer_masks_packed`` re-draws ONLY the tail stream and gets
+# bit-identical masks to the full aggregation's tail slice — no second
+# per-leaf loop, no full-model draw in the FGN phase.
+
+CHUNK = CHUNK_ROWS * LANE    # the stream quantum (entries per chunk draw)
+
+
+def _chunked_stream(key: jax.Array, length: int) -> jax.Array:
+    """(length,) uint32 of the chunk-quantized stream: chunk j is
+    ``bits(fold_in(key, j), (CHUNK,))``; a partial last chunk is
+    truncated — exactly the draws the fused kernel generates in-kernel
+    (one chunk per grid step), independent of kernel blocking."""
+    n_chunks = -(-length // CHUNK)
+    chunks = jax.vmap(
+        lambda j: jax.random.bits(jax.random.fold_in(key, j), (CHUNK,),
+                                  jnp.uint32)
+    )(jnp.arange(n_chunks))
+    return chunks.reshape(-1)[:length]
+
+
+def _section_bits(key: jax.Array, fold: int, n_clusters: int, length: int):
+    """(C, length) uint32 gain bits for one packed section: cluster c's
+    stream is chunk-quantized under ``fold_in(section_key, c)`` — the
+    fused kernel's in-kernel draw at grid steps (·, c), and the section
+    fold keeps head/tail streams disjoint so the FGN phase re-draws just
+    the tail."""
+    skey = jax.random.fold_in(key, fold)
+    return jax.vmap(
+        lambda c: _chunked_stream(cluster_key(skey, c), length)
+    )(jnp.arange(n_clusters))
+
+
+def packed_gain_bits(key: jax.Array, packer: TreePacker, n_clusters: int):
+    """The whole round's (C, P) gain-bit slab (head ++ tail streams)."""
+    parts = []
+    if packer.head_len:
+        parts.append(_section_bits(key, PACKED_HEAD_FOLD, n_clusters,
+                                   packer.head_len))
+    if packer.tail_len:
+        parts.append(_section_bits(key, PACKED_TAIL_FOLD, n_clusters,
+                                   packer.tail_len))
+    return jnp.concatenate(parts, axis=-1)
+
+
+def packed_noise_bits(key: jax.Array, packer: TreePacker) -> jax.Array:
+    """The round's (P,) AWGN bit stream (per-section, chunk-quantized —
+    the fused kernel's in-kernel draw at each section's final steps)."""
+    nk = noise_key(key)
+    parts = []
+    if packer.head_len:
+        parts.append(_chunked_stream(jax.random.fold_in(nk, PACKED_HEAD_FOLD),
+                                     packer.head_len))
+    if packer.tail_len:
+        parts.append(_chunked_stream(jax.random.fold_in(nk, PACKED_TAIL_FOLD),
+                                     packer.tail_len))
+    return jnp.concatenate(parts)
+
+
+def ota_aggregate_packed(
+    key: jax.Array,
+    weighted_grads,              # pytree with leading (C, ...) leaves
+    chan: ChannelParams,         # traced knobs; chan.sigma2 is (C,)
+    n_clients: int,
+    packer: TreePacker,
+    bits_mode: str = "fused",    # "fused" | "supplied" (see below)
+):
+    """Fused-path OTA aggregation: pack -> one Pallas kernel -> unpack.
+
+    Same math as ``ota_aggregate_tree`` (eqs. 8-10, traced ``ota_on``
+    gate included), but the per-cluster gains, masks and the noise tree
+    never materialize in HBM — property-tested against the per-leaf
+    oracle on a shared bit stream (tests/test_ota_packed.py).
+
+    ``bits_mode="fused"`` generates the bit streams in-kernel (no (C, P)
+    bits slab — the single-scenario fast path); ``"supplied"`` pre-draws
+    the IDENTICAL streams outside and feeds them to the kernel, which
+    only depends on ``key`` — under ``ScenarioBank``'s vmap the draw
+    hoists out of the scenario axis, paying the RNG once per round
+    instead of once per scenario. Both modes return the same values.
+    """
+    leaves = jax.tree.leaves(weighted_grads)
+    n_clusters = leaves[0].shape[0]
+    wg = packer.pack(weighted_grads)                       # (C, P)
+    if bits_mode == "supplied":
+        bits = packed_gain_bits(key, packer, n_clusters)
+        nbits = packed_noise_bits(key, packer)
+    elif bits_mode == "fused":
+        bits = nbits = None
+    else:
+        raise ValueError(bits_mode)
+    nk = noise_key(key)
+    section_keys = jnp.stack([
+        jnp.stack([jax.random.fold_in(key, PACKED_HEAD_FOLD),
+                   jax.random.fold_in(nk, PACKED_HEAD_FOLD)]),
+        jnp.stack([jax.random.fold_in(key, PACKED_TAIL_FOLD),
+                   jax.random.fold_in(nk, PACKED_TAIL_FOLD)]),
+    ]).astype(jnp.uint32)                                  # (2, 2, 2)
+    ghat = _ota_aggregate_fused_impl(
+        wg, section_keys, (packer.head_len, packer.tail_len), chan.sigma2,
+        chan.h_threshold, chan.noise_std, chan.ota_on, n_clients,
+        interpret=not _ON_TPU, bits=bits, nbits=nbits)
+    return packer.unpack(ghat)
+
+
+def final_layer_masks_packed(key: jax.Array, chan: ChannelParams,
+                             packer: TreePacker):
+    """Masks M^(l) on the last-shared-layer params ω̃ (eq. 5-7) as the
+    tail slice of the packed round draw — bit-identical to the masks
+    ``ota_aggregate_packed`` applies to the same entries."""
+    n_clusters = chan.sigma2.shape[0]
+    bits = _section_bits(key, PACKED_TAIL_FOLD, n_clusters,
+                         packer.tail_len)                       # (C, tail)
+    sig = chan.sigma2.reshape(n_clusters, 1)
+    masks = bits_to_mask(bits, sig, chan.h_threshold, chan.ota_on)
+    return packer.unpack_tail(masks)                            # (C, ...) leaves
 
 
 def final_layer_masks(key: jax.Array, final_tree, chan: ChannelParams,

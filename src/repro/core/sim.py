@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.config import FLConfig, TrainConfig
+from repro.common.flatpack import packer_for
 from repro.core import ota
 from repro.core.channel import ChannelParams, channel_params
 from repro.core.fedgradnorm import (
@@ -149,9 +150,11 @@ class HotaSim:
         return self.step_with_channel(state, xb, yb, key, chan)
 
     def step_with_channel(self, state: SimState, xb, yb, key,
-                          chan: ChannelParams):
+                          chan: ChannelParams, ota_bits_mode: str = "fused"):
         """Un-jitted step body with explicit traced ChannelParams — the
-        vmap target of ``repro.core.sweep.ScenarioBank``."""
+        vmap target of ``repro.core.sweep.ScenarioBank`` (which passes
+        ``ota_bits_mode="supplied"`` so the packed channel draw hoists
+        out of the scenario vmap; same stream, same results)."""
         fl, tcfg = self.fl, self.tcfg
         upd = jax.vmap(jax.vmap(self._client_update,
                                 in_axes=(None, 0, 0, 0, 0, 0)),
@@ -161,13 +164,22 @@ class HotaSim:
         # g leaves: (C, N, ...); F: (C, N)
 
         chan_key = jax.random.fold_in(key, 17)
+        # flat-packed OTA: the whole shared tree is one lane-aligned slab
+        # with ω̃ as its tail slice; one fused kernel replaces the per-leaf
+        # channel loops. fl.use_pallas_ota is static config — the per-leaf
+        # jnp path stays available as the property-test oracle.
+        packer = (packer_for(state.omega, tail="final")
+                  if fl.use_pallas_ota else None)
 
         # --- Alg. 2: FGN_Server per cluster -------------------------------
         f0 = jnp.where(state.step == 0, F, state.f0)
         ratios = F / jnp.maximum(f0, 1e-12)
 
-        final_masks = ota.final_layer_masks(
-            chan_key, state.omega["final"], chan)   # leaves (C, ...)
+        if packer is not None:   # tail slice of the round's packed draw
+            final_masks = ota.final_layer_masks_packed(chan_key, chan, packer)
+        else:
+            final_masks = ota.final_layer_masks(
+                chan_key, state.omega["final"], chan)   # leaves (C, ...)
 
         def cluster_norms(c):
             mask_c = jax.tree.map(lambda m: m[c], final_masks)
@@ -187,7 +199,13 @@ class HotaSim:
         # --- eqs. (3), (8)-(10): weighted transmission + OTA --------------
         weighted = jax.tree.map(
             lambda gl: jnp.einsum("cn,cn...->c...", p_new, gl), g)
-        ghat = ota.ota_aggregate_tree(chan_key, weighted, chan, fl.n_clients)
+        if packer is not None:
+            ghat = ota.ota_aggregate_packed(chan_key, weighted, chan,
+                                            fl.n_clients, packer,
+                                            bits_mode=ota_bits_mode)
+        else:
+            ghat = ota.ota_aggregate_tree(chan_key, weighted, chan,
+                                          fl.n_clients)
 
         # --- PS update (line 20) -------------------------------------------
         omega, ps_opt = adam_update(ghat, state.ps_opt, state.omega, tcfg.lr)

@@ -106,8 +106,13 @@ class ScenarioBank:
 
     @partial(jax.jit, static_argnums=0)
     def _step(self, states, xb, yb, key, chan_bank):
-        return jax.vmap(self.sim.step_with_channel,
-                        in_axes=(0, None, None, None, 0))(
+        # supplied bits mode: the packed OTA path pre-draws its (shared,
+        # key-only) bit streams so the RNG hoists out of the scenario
+        # vmap — one draw per round, not per scenario (same stream and
+        # values as the fused default).
+        step = partial(self.sim.step_with_channel,
+                       ota_bits_mode="supplied")
+        return jax.vmap(step, in_axes=(0, None, None, None, 0))(
             states, xb, yb, key, chan_bank)
 
     # ------------------------------------------------------------------

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.slab import LANE, pad_axis
 
 _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
 
@@ -29,19 +30,14 @@ def flash_attention(
 ) -> jax.Array:
     """q: (B, Sq, H, D); k, v: (B, Skv, KV, D). Causal self-attention."""
     b, sq, h, d = q.shape
-    d_pad = -d % 128
-    qt = jnp.transpose(q, (0, 2, 1, 3))
-    kt = jnp.transpose(k, (0, 2, 1, 3))
-    vt = jnp.transpose(v, (0, 2, 1, 3))
-    if d_pad:
-        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, 0), (0, d_pad)))
-        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, 0), (0, d_pad)))
-        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, 0), (0, d_pad)))
+    qt = pad_axis(jnp.transpose(q, (0, 2, 1, 3)), 3, LANE)
+    kt = pad_axis(jnp.transpose(k, (0, 2, 1, 3)), 3, LANE)
+    vt = pad_axis(jnp.transpose(v, (0, 2, 1, 3)), 3, LANE)
     out = flash_attention_pallas(qt, kt, vt, window=window, causal=True,
                                  block_q=block_q, block_kv=block_kv,
                                  scale=1.0 / (d ** 0.5),   # pre-padding D
                                  interpret=interpret)
-    if d_pad:
+    if d % LANE:
         out = out[..., :d]
     return jnp.transpose(out, (0, 2, 1, 3))
 

@@ -4,12 +4,12 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.masked_gradnorm.kernel import (
     COL_BLOCK, TASK_BLOCK, masked_gradnorm_pallas,
 )
 from repro.kernels.masked_gradnorm.ref import masked_gradnorm_ref
+from repro.kernels.slab import LANE, pad_axis
 
 _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
 
@@ -20,11 +20,9 @@ def masked_gradnorm(g: jax.Array, mask: jax.Array,
     """g: (T, P); mask: (P,) — returns (T,) masked L2 norms (fp32)."""
     t, p = g.shape
     tb = TASK_BLOCK if t >= TASK_BLOCK else t
-    cb = COL_BLOCK if p >= COL_BLOCK else max(128, p)
-    t_pad = -t % tb
-    p_pad = -p % cb
-    gp = jnp.pad(g, ((0, t_pad), (0, p_pad)))
-    mp = jnp.pad(mask.astype(g.dtype), (0, p_pad))[None, :]
+    cb = COL_BLOCK if p >= COL_BLOCK else max(LANE, p)
+    gp = pad_axis(pad_axis(g, 0, tb), 1, cb)
+    mp = pad_axis(mask.astype(g.dtype), 0, cb)[None, :]
     out = masked_gradnorm_pallas(gp, mp, task_block=tb, col_block=cb,
                                  interpret=interpret)
     return out[:t]

@@ -1,18 +1,37 @@
-"""Pallas TPU kernel: fused channel-draw + threshold + mask-apply.
+"""Pallas TPU kernels for the OTA fading-MAC channel (paper Sec. III).
 
-The per-entry channel model is the memory-bound hot loop of HOTA-
-FedGradNorm at scale: for every parameter entry, every cluster, every
-iteration, draw H ~ N(0, σ²), threshold, and sparsify the weighted
-gradient (paper eqs. 3 & 7). Done naively (jax.random.normal + where),
-H round-trips through HBM; this kernel fuses bits→gaussian→mask→apply in
-one VMEM pass and never materializes H.
+* ``ota_channel_pallas`` — per-cluster mask + apply for ONE slab via the
+  Box-Muller core (bits -> N(0, σ²) gains, eq. 7's threshold — H is
+  never materialized in HBM). Used by the distributed path (the MAC psum
+  runs across the mesh, so masking is the only local per-entry work).
 
-Tiling: the slab is viewed as (rows, 128) — lane-aligned for the VPU —
-with (block_rows, 128) VMEM blocks (block_rows a multiple of 8 for f32
-sublane packing). Grid is 1-D over row blocks. All compute is elementwise
-VPU work; the MXU is untouched.
+* ``ota_aggregate_pallas`` / ``ota_aggregate_fused_pallas`` — the full
+  PS estimator (eqs. 8-10) for the simulator hot path: input a
+  (C, rows, 128) weighted-grad slab (already Σ_i p_i g_i per cluster)
+  and the traced channel knobs; an in-kernel loop over the cluster axis
+  fuses mask draw→Σ_l mask·wg accumulation→AWGN→guarded |M|·N estimate.
+  Masks are drawn by inverse-CDF thresholding (``u < erfc(√(H_th/2σ²))``
+  — exactly the law of 1{|H|² ≥ H_th}; the estimator never consumes H
+  because channel inversion cancels it on passing entries), so the
+  per-entry cost is one compare, not a transcendental chain. Per-cluster
+  masks and the noise tree never touch HBM — one output slab per round
+  instead of ~4·C·L small leaf kernels. The ``_fused`` variant generates
+  its bits in-kernel from per-section threefry keys on a chunk-quantized
+  stream (no (C, P) bits slab in HBM, and blocking can never shift the
+  draw); the bits-supplied variant is the oracle bridge for tests.
 
-Validated in interpret mode against ref.ota_channel_ref (same bits stream).
+Channel knobs (σ_l², H_th, noise std, the ota_on gate) arrive as one
+traced (1, C+3) params block, so scenario sweeps (``ScenarioBank``) vmap
+over them without re-tracing; ``ota_on < 0.5`` forces every mask all-pass
+and zeroes the AWGN (the error-free baseline) inside the same kernel.
+
+Tiling: slabs are (rows, 128) — lane-aligned for the VPU — processed in
+(CHUNK_ROWS, 128) chunks (sublane-aligned for f32 packing) with the
+cluster loop unrolled in-kernel (C is static). All compute is
+elementwise VPU work.
+
+Validated in interpret mode against ref.ota_channel_ref /
+ref.ota_aggregate_slab_ref on the same bits stream.
 """
 from __future__ import annotations
 
@@ -22,20 +41,68 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.slab import LANE, SUBLANE
+
 TWO_PI = 6.283185307179586
-LANE = 128
 DEFAULT_BLOCK_ROWS = 256
+VMEM_BUDGET_BYTES = 6 * 1024 * 1024
 
 
-def _ota_kernel(x_ref, bits_ref, sigma2_ref, out_ref, mask_ref, *, h_th):
-    bits = bits_ref[...]
+def _box_muller(bits, sigma2):
+    """One N(0, σ²) draw per uint32 word (two u16 halves -> Box-Muller)."""
     hi = (bits >> 16).astype(jnp.float32)
     lo = (bits & jnp.uint32(0xFFFF)).astype(jnp.float32)
-    u1 = (hi + 1.0) * (1.0 / 65536.0)
+    u1 = (hi + 1.0) * (1.0 / 65536.0)     # (0, 1]: log-safe
     u2 = lo * (1.0 / 65536.0)
     r = jnp.sqrt(-2.0 * jnp.log(u1))
-    h = r * jnp.cos(TWO_PI * u2) * jnp.sqrt(sigma2_ref[0, 0])
-    mask = (h * h) >= h_th
+    return r * jnp.cos(TWO_PI * u2) * jnp.sqrt(sigma2)
+
+
+def _pass_probability(sigma2, h_th):
+    """P(|H|² ≥ H_th), H ~ N(0, σ²): erfc(√(H_th/2σ²)) — a per-cluster
+    SCALAR, so the per-entry mask is one uniform-vs-threshold compare."""
+    sig2 = jnp.maximum(sigma2, 1e-30)
+    return jax.lax.erfc(jnp.sqrt(h_th / (2.0 * sig2)))
+
+
+def _bits_mask(bits, p_pass, off):
+    """Inverse-CDF mask draw (eq. 7): the estimator never consumes H
+    itself (channel inversion cancels it on passing entries), and
+    1{|H|² ≥ H_th} is exactly Bernoulli(p_pass) — sampled here as
+    u < p_pass on the raw uniform word. Matches ref.bits_to_mask."""
+    u = bits.astype(jnp.float32) * jnp.float32(2.0 ** -32)
+    return jnp.logical_or(u < p_pass, off)
+
+
+def _pick_block_rows(rows: int, n_slabs: int,
+                     block_rows: int = DEFAULT_BLOCK_ROWS,
+                     interpret: bool = False) -> int:
+    """Largest row-block <= block_rows dividing ``rows`` that keeps
+    ``n_slabs`` concurrent (block, 128) f32 buffers under the VMEM budget.
+
+    Interpret mode has no VMEM: one whole-slab grid step avoids the
+    interpreter's per-block copy overhead (~10x on the 1M-param slab).
+    """
+    if interpret:
+        return rows
+    cap = max(SUBLANE, VMEM_BUDGET_BYTES // (n_slabs * LANE * 4))
+    br = min(block_rows, rows, cap - cap % SUBLANE)
+    br = max(SUBLANE, br - br % SUBLANE)
+    while rows % br:
+        br -= SUBLANE
+    return br
+
+
+# ---------------------------------------------------------------------------
+# per-cluster mask + apply (distributed path)
+# ---------------------------------------------------------------------------
+
+def _ota_channel_kernel(x_ref, bits_ref, params_ref, out_ref, mask_ref):
+    sigma2 = params_ref[0, 0]
+    h_th = params_ref[0, 1]
+    ota_on = params_ref[0, 2]
+    h = _box_muller(bits_ref[...], sigma2)
+    mask = jnp.logical_or((h * h) >= h_th, ota_on < 0.5)
     x = x_ref[...]
     out_ref[...] = jnp.where(mask, x, jnp.zeros_like(x))
     mask_ref[...] = mask.astype(mask_ref.dtype)
@@ -44,35 +111,303 @@ def _ota_kernel(x_ref, bits_ref, sigma2_ref, out_ref, mask_ref, *, h_th):
 def ota_channel_pallas(
     x: jax.Array,            # (rows, 128) slab
     bits: jax.Array,         # (rows, 128) uint32
-    sigma2: jax.Array,       # scalar (passed as (1,1) in SMEM-like block)
-    h_th: float,
+    params: jax.Array,       # (1, 3) f32: [sigma2, h_th, ota_on] (traced)
     *,
     block_rows: int = DEFAULT_BLOCK_ROWS,
     interpret: bool = False,
 ):
     rows, lane = x.shape
     assert lane == LANE, x.shape
-    block_rows = min(block_rows, rows)
-    assert rows % block_rows == 0, (rows, block_rows)
-    grid = (rows // block_rows,)
+    br = _pick_block_rows(rows, 4, block_rows, interpret)
+    grid = (rows // br,)
 
-    kernel = functools.partial(_ota_kernel, h_th=h_th)
     out, mask = pl.pallas_call(
-        kernel,
+        _ota_channel_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((br, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANE), lambda i: (i, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((rows, LANE), x.dtype),
             jax.ShapeDtypeStruct((rows, LANE), x.dtype),
         ],
         interpret=interpret,
-    )(x, bits, sigma2.reshape(1, 1).astype(jnp.float32))
+    )(x, bits, params.astype(jnp.float32))
     return out, mask
+
+
+# ---------------------------------------------------------------------------
+# full OTA aggregation (simulator hot path, eqs. 8-10)
+# ---------------------------------------------------------------------------
+
+def _ota_aggregate_kernel(wg_ref, bits_ref, nbits_ref, params_ref, out_ref,
+                          *, n_clusters, n_clients):
+    c = n_clusters
+    h_th = params_ref[0, c]
+    noise_std = params_ref[0, c + 1]
+    ota_on = params_ref[0, c + 2]
+    off = ota_on < 0.5                       # traced error-free gate
+
+    acc = jnp.zeros_like(out_ref[...], jnp.float32)
+    cnt = jnp.zeros_like(acc)
+    for l in range(n_clusters):              # static unrolled cluster loop
+        mask = _bits_mask(bits_ref[l],
+                          _pass_probability(params_ref[0, l], h_th), off)
+        acc = acc + jnp.where(mask, wg_ref[l].astype(jnp.float32), 0.0)
+        cnt = cnt + mask.astype(jnp.float32)
+
+    z = _box_muller(nbits_ref[...], 1.0) * noise_std * ota_on
+    y = acc + z
+    # |M_k(j)| = 0 -> nothing received but noise; estimator guarded to 0
+    out_ref[...] = jnp.where(cnt > 0,
+                             y / (jnp.maximum(cnt, 1.0) * n_clients), 0.0)
+
+
+# The stream quantum of the in-kernel RNG: bits are always drawn in
+# (CHUNK_ROWS, 128) pieces keyed by fold_in(fold_in(section_key, cluster),
+# chunk) — so the stream NEVER depends on how the loop is blocked, and a
+# chunk (512 KB of f32) is also the VMEM/cache-sized work unit per step.
+# Changing CHUNK_ROWS changes the draw — it is part of the stream spec.
+CHUNK_ROWS = 1024
+# chunk loops up to this long are unrolled (faster in interpret mode);
+# longer slabs use fori_loop so compile time stays independent of P
+UNROLL_CHUNKS = 16
+
+
+def _interp_chunk_bits(key2, cluster, chunk):
+    """One (CHUNK_ROWS, 128) uint32 draw of the chunk-quantized threefry
+    stream (chunk j of ``fold_in(section_key, cluster)``'s stream).
+    ``cluster`` is None for the per-entry AWGN stream (no cluster axis).
+    """
+    k = key2
+    if cluster is not None:
+        k = jax.random.fold_in(k, cluster)
+    k = jax.random.fold_in(k, chunk)
+    return jax.random.bits(k, (CHUNK_ROWS, LANE), jnp.uint32)
+
+
+def _fused_body(wg, bits_fn, nbits_fn, params_ref, n_clusters, n_clients,
+                r0, br):
+    """Accumulate one row-chunk [r0, r0+br) over the cluster axis and
+    finish it with AWGN + the guarded |M|·N estimate (eqs. 8-10)."""
+    c = n_clusters
+    h_th = params_ref[0, c]
+    noise_std = params_ref[0, c + 1]
+    ota_on = params_ref[0, c + 2]
+    off = ota_on < 0.5
+
+    acc = jnp.zeros((br, LANE), jnp.float32)
+    cnt = jnp.zeros_like(acc)
+    for l in range(n_clusters):              # static unrolled cluster loop
+        bits = bits_fn(l)[:br]
+        mask = _bits_mask(bits, _pass_probability(params_ref[0, l], h_th),
+                          off)
+        acc = acc + jnp.where(mask, wg(l, r0, br).astype(jnp.float32), 0.0)
+        cnt = cnt + mask.astype(jnp.float32)
+    z = _box_muller(nbits_fn()[:br], 1.0) * noise_std * ota_on
+    y = acc + z
+    return jnp.where(cnt > 0, y / (jnp.maximum(cnt, 1.0) * n_clients), 0.0)
+
+
+def _chunk_sweep(out_ref, chunk):
+    """Drive ``chunk(j, rows_ds, br)`` over the slab's row-chunks and
+    write its results: unrolled for small slabs (faster in interpret
+    mode), a PURE lax.map for big ones (compile size independent of P;
+    the ref is written once after — a ref store inside the loop would
+    batch as a full-slab update per chunk under ScenarioBank's vmap)."""
+    rows = out_ref.shape[0]
+    n_full = rows // CHUNK_ROWS
+    if 0 < n_full <= UNROLL_CHUNKS:
+        for j in range(n_full):
+            r0 = j * CHUNK_ROWS
+            out_ref[r0:r0 + CHUNK_ROWS, :] = chunk(
+                j, pl.ds(r0, CHUNK_ROWS), CHUNK_ROWS)
+    elif n_full:
+        ys = jax.lax.map(
+            lambda j: chunk(j, pl.ds(j * CHUNK_ROWS, CHUNK_ROWS),
+                            CHUNK_ROWS),
+            jnp.arange(n_full))
+        out_ref[:n_full * CHUNK_ROWS, :] = ys.reshape(-1, LANE)
+    rem = rows - n_full * CHUNK_ROWS
+    if rem:                                  # static partial last chunk
+        r0 = n_full * CHUNK_ROWS
+        out_ref[r0:, :] = chunk(n_full, pl.ds(r0, rem), rem)
+
+
+def _ota_aggregate_interp_kernel(wg_ref, keys_ref, params_ref, out_ref, *,
+                                 n_clusters, n_clients):
+    """Interpret-mode body, in-kernel RNG: every temp is one cache-sized
+    chunk and the chunk-quantized threefry stream matches the oracle's
+    draw (repro.core.ota._section_bits) bit for bit."""
+    def chunk(j, r0, br):
+        return _fused_body(
+            lambda l, r, b: wg_ref[l, r, :],
+            lambda l: _interp_chunk_bits(keys_ref[0], l, j),
+            lambda: _interp_chunk_bits(keys_ref[1], None, j),
+            params_ref, n_clusters, n_clients, r0, br)
+
+    _chunk_sweep(out_ref, chunk)
+
+
+def _ota_aggregate_supplied_kernel(wg_ref, bits_ref, nbits_ref, params_ref,
+                                   out_ref, *, n_clusters, n_clients):
+    """Interpret-mode body, caller-supplied bits: same chunk sweep, but
+    the gain/AWGN streams are read from (C, rows, 128)/(rows, 128) slabs.
+    Under ScenarioBank's vmap the bit draw does not depend on the banked
+    knobs, so it hoists out of the scenario axis — the RNG cost is paid
+    once per round, not once per scenario."""
+    def chunk(j, r0, br):
+        return _fused_body(
+            lambda l, r, b: wg_ref[l, r, :],
+            lambda l, r=r0: bits_ref[l, r, :],
+            lambda r=r0: nbits_ref[r, :],
+            params_ref, n_clusters, n_clients, r0, br)
+
+    _chunk_sweep(out_ref, chunk)
+
+
+def _ota_aggregate_tpu_kernel(wg_ref, keys_ref, params_ref, out_ref, *,
+                              n_clusters, n_clients):
+    """Compiled TPU body: grid over row-chunks, hardware PRNG
+    (pltpu.prng_random_bits — an i.i.d. stream distinct from the
+    interpret/oracle threefry stream; statistical tests only)."""
+    from jax.experimental.pallas import tpu as pltpu
+    i = pl.program_id(0)
+
+    def bits_fn(l):
+        pltpu.prng_seed((keys_ref[0, 0] ^ keys_ref[0, 1])
+                        + jnp.uint32(l * 0x10001) + jnp.uint32(i))
+        return pltpu.prng_random_bits((CHUNK_ROWS, LANE))
+
+    def nbits_fn():
+        pltpu.prng_seed((keys_ref[1, 0] ^ keys_ref[1, 1]) + jnp.uint32(i))
+        return pltpu.prng_random_bits((CHUNK_ROWS, LANE))
+
+    br = out_ref.shape[0]
+    out_ref[...] = _fused_body(
+        lambda l, r, b: wg_ref[l], bits_fn, nbits_fn,
+        params_ref, n_clusters, n_clients, 0, br)
+
+
+def ota_aggregate_fused_pallas(
+    wg: jax.Array,           # (C, rows, 128) f32 — ONE section's slab
+    keys: jax.Array,         # (2, 2) uint32 threefry keys [gains, AWGN]
+    params: jax.Array,       # (1, C+3) f32: [σ²_0..σ²_{C-1}, H_th, z_std, ota_on]
+    *,
+    n_clients: int,
+    interpret: bool = False,
+    bits: jax.Array = None,     # optional (C, rows, 128) uint32 pre-drawn
+    nbits: jax.Array = None,    # optional (rows, 128) uint32 pre-drawn
+) -> jax.Array:
+    """OTA aggregation for one packed section (the sim hot path). The
+    bit stream is quantized to CHUNK_ROWS blocks keyed by (section,
+    cluster, chunk), so kernel blocking never shifts the draw; a partial
+    last chunk just truncates its stream (the oracle does the same).
+    Pass pre-drawn ``bits``/``nbits`` (the identical stream) to hoist
+    the RNG out of a scenario vmap."""
+    n_clusters, rows, lane = wg.shape
+    assert lane == LANE, wg.shape
+
+    if interpret and bits is not None:
+        kernel = functools.partial(_ota_aggregate_supplied_kernel,
+                                   n_clusters=n_clusters,
+                                   n_clients=n_clients)
+        return pl.pallas_call(
+            kernel,
+            grid=(1,),
+            in_specs=[
+                pl.BlockSpec((n_clusters, rows, LANE), lambda i: (0, 0, 0)),
+                pl.BlockSpec((n_clusters, rows, LANE), lambda i: (0, 0, 0)),
+                pl.BlockSpec((rows, LANE), lambda i: (0, 0)),
+                pl.BlockSpec((1, n_clusters + 3), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((rows, LANE), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+            interpret=True,
+        )(wg, bits, nbits, params.astype(jnp.float32))
+
+    if bits is not None:         # compiled: block-gridded supplied-bits
+        return ota_aggregate_pallas(wg, bits, nbits, params,
+                                    n_clients=n_clients, interpret=False)
+
+    if interpret:
+        kernel = functools.partial(_ota_aggregate_interp_kernel,
+                                   n_clusters=n_clusters,
+                                   n_clients=n_clients)
+        return pl.pallas_call(
+            kernel,
+            grid=(1,),
+            in_specs=[
+                pl.BlockSpec((n_clusters, rows, LANE), lambda i: (0, 0, 0)),
+                pl.BlockSpec((2, 2), lambda i: (0, 0)),
+                pl.BlockSpec((1, n_clusters + 3), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((rows, LANE), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+            interpret=True,
+        )(wg, keys, params.astype(jnp.float32))
+
+    # the wg block is (C, CHUNK_ROWS, 128) f32 — VMEM use scales with C.
+    # CHUNK_ROWS is part of the stream spec and cannot shrink per call;
+    # very large C needs a C-axis block loop instead (ROADMAP follow-up).
+    wg_block_bytes = n_clusters * CHUNK_ROWS * LANE * 4
+    assert wg_block_bytes <= 8 * 1024 * 1024, (
+        f"ota_aggregate_fused TPU path: wg block {wg_block_bytes}B for "
+        f"C={n_clusters} exceeds the VMEM budget — loop the cluster axis "
+        f"in blocks before raising this limit")
+    kernel = functools.partial(_ota_aggregate_tpu_kernel,
+                               n_clusters=n_clusters, n_clients=n_clients)
+    return pl.pallas_call(
+        kernel,
+        grid=(pl.cdiv(rows, CHUNK_ROWS),),
+        in_specs=[
+            pl.BlockSpec((n_clusters, CHUNK_ROWS, LANE),
+                         lambda i: (0, i, 0)),
+            pl.BlockSpec((2, 2), lambda i: (0, 0)),
+            pl.BlockSpec((1, n_clusters + 3), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((CHUNK_ROWS, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        interpret=False,
+    )(wg, keys, params.astype(jnp.float32))
+
+
+def ota_aggregate_pallas(
+    wg: jax.Array,           # (C, rows, 128) f32 — Σ_i p_i g_i per cluster
+    bits: jax.Array,         # (C, rows, 128) uint32 — gain bits per cluster
+    nbits: jax.Array,        # (rows, 128) uint32 — AWGN bits
+    params: jax.Array,       # (1, C+3) f32: [σ²_0..σ²_{C-1}, H_th, z_std, ota_on]
+    *,
+    n_clients: int,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+) -> jax.Array:
+    n_clusters, rows, lane = wg.shape
+    assert lane == LANE, wg.shape
+    assert bits.shape == wg.shape, (bits.shape, wg.shape)
+    assert nbits.shape == (rows, LANE), nbits.shape
+    # 2C cluster blocks + noise + out resident at once
+    br = _pick_block_rows(rows, 2 * n_clusters + 2, block_rows, interpret)
+    grid = (rows // br,)
+
+    kernel = functools.partial(_ota_aggregate_kernel,
+                               n_clusters=n_clusters, n_clients=n_clients)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_clusters, br, LANE), lambda i: (0, i, 0)),
+            pl.BlockSpec((n_clusters, br, LANE), lambda i: (0, i, 0)),
+            pl.BlockSpec((br, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_clusters + 3), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        interpret=interpret,
+    )(wg, bits, nbits, params.astype(jnp.float32))

@@ -1,12 +1,13 @@
-"""Pure-jnp oracle for the ota_channel kernel.
+"""Pure-jnp oracles for the ota_channel kernel package.
 
-Math (paper eqs. 3, 7): from counter-based uniform bits, draw per-entry
+Math (paper eqs. 3, 7-10): from counter-based uniform bits, draw per-entry
 channel gains H ~ N(0, σ²) via Box-Muller, threshold |H|² ≥ H_th into the
-sparsification mask M, and apply it to the weighted-gradient slab x:
+sparsification mask M, and either apply it to one weighted-gradient slab
+(``ota_channel_ref``) or run the whole PS estimator across the cluster
+axis (``ota_aggregate_slab_ref``):
 
-    out  = M ∘ x
-    mask = M (as x.dtype, for the |M_k(j)| count psum / CSI bookkeeping)
-    gain = H (faithful mode needs the gains themselves for β = p/H)
+    y(j)  = Σ_{l∈M(j)} wg_l(j) + z(j)          (eq. 8, channel inverted)
+    ĝ(j)  = y(j) / (|M_k(j)| · N), 0 if |M|=0  (eq. 10, guarded)
 
 Bits are supplied by the caller (jax.random.bits), so kernel and oracle
 consume the identical stream — outputs match bit-for-bit up to float
@@ -32,9 +33,55 @@ def bits_to_gaussian(bits: jax.Array, sigma2) -> jax.Array:
     return h * jnp.sqrt(jnp.asarray(sigma2, jnp.float32))
 
 
-def ota_channel_ref(x: jax.Array, bits: jax.Array, sigma2, h_th):
+def pass_probability(sigma2, h_th) -> jax.Array:
+    """P(|H|² ≥ H_th) for H ~ N(0, σ²): erfc(√(H_th / 2σ²)) (eq. 7)."""
+    sig2 = jnp.maximum(jnp.asarray(sigma2, jnp.float32), 1e-30)
+    return jax.lax.erfc(jnp.sqrt(jnp.asarray(h_th, jnp.float32)
+                                 / (2.0 * sig2)))
+
+
+def bits_to_mask(bits: jax.Array, sigma2, h_th, ota_on=1.0) -> jax.Array:
+    """eq. (7) from a bit stream by inverse-CDF thresholding: the
+    estimator only ever consumes the MASK (channel inversion cancels H on
+    passing entries), and 1{|H|² ≥ H_th} for H ~ N(0, σ²) is exactly
+    Bernoulli(erfc(√(H_th/2σ²))) — so ``u < p_pass`` on the raw uniform
+    draw is the identical distribution at one compare per entry instead
+    of a Box-Muller log/sqrt/cos chain. ``ota_on < 0.5`` forces all-pass.
+    """
+    u = bits.astype(jnp.float32) * jnp.float32(2.0 ** -32)
+    p = pass_probability(sigma2, h_th)
+    return jnp.logical_or(u < p, jnp.asarray(ota_on, jnp.float32) < 0.5)
+
+
+def ota_channel_ref(x: jax.Array, bits: jax.Array, sigma2, h_th, ota_on=1.0):
     """x: any-shape slab; bits: same-shape uint32. Returns (masked_x, mask, gain)."""
     h = bits_to_gaussian(bits, sigma2)
-    mask = (h * h) >= h_th
+    mask = jnp.logical_or((h * h) >= h_th,
+                          jnp.asarray(ota_on, jnp.float32) < 0.5)
     out = jnp.where(mask, x, jnp.zeros_like(x))
     return out, mask.astype(x.dtype), h
+
+
+def ota_aggregate_slab_ref(
+    wg: jax.Array,           # (C, ...) weighted grads, already Σ_i p_i g_i
+    bits: jax.Array,         # (C, ...) uint32 gain bits per cluster
+    nbits: jax.Array,        # (...) uint32 AWGN bits
+    sigma2: jax.Array,       # (C,)
+    h_th, noise_std, ota_on,
+    n_clients: int,
+) -> jax.Array:
+    """eqs. (8)-(10) on flat slabs, per-cluster where+sum in plain jnp.
+
+    The packed kernel's oracle: same bits, same inverse-CDF mask rule
+    (``bits_to_mask``), same Box-Muller AWGN, same |M|·N guard — but
+    per-cluster masks materialize as full (C, ...) arrays.
+    """
+    c = wg.shape[0]
+    sig = jnp.asarray(sigma2, jnp.float32).reshape((c,) + (1,) * (wg.ndim - 1))
+    masks = bits_to_mask(bits, sig, h_th, ota_on)
+    y = jnp.sum(jnp.where(masks, wg.astype(jnp.float32), 0.0), axis=0)
+    z = bits_to_gaussian(nbits, 1.0) * noise_std * jnp.asarray(
+        ota_on, jnp.float32)
+    y = y + z
+    cnt = jnp.sum(masks.astype(jnp.float32), axis=0)
+    return jnp.where(cnt > 0, y / (jnp.maximum(cnt, 1.0) * n_clients), 0.0)

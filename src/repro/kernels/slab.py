@@ -1,0 +1,66 @@
+"""Shared slab-layout helpers for the Pallas kernel wrappers.
+
+Every kernel in this package views its operands as lane-aligned slabs:
+the last dimension is the 128-wide VPU lane axis, the second-to-last is
+padded to a multiple of 8 sublanes (f32 packing). Historically each
+wrapper re-implemented the ravel/pad/reshape dance; this module is the
+single home for that logic — used by ota_channel, masked_gradnorm,
+flash_attention and the flat-pack OTA engine (repro.common.flatpack).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LANE = 128            # VPU lane width — last dim of every slab
+SUBLANE = 8           # f32 sublane packing — row-count multiple
+ROW_QUANTUM = LANE * SUBLANE   # smallest lane-aligned flat section (1024)
+
+
+def round_up(n: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is >= ``n`` (0 stays 0)."""
+    return -(-n // m) * m
+
+
+def slab_rows(n: int) -> int:
+    """Rows of the (rows, LANE) slab holding ``n`` flat elements (>= 8)."""
+    return max(SUBLANE, round_up(-(-n // LANE), SUBLANE))
+
+
+def pad_to_lanes(x: jax.Array):
+    """Ravel ``x`` into a zero-padded (rows, LANE) slab.
+
+    Returns (slab, n) where ``n`` is the original element count —
+    ``slab.reshape(-1)[:n].reshape(x.shape)`` round-trips exactly.
+    """
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    rows = slab_rows(n)
+    flat = jnp.pad(flat, (0, rows * LANE - n))
+    return flat.reshape(rows, LANE), n
+
+
+def flat_to_slab(flat: jax.Array) -> jax.Array:
+    """View an already lane-aligned (..., P) flat array as (..., rows, LANE).
+
+    ``P`` must be a multiple of ROW_QUANTUM (the flat-packer guarantees
+    this); leading batch dims (cluster/scenario axes) pass through.
+    """
+    p = flat.shape[-1]
+    assert p % ROW_QUANTUM == 0, (flat.shape, ROW_QUANTUM)
+    return flat.reshape(flat.shape[:-1] + (p // LANE, LANE))
+
+
+def slab_to_flat(slab: jax.Array) -> jax.Array:
+    """Inverse of :func:`flat_to_slab`."""
+    return slab.reshape(slab.shape[:-2] + (slab.shape[-2] * slab.shape[-1],))
+
+
+def pad_axis(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    """Zero-pad one axis of ``x`` up to a multiple of ``multiple``."""
+    pad = -x.shape[axis] % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)

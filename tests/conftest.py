@@ -48,6 +48,14 @@ def _install_hypothesis_shim():
     def just(value):
         return _Strategy(lambda r: value)
 
+    def tuples(*strategies):
+        return _Strategy(lambda r: tuple(s.draw(r) for s in strategies))
+
+    def lists(elements, min_size=0, max_size=10):
+        return _Strategy(lambda r: [elements.draw(r)
+                                    for _ in range(r.randint(min_size,
+                                                             max_size))])
+
     def given(*_args, **strategies):
         if _args:
             raise TypeError("hypothesis shim supports keyword strategies only")
@@ -82,6 +90,8 @@ def _install_hypothesis_shim():
     st_mod.booleans = booleans
     st_mod.sampled_from = sampled_from
     st_mod.just = just
+    st_mod.tuples = tuples
+    st_mod.lists = lists
 
     hyp_mod = types.ModuleType("hypothesis")
     hyp_mod.given = given

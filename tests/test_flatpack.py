@@ -1,0 +1,121 @@
+"""TreePacker: layout contract + round-trip properties (the flat-packed
+OTA engine's foundation — see repro/common/flatpack.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.flatpack import TreePacker, packer_for
+from repro.kernels.slab import LANE, ROW_QUANTUM, pad_to_lanes, slab_rows
+
+TREE = {
+    "final": {"w": jnp.arange(12.0).reshape(3, 4), "b": jnp.ones((4,))},
+    "trunk": {"fc0": {"w": jnp.full((5, 7), 2.0), "b": jnp.zeros((7,))},
+              "fc1": {"w": jnp.full((2, 3), 3.0)}},
+}
+
+
+def test_roundtrip_exact():
+    p = TreePacker(TREE, tail="final")
+    slab = p.pack(TREE)
+    assert slab.shape == (p.size,)
+    out = p.unpack(slab)
+    for a, b in zip(jax.tree.leaves(TREE), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_layout_alignment_contract():
+    p = TreePacker(TREE, tail="final")
+    # lane-aligned slab, lane-aligned sections (kernel (rows, 128) view)
+    assert p.size % ROW_QUANTUM == 0
+    assert p.head_len % ROW_QUANTUM == 0
+    assert p.tail_len % ROW_QUANTUM == 0
+    assert p.size == p.head_len + p.tail_len
+    assert p.n_rows * LANE == p.size
+
+
+def test_final_leaves_are_contiguous_tail():
+    """The last-shared-layer params must occupy one contiguous tail slice
+    (final_layer_masks_packed slices exactly this)."""
+    p = TreePacker(TREE, tail="final")
+    slab = p.pack(TREE)
+    tail = p.tail_slice(slab)
+    assert tail.shape == (p.tail_len,)
+    flat_final = jnp.concatenate(
+        [l.reshape(-1) for l in jax.tree.leaves(TREE["final"])])
+    np.testing.assert_array_equal(np.asarray(tail[:flat_final.size]),
+                                  np.asarray(flat_final))
+    # and the padding after the tail leaves is zero
+    np.testing.assert_array_equal(np.asarray(tail[flat_final.size:]), 0.0)
+
+
+def test_unpack_tail_matches_subtree():
+    p = TreePacker(TREE, tail="final")
+    tail = p.tail_slice(p.pack(TREE))
+    sub = p.unpack_tail(tail)
+    assert jax.tree.structure(sub) == jax.tree.structure(TREE["final"])
+    for a, b in zip(jax.tree.leaves(TREE["final"]), jax.tree.leaves(sub)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pack_preserves_leading_batch_axes():
+    """(C, ...) leaves (the per-cluster weighted grads) pack to (C, P)."""
+    C = 3
+    batched = jax.tree.map(
+        lambda l: jnp.stack([l * (c + 1) for c in range(C)]), TREE)
+    p = TreePacker(TREE, tail="final")
+    slab = p.pack(batched)
+    assert slab.shape == (C, p.size)
+    for c in range(C):
+        np.testing.assert_array_equal(
+            np.asarray(slab[c]),
+            np.asarray(p.pack(jax.tree.map(lambda l: l[c], batched))))
+
+
+def test_packer_cache_hits():
+    a = packer_for(TREE, tail="final")
+    b = packer_for(jax.tree.map(jnp.zeros_like, TREE), tail="final")
+    assert a is b
+    c = packer_for(TREE, tail=None)
+    assert c is not a and c.tail_len == 0 and c.head_len == c.size
+
+
+def test_no_tail_packs_everything_in_head():
+    p = TreePacker(TREE["trunk"], tail="final")   # key absent -> all head
+    assert p.tail_len == 0
+    out = p.unpack(p.pack(TREE["trunk"]))
+    for a, b in zip(jax.tree.leaves(TREE["trunk"]), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    shapes=st.lists(
+        st.tuples(st.integers(1, 17), st.integers(1, 23)), min_size=1,
+        max_size=6),
+    final_n=st.integers(1, 50),
+    seed=st.integers(0, 99),
+)
+def test_roundtrip_property(shapes, final_n, seed):
+    key = jax.random.PRNGKey(seed)
+    tree = {
+        "final": {"w": jax.random.normal(key, (final_n,))},
+        "trunk": {f"l{i}": jax.random.normal(jax.random.fold_in(key, i), s)
+                  for i, s in enumerate(shapes)},
+    }
+    p = packer_for(tree, tail="final")
+    slab = p.pack(tree)
+    assert slab.shape[-1] % ROW_QUANTUM == 0
+    out = p.unpack(slab)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_slab_helpers_roundtrip():
+    x = jnp.arange(1000.0).reshape(10, 100)
+    slab, n = pad_to_lanes(x)
+    assert n == 1000 and slab.shape == (slab_rows(1000), LANE)
+    assert slab.shape[0] % 8 == 0
+    np.testing.assert_array_equal(
+        np.asarray(slab.reshape(-1)[:n].reshape(x.shape)), np.asarray(x))

@@ -1,0 +1,247 @@
+"""Flat-packed OTA aggregation vs the per-leaf oracle (shared bit stream),
+plus the paper's edge cases routed through the fused kernel and the PRNG
+stream-disjointness pins (noise vs cluster fold-in domains)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.config import FLConfig
+from repro.common.flatpack import packer_for
+from repro.core import ota
+from repro.core.channel import channel_params, stack_channel_params
+from repro.kernels import ota_aggregate, ota_aggregate_reference
+from repro.kernels.ota_channel.ref import bits_to_gaussian, bits_to_mask
+
+
+def _wg_tree(key, C, scale=1.0):
+    """A per-cluster weighted-grad pytree in the sim's omega layout."""
+    ks = [jax.random.fold_in(key, i) for i in range(4)]
+    return {
+        "final": {"w": jax.random.normal(ks[0], (C, 40, 8)) * scale,
+                  "b": jax.random.normal(ks[1], (C, 8)) * scale},
+        "trunk": {"fc0": {"w": jax.random.normal(ks[2], (C, 30, 50)) * scale,
+                          "b": jax.random.normal(ks[3], (C, 50)) * scale}},
+    }
+
+
+def _template(tree):
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype),
+                        tree)
+
+
+# ---------------------------------------------------------------- packed vs
+# per-leaf oracle on a SHARED bit stream: the kernel's estimate must equal
+# running eqs. 8-10 leaf-by-leaf with the masks/noise decoded from the same
+# bits (ota_aggregate_leaf is the seed implementation, kept as oracle).
+@pytest.mark.parametrize("C,sigmas", [(2, (1.0, 0.25)), (4, (0.5,)),
+                                      (10, (0.25, 0.5, 1.0, 2.0))])
+def test_packed_matches_per_leaf_oracle(C, sigmas):
+    fl = FLConfig(n_clusters=C, n_clients=3, sigma2=sigmas, noise_std=0.7)
+    chan = channel_params(fl)
+    key = jax.random.PRNGKey(42)
+    wg = _wg_tree(jax.random.fold_in(key, 1), C)
+    packer = packer_for(_template(wg), tail="final")
+
+    ghat = ota.ota_aggregate_packed(key, wg, chan, fl.n_clients, packer)
+
+    # oracle: same bits -> per-leaf masks/noise -> seed ota_aggregate_leaf
+    bits = ota.packed_gain_bits(key, packer, C)              # (C, P)
+    nbits = ota.packed_noise_bits(key, packer)
+    sig = chan.sigma2.reshape(C, 1)
+    masks_slab = bits_to_mask(bits, sig, chan.h_threshold, chan.ota_on)
+    noise_slab = (bits_to_gaussian(nbits, 1.0) * chan.noise_std
+                  * chan.ota_on)
+    mask_tree = packer.unpack(masks_slab.astype(jnp.float32))
+    noise_tree = packer.unpack(noise_slab)
+    oracle = jax.tree.map(
+        lambda w, m, z: ota.ota_aggregate_leaf(w, m > 0.5, z, fl.n_clients),
+        wg, mask_tree, noise_tree)
+
+    for a, b in zip(jax.tree.leaves(ghat), jax.tree.leaves(oracle)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(C=st.integers(1, 6), n=st.integers(3, 400), seed=st.integers(0, 99),
+       noise=st.floats(0.0, 3.0))
+def test_packed_slab_kernel_matches_ref_property(C, n, seed, noise):
+    """ota_aggregate (Pallas) == ota_aggregate_reference (jnp) on random
+    lane-aligned slabs — the kernel-level contract."""
+    key = jax.random.PRNGKey(seed)
+    p = 1024 * (-(-n // 1024))
+    wg = jax.random.normal(key, (C, p))
+    bits = jax.random.bits(jax.random.fold_in(key, 1), (C, p), jnp.uint32)
+    nbits = jax.random.bits(jax.random.fold_in(key, 2), (p,), jnp.uint32)
+    sigma2 = jnp.linspace(0.25, 2.0, C)
+    a = ota_aggregate(wg, bits, nbits, sigma2, 0.032, noise, 1.0, 3)
+    b = ota_aggregate_reference(wg, bits, nbits, sigma2, 0.032, noise, 1.0, 3)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_final_masks_are_tail_slice_of_round_draw():
+    """final_layer_masks_packed must reproduce, bit-for-bit, the masks the
+    full aggregation applies to the ω̃ tail (eq. 5 == transmission)."""
+    C = 3
+    fl = FLConfig(n_clusters=C, n_clients=2, sigma2=(0.5, 1.0, 2.0))
+    chan = channel_params(fl)
+    key = jax.random.PRNGKey(7)
+    wg = _wg_tree(jax.random.fold_in(key, 1), C)
+    packer = packer_for(_template(wg), tail="final")
+
+    fmasks = ota.final_layer_masks_packed(key, chan, packer)
+
+    bits = ota.packed_gain_bits(key, packer, C)
+    sig = chan.sigma2.reshape(C, 1)
+    full_masks = bits_to_mask(bits, sig, chan.h_threshold, chan.ota_on)
+    tail_masks = packer.unpack_tail(packer.tail_slice(full_masks))
+
+    for a, b in zip(jax.tree.leaves(fmasks), jax.tree.leaves(tail_masks)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # masks are non-trivial at the default threshold
+    rate = float(jnp.mean(jnp.concatenate(
+        [m.reshape(-1).astype(jnp.float32)
+         for m in jax.tree.leaves(fmasks)])))
+    assert 0.5 < rate < 1.0
+
+
+def test_packed_all_blocked_is_exact_zero():
+    """σ² → 0 with H_th > 0: |M_k| = 0 everywhere, so ĝ must be exactly 0
+    on every leaf — never noise/(cnt·N), never NaN — through the kernel."""
+    C = 3
+    fl = FLConfig(n_clusters=C, n_clients=2, h_threshold=0.5, noise_std=5.0,
+                  sigma2=(1e-14,))
+    chan = channel_params(fl)
+    wg = jax.tree.map(lambda l: jnp.full_like(l, 1e6),
+                      _wg_tree(jax.random.PRNGKey(0), C))
+    packer = packer_for(_template(wg), tail="final")
+    ghat = ota.ota_aggregate_packed(jax.random.PRNGKey(11), wg, chan,
+                                    fl.n_clients, packer)
+    for leaf in jax.tree.leaves(ghat):
+        arr = np.asarray(leaf)
+        assert np.isfinite(arr).all()
+        np.testing.assert_array_equal(arr, np.zeros_like(arr))
+
+
+def test_packed_ota_off_is_plain_weighted_mean():
+    """ota=False through the kernel: traced gate forces all-pass masks and
+    zero AWGN -> ĝ = Σ_l wg_l / (C·N) exactly (error-free baseline)."""
+    C, N = 4, 3
+    fl = FLConfig(n_clusters=C, n_clients=N, noise_std=7.0, ota=False)
+    chan = channel_params(fl)
+    wg = _wg_tree(jax.random.PRNGKey(5), C)
+    packer = packer_for(_template(wg), tail="final")
+    ghat = ota.ota_aggregate_packed(jax.random.PRNGKey(2), wg, chan, N,
+                                    packer)
+    for g, w in zip(jax.tree.leaves(ghat), jax.tree.leaves(wg)):
+        ref = np.asarray(w).sum(axis=0) / (C * N)
+        np.testing.assert_allclose(np.asarray(g), ref, rtol=1e-6, atol=1e-7)
+
+
+def test_supplied_bits_mode_identical_to_fused():
+    """bits_mode="supplied" (ScenarioBank's vmap-hoisted draw) must
+    reproduce the fused in-kernel stream value-for-value."""
+    C = 3
+    fl = FLConfig(n_clusters=C, n_clients=2, sigma2=(0.5, 1.0, 2.0),
+                  noise_std=0.8)
+    chan = channel_params(fl)
+    key = jax.random.PRNGKey(21)
+    wg = _wg_tree(jax.random.fold_in(key, 1), C)
+    packer = packer_for(_template(wg), tail="final")
+    a = ota.ota_aggregate_packed(key, wg, chan, 2, packer)
+    b = ota.ota_aggregate_packed(key, wg, chan, 2, packer,
+                                 bits_mode="supplied")
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_packed_composes_with_scenario_vmap():
+    """The packed path under a (S,)-batched ChannelParams bank (the
+    ScenarioBank contract): vmap over chan, shared key/wg (CRN)."""
+    C, N = 2, 3
+    base = FLConfig(n_clusters=C, n_clients=N)
+    bank = stack_channel_params([
+        channel_params(base),
+        channel_params(FLConfig(n_clusters=C, n_clients=N,
+                                sigma2=(0.05, 1.0))),
+        channel_params(FLConfig(n_clusters=C, n_clients=N, ota=False)),
+    ])
+    key = jax.random.PRNGKey(3)
+    wg = _wg_tree(jax.random.fold_in(key, 1), C)
+    packer = packer_for(_template(wg), tail="final")
+
+    banked = jax.vmap(
+        lambda ch: ota.ota_aggregate_packed(key, wg, ch, N, packer))(bank)
+    for s in range(3):
+        one = ota.ota_aggregate_packed(
+            key, wg, jax.tree.map(lambda x: x[s], bank), N, packer)
+        for a, b in zip(jax.tree.leaves(one),
+                        jax.tree.leaves(jax.tree.map(lambda x: x[s], banked))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-7)
+
+
+def test_sim_packed_equals_per_leaf_when_ota_off():
+    """End-to-end: with the channel off both sim paths are the exact same
+    weighted mean, so one step from identical init must match leaf-for-leaf
+    (the only scenario where the two PRNG schemes cannot differ)."""
+    import dataclasses
+    from repro.common.config import ModelConfig, TrainConfig
+    from repro.core.sim import HotaSim
+    C, N = 2, 2
+    model_cfg = ModelConfig(family="mlp")
+    from repro.models.model import build_model
+    model = build_model(model_cfg)
+    base = FLConfig(n_clusters=C, n_clients=N, ota=False, noise_std=3.0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (C, N, 8, 256))
+    y = jax.random.randint(jax.random.PRNGKey(2), (C, N, 8), 0, 4)
+    outs = []
+    for packed in (True, False):
+        fl = dataclasses.replace(base, use_pallas_ota=packed)
+        sim = HotaSim(model, fl, TrainConfig(lr=3e-4), [4, 4])
+        st_ = sim.init(jax.random.PRNGKey(0))
+        st_, m = sim.step(st_, x, y, jax.random.PRNGKey(9))
+        outs.append((st_, m))
+    for a, b in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[1])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------- PRNG pins
+def _key_data(k):
+    return tuple(np.asarray(jax.random.key_data(k)).tolist()
+                 if hasattr(jax.random, "key_data")
+                 else np.asarray(k).tolist())
+
+
+def test_noise_key_disjoint_from_cluster_keys():
+    """The old noise fold (999) collided with cluster_key(ks, 999); the new
+    NOISE_FOLD domain sits above any reachable cluster index."""
+    ks = ota.leaf_key(jax.random.PRNGKey(0), 0)
+    nk = _key_data(ota.noise_key(ks))
+    for c in (0, 1, 998, 999, 1000, 4095):
+        assert _key_data(ota.cluster_key(ks, c)) != nk
+    assert ota.NOISE_FOLD == 0x7FFFFFFF
+    # the packed section folds live in the same reserved range
+    assert ota.PACKED_HEAD_FOLD > 0x7FFF0000
+    assert ota.PACKED_TAIL_FOLD > 0x7FFF0000
+
+
+def test_noise_stream_pinned():
+    """Pin the per-leaf noise stream to the NOISE_FOLD derivation so future
+    refactors can't silently shift every figure's AWGN draws."""
+    fl = FLConfig(n_clusters=2, n_clients=1, h_threshold=0.0, noise_std=1.0,
+                  use_pallas_ota=False)
+    chan = channel_params(fl)
+    key = jax.random.PRNGKey(4)
+    wg = {"w": jnp.zeros((2, 64))}       # all-pass masks, zero signal
+    ghat = ota.ota_aggregate_tree(key, wg, chan, 1)
+    ks = ota.leaf_key(key, 0)
+    expected = jax.random.normal(
+        jax.random.fold_in(ks, ota.NOISE_FOLD), (64,)) / 2.0
+    np.testing.assert_allclose(np.asarray(ghat["w"]), np.asarray(expected),
+                               rtol=1e-6)
