@@ -156,19 +156,39 @@ def packed_rows(n_scenarios: int = 8, iters: int = 3, quick: bool = False):
     return rows
 
 
+def _time_bank(bank, batches, keys, steps, block):
+    """(compile_s, steady_step_s) of one bank flavor over the shared
+    batch/key schedule."""
+    import time as _time_mod
+    t0 = _time_mod.perf_counter()
+    states = bank.init(jax.random.PRNGKey(0))
+    states, _ = bank.step(states, *batches[0], keys[0])   # compile
+    block(states)
+    compile_s = _time_mod.perf_counter() - t0
+    t0 = _time_mod.perf_counter()
+    for t in range(1, steps + 1):
+        states, _ = bank.step(states, *batches[t], keys[t])
+    block(states)
+    return compile_s, (_time_mod.perf_counter() - t0) / steps
+
+
 def sweep_rows(n_scenarios: int = 8, steps: int = 3, n_clusters: int = 10,
-               n_clients: int = 3, batch: int = 24):
-    """ScenarioBank (one jit, vmap over S scenarios) vs the old sequential
-    Python loop (S re-jitted HotaSims) on the paper-scale MLP config.
-    Reports steady-state per-round wall time for the WHOLE scenario set and
-    total wall including compilation."""
+               n_clients: int = 3, batch: int = 24,
+               include_sequential: bool = True):
+    """ScenarioBank (one jit, vmap over S scenarios) vs ShardedScenarioBank
+    (scenario axis on the device mesh) vs the old sequential Python loop
+    (S re-jitted HotaSims) on the paper-scale MLP config. Reports
+    steady-state per-round wall time for the WHOLE scenario set and total
+    wall including compilation. Sharded rows appear only when more than
+    one device is visible and the device count divides S (force host
+    devices with XLA_FLAGS=--xla_force_host_platform_device_count)."""
     import dataclasses
     import time as _time_mod
 
     from repro.common.config import FLConfig, TrainConfig
     from repro.core.paper_setup import paper_mlp_setup
     from repro.core.sim import HotaSim
-    from repro.core.sweep import ScenarioBank
+    from repro.core.sweep import ScenarioBank, ShardedScenarioBank
 
     base_fl = FLConfig(n_clusters=n_clusters, n_clients=n_clients)
     sim, batcher = paper_mlp_setup(base_fl, batch=batch, n_points=6000)
@@ -187,46 +207,53 @@ def sweep_rows(n_scenarios: int = 8, steps: int = 3, n_clusters: int = 10,
         jax.block_until_ready(jax.tree.leaves(x)[0])
 
     # --- banked: one jit over all scenarios -------------------------------
-    bank = ScenarioBank(sim, scenarios)
-    t0 = _time_mod.perf_counter()
-    states = bank.init(jax.random.PRNGKey(0))
-    states, _ = bank.step(states, *batches[0], keys[0])   # compile
-    _block(states)
-    t_compile_bank = _time_mod.perf_counter() - t0
-    t0 = _time_mod.perf_counter()
-    for t in range(1, steps + 1):
-        states, _ = bank.step(states, *batches[t], keys[t])
-    _block(states)
-    bank_step = (_time_mod.perf_counter() - t0) / steps
+    t_compile_bank, bank_step = _time_bank(
+        ScenarioBank(sim, scenarios), batches, keys, steps, _block)
     bank_total = t_compile_bank + bank_step * steps
+    rows = [(f"sweep_bank_S{n_scenarios}_step", bank_step * 1e6,
+             f"total={bank_total:.2f}s(incl compile)")]
+
+    # --- sharded: the same jit, scenario axis split across devices --------
+    n_dev = len(jax.devices())
+    if n_dev > 1 and n_scenarios % n_dev == 0:
+        t_compile_sh, sh_step = _time_bank(
+            ShardedScenarioBank(sim, scenarios), batches, keys, steps,
+            _block)
+        sh_total = t_compile_sh + sh_step * steps
+        rows += [
+            (f"sweep_sharded_S{n_scenarios}_step", sh_step * 1e6,
+             f"total={sh_total:.2f}s(incl compile);{n_dev} devices"),
+            (f"sweep_sharded_speedup_S{n_scenarios}", 0.0,
+             f"steady={bank_step/sh_step:.2f}x_vs_vmap;"
+             f"end_to_end={bank_total/sh_total:.2f}x"),
+        ]
 
     # --- sequential: one re-jitted HotaSim per scenario -------------------
-    t0 = _time_mod.perf_counter()
-    seq_steady = 0.0
-    n_cls = [int(c) for c in sim.n_classes]
-    for spec in scenarios:
-        fl_s = dataclasses.replace(base_fl, **spec)
-        sim_s = HotaSim(sim.model, fl_s, TrainConfig(lr=3e-4), n_cls)
-        st = sim_s.init(jax.random.PRNGKey(0))
-        st, _ = sim_s.step(st, *batches[0], keys[0])      # compile
-        _block(st)
-        t1 = _time_mod.perf_counter()
-        for t in range(1, steps + 1):
-            st, _ = sim_s.step(st, *batches[t], keys[t])
-        _block(st)
-        seq_steady += _time_mod.perf_counter() - t1
-    seq_total = _time_mod.perf_counter() - t0
-    seq_step = seq_steady / steps
-
-    return [
-        (f"sweep_bank_S{n_scenarios}_step", bank_step * 1e6,
-         f"total={bank_total:.2f}s(incl compile)"),
-        (f"sweep_seq_S{n_scenarios}_step", seq_step * 1e6,
-         f"total={seq_total:.2f}s(incl {n_scenarios}x compile)"),
-        (f"sweep_speedup_S{n_scenarios}", 0.0,
-         f"steady={seq_step/bank_step:.2f}x;"
-         f"end_to_end={seq_total/bank_total:.2f}x"),
-    ]
+    if include_sequential:
+        t0 = _time_mod.perf_counter()
+        seq_steady = 0.0
+        n_cls = [int(c) for c in sim.n_classes]
+        for spec in scenarios:
+            fl_s = dataclasses.replace(base_fl, **spec)
+            sim_s = HotaSim(sim.model, fl_s, TrainConfig(lr=3e-4), n_cls)
+            st = sim_s.init(jax.random.PRNGKey(0))
+            st, _ = sim_s.step(st, *batches[0], keys[0])      # compile
+            _block(st)
+            t1 = _time_mod.perf_counter()
+            for t in range(1, steps + 1):
+                st, _ = sim_s.step(st, *batches[t], keys[t])
+            _block(st)
+            seq_steady += _time_mod.perf_counter() - t1
+        seq_total = _time_mod.perf_counter() - t0
+        seq_step = seq_steady / steps
+        rows += [
+            (f"sweep_seq_S{n_scenarios}_step", seq_step * 1e6,
+             f"total={seq_total:.2f}s(incl {n_scenarios}x compile)"),
+            (f"sweep_speedup_S{n_scenarios}", 0.0,
+             f"steady={seq_step/bank_step:.2f}x;"
+             f"end_to_end={seq_total/bank_total:.2f}x"),
+        ]
+    return rows
 
 
 if __name__ == "__main__":

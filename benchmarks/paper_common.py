@@ -23,11 +23,24 @@ import numpy as np
 
 from repro.common.config import FLConfig
 from repro.core.paper_setup import paper_mlp_setup
-from repro.core.sweep import ScenarioBank
+from repro.core.sweep import ScenarioBank, ShardedScenarioBank
 from repro.data.radcom import TASKS
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "repro")
 EPOCH_STEPS = 10
+
+
+def make_bank(sim, specs, sharded=None):
+    """Pick the bank flavor for a scenario list: sharded when more than
+    one device is visible and the device count divides S evenly (the
+    scenario axis goes on the mesh — DESIGN.md §3.8), plain vmap
+    otherwise. ``sharded=True/False`` forces the choice."""
+    n_dev = len(jax.devices())
+    if sharded is None:
+        sharded = n_dev > 1 and len(specs) % n_dev == 0
+    if sharded:
+        return ShardedScenarioBank(sim, specs)
+    return ScenarioBank(sim, specs)
 
 
 def _scenario_result(name: str, spec: Dict, losses: np.ndarray,
@@ -63,6 +76,7 @@ def run_sweep(
     seed: int = 0,
     force: bool = False,
     log_every: int = 50,
+    sharded: Optional[bool] = None,
 ) -> Dict[str, Dict]:
     """Run ALL experiments as one compiled ScenarioBank sweep.
 
@@ -70,7 +84,8 @@ def run_sweep(
     (``weighting``, ``sigma2``, ``noise_std``, ``ota``). Every scenario sees
     the same data stream and per-step keys (common random numbers), which is
     exactly what the old sequential runner did one scenario at a time.
-    Results are cached per scenario under RESULTS_DIR.
+    Results are cached per scenario under RESULTS_DIR. ``sharded`` picks
+    the bank flavor (None = auto by device count and S — see make_bank).
     """
     os.makedirs(RESULTS_DIR, exist_ok=True)
     paths = {n: os.path.join(RESULTS_DIR, n + ".json") for n in experiments}
@@ -88,7 +103,7 @@ def run_sweep(
     for sp in specs:
         if "sigma2" in sp:
             sp["sigma2"] = tuple(sp["sigma2"])
-    bank = ScenarioBank(sim, specs)
+    bank = make_bank(sim, specs, sharded=sharded)
     states = bank.init(jax.random.PRNGKey(seed))
 
     losses, ps = [], []

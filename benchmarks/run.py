@@ -40,14 +40,51 @@ def main() -> None:
                          "and roofline)")
     ap.add_argument("--smoke", action="store_true",
                     help="small fast variant of every kernel row (CI)")
+    ap.add_argument("--sweep", action="store_true",
+                    help="sweep-engine rows only (sharded vs vmap vs "
+                         "sequential banks) on a forced multi-device CPU "
+                         "mesh; with --json also writes BENCH_sweep.json")
+    ap.add_argument("--sweep-devices", type=int, default=2,
+                    help="forced host device count for --sweep (default 2)")
     ap.add_argument("--json", nargs="?", const="BENCH_kernels.json",
                     default=None, metavar="PATH",
                     help="also write the kernel rows to PATH as JSON "
                          "(default BENCH_kernels.json) — the perf "
-                         "trajectory artifact")
+                         "trajectory artifact; sweep rows go to "
+                         "BENCH_sweep.json")
     args, _ = ap.parse_known_args()
 
+    if args.sweep:
+        # must land before ANY jax import in this process
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + " --xla_force_host_platform_device_count="
+                f"{args.sweep_devices}").strip()
+
     rows = []
+
+    if args.sweep:
+        # --- sweep-engine comparison: sharded vs vmap vs sequential -------
+        from benchmarks.kernel_bench import sweep_rows
+        s, steps = (8, 2) if args.smoke else (16, 3)
+        # smoke (CI) skips the S sequential re-compiles; the full pass
+        # keeps all three flavors for BENCH_sweep.json
+        srows = sweep_rows(n_scenarios=s, steps=steps,
+                           include_sequential=not args.smoke)
+        if args.json:
+            # honor an explicit --json PATH; the bare flag's const names
+            # the kernel artifact, so sweep rows default to their own file
+            path = ("BENCH_sweep.json" if args.json == "BENCH_kernels.json"
+                    else args.json)
+            with open(path, "w") as f:
+                json.dump({"rows": [
+                    {"name": n, "us_per_call": round(us, 1), "derived": d}
+                    for n, us, d in srows]}, f, indent=1)
+        print("name,us_per_call,derived")
+        for name, us, derived in srows:
+            print(f"{name},{us:.1f},{derived}")
+        return
 
     if not args.kernels:
         # --- paper figures (Figs. 2-4) -----------------------------------

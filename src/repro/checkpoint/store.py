@@ -7,7 +7,7 @@ Layout::
 
 Arrays are gathered to host before save (fine at example scale; sharded
 save would use a per-shard layout keyed by PartitionSpec — noted in
-DESIGN.md as the production extension point).
+DESIGN.md §3.9 as the production extension point).
 """
 from __future__ import annotations
 

@@ -20,7 +20,8 @@ Layout contract (relied on by ``repro.core.ota.final_layer_masks_packed``):
 * the head and tail sections are each zero-padded up to a multiple of
   ``ROW_QUANTUM`` (= 8·128), so every section — and the whole slab —
   reshapes exactly to the kernels' (rows, 128) view and each section can
-  be drawn from its own counter-based bit stream;
+  be drawn from its own counter-based bit stream (section folds and the
+  chunk-quantized draw are specified in DESIGN.md §4);
 * FedGradNorm's sparsified F_grad (eqs. 5-7) needs exactly the masks of
   ω̃: with this layout they are the tail slice of the same flat channel
   draw the transmission uses — no second per-leaf mask loop.
@@ -138,6 +139,9 @@ class TreePacker:
     def unpack_tail(self, tail_slab: jax.Array):
         """(..., tail_len) tail slice -> the ``tail`` subtree's pytree,
         leaves (..., *shape) — dtype is NOT cast (masks stay bool etc.)."""
+        if self.tail_name is None:
+            raise ValueError("this packer was built with tail=None — it has "
+                             "no tail section to unpack")
         batch = tail_slab.shape[:-1]
         sub_leaves = []
         for i in self.tail_indices:

@@ -4,7 +4,8 @@
 * ota.py          — fading-MAC channel model + OTA aggregation (eqs. 3-10)
 * fedgradnorm.py  — channel-sparsified FedGradNorm (Alg. 2, eqs. 5-6)
 * sim.py          — paper-scale faithful simulator (Alg. 1; vmap C x N)
-* sweep.py        — ScenarioBank: vmap'd multi-scenario sweeps, one jit
+* sweep.py        — ScenarioBank / ShardedScenarioBank: multi-scenario
+                    sweeps, one jit (vmap'd or scenario-sharded)
 * hota.py         — distributed machinery: custom-vjp OTA-FSDP gather
 * hota_step.py    — the production shard_map training step
 * power.py        — eq. (4): expected transmit power + H_th calibration
@@ -22,7 +23,7 @@ from repro.core.ota import (
     power_allocation, sample_gain, transmit_signal, tree_channel,
 )
 from repro.core.sim import HotaSim, SimState, masked_cls_loss
-from repro.core.sweep import ScenarioBank
+from repro.core.sweep import ScenarioBank, ShardedScenarioBank
 from repro.core.hota import (
     OTACtx, build_axes_registry, make_ota_gather, make_packed_final_gather,
     make_param_hook, packed_final_norm,
@@ -34,7 +35,7 @@ from repro.core.power import (
 
 __all__ = [
     "ChannelParams", "channel_params", "cluster_channel",
-    "stack_channel_params", "ScenarioBank",
+    "stack_channel_params", "ScenarioBank", "ShardedScenarioBank",
     "FGNState", "fgn_init", "fgn_update", "fgn_update_gated", "fgn_grad_p",
     "fgn_targets", "fgrad_value", "masked_tree_norm", "gain_mask",
     "final_layer_masks_packed", "ota_aggregate_leaf", "ota_aggregate_packed",

@@ -16,7 +16,12 @@ module lifts exactly those knobs into ``ChannelParams``, a pytree of
 
 Because every field is traced, a bank of S scenarios is just a
 ``ChannelParams`` whose leaves carry a leading (S,) axis — ``vmap`` over it
-and one jit serves every scenario (see ``repro.core.sweep``).
+and one jit serves every scenario (see ``repro.core.sweep``); shard the
+same leading axis over a ("scenario",) mesh and the bank scales past
+one device (``ShardedScenarioBank``, DESIGN.md §3.8). The distributed
+step consumes the SAME pytree: ``make_hota_train_step``'s step_fn takes
+an optional ``ChannelParams`` whose ``fgn_on`` gate selects dynamic vs.
+equal weighting inside one compiled step.
 
 Topology knobs (``n_clusters``, ``n_clients``, ``tau_h``, ``tau_w``) and
 optimizer hyper-parameters (``gamma``, ``alpha``, ``p_min``) stay static in

@@ -38,14 +38,13 @@ import numpy as np
 from repro.common.config import FLConfig, ModelConfig, TrainConfig
 from repro.common.flatpack import packer_for
 from repro.core.channel import ChannelParams
-from repro.kernels.ota_channel.ops import _ota_channel_impl
+from repro.kernels.ota_channel.ops import _ON_TPU, _ota_channel_impl
 from repro.kernels.slab import flat_to_slab
 from repro.models.model import Model, lm_loss
 from repro.models.params import logical_axes
 from repro.optim.adam import adam_init, adam_update
 
 CLIENT_AXIS = "client"
-_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
 
 KLASS_SALT = {
     "embed": 1, "layers": 2, "final": 3, "mamba": 4,

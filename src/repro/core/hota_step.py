@@ -11,9 +11,24 @@ state_specs) where step_fn is the *full* Algorithm 1 round:
            the custom-vjp OTA gather (LAN psum -> masked MAC psum -> ĝ);
            Adam on the FSDP shards (the PS update), local Adam on heads.
 
+Every channel/weighting knob is TRACED (DESIGN.md §3.8): ``step_fn`` takes
+an optional ``ChannelParams`` whose leaves (σ², H_th, noise std, the
+``ota_on`` gate AND the ``fgn_on`` weighting gate) are plain arrays, so one
+compiled step serves every scenario — dynamic vs. equal weighting is a
+``jnp.where`` blend of the Alg.-2 update and the p≡1 passthrough (the same
+gating ``sim.step_with_channel`` uses via ``fgn_update_gated``), never a
+retrace. Phases 0/A/B always run; the equal-weight scenario simply selects
+the passthrough (collectives stay uniform across devices — no lax.cond).
+Omitting ``chan`` uses the knobs baked from the factory's ``FLConfig`` —
+and when that config is the naive baseline (equal weighting AND τ_h = 0),
+default-chan calls take a statically-specialized trace with phases 0/A/B
+removed entirely (their outputs could never be consumed).
+
 Scale adaptations vs the paper (DESIGN.md §3.7): τ_ω = 1 (per-client local
 ω copies are impossible at 14B-141B params); the loss over the vocab head
-is computed in sequence chunks to bound logit memory.
+is computed in sequence chunks to bound logit memory. With τ_h = 0 there
+is no phase A, so heads train on the phase-C gradient instead (for every
+scenario — head training must be scenario-uniform under a traced gate).
 """
 from __future__ import annotations
 
@@ -37,23 +52,14 @@ from repro.core.hota import (
 from repro.models.model import Model
 from repro.models.params import init_params, logical_axes
 from repro.optim.adam import AdamState, adam_init, adam_update
+from repro.sharding.mesh_utils import shard_map_compat
 
 LOSS_CHUNK = 512
 
 
-def _shard_map(f, mesh, in_specs, out_specs, axis_names):
-    """jax.shard_map appeared in newer jax; fall back to the experimental
-    API. The fallback goes fully manual (no ``auto`` axes): on old
-    jax/jaxlib, axis_index inside a partially-manual region lowers to a
-    PartitionId op the SPMD partitioner rejects. No spec references the
-    "model" axis, so full-manual is spec-equivalent there."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, axis_names=axis_names,
-                             check_vma=False)
-    from jax.experimental.shard_map import shard_map as _sm
-    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-               check_rep=False)
+# no spec here references the "model" axis, so the compat fallback's
+# full-manual mode is spec-equivalent for this step
+_shard_map = shard_map_compat
 
 
 def chunked_lm_loss(head, head_apply, feats, labels, chunk=LOSS_CHUNK):
@@ -108,7 +114,12 @@ def make_hota_train_step(
     loss_kind: str = "lm",
     n_out: Optional[int] = None,
 ):
-    """Returns (init_fn, sharded_step_fn, state_sharding, batch_sharding)."""
+    """Returns (init_fn, sharded_step_fn, state_sharding, batch_sharding).
+
+    ``sharded_step_fn(state, tokens, labels, key, chan=None)``: ``chan`` is
+    an optional traced ``ChannelParams`` (σ² of shape (n_total_clusters,))
+    overriding the factory config's knobs for this call — scenario sweeps
+    pass a different ``chan`` per call into ONE compiled step."""
     cfg = model.cfg
     data_axes = _mesh_data_axes(mesh)           # ("cluster","client")
     cluster_axes = _mesh_cluster_axes(mesh)     # ("pod","cluster") | ("cluster",)
@@ -183,10 +194,11 @@ def make_hota_train_step(
             step=jnp.zeros((), jnp.int32))
 
     # ---------------- the sharded step ----------------
-    def _step(state: HotaState, tokens, labels, key):
+    def _step(state: HotaState, tokens, labels, key, chan: ChannelParams,
+              fast: bool = False):
         base_key = jax.random.fold_in(key, state.step)
         cidx = cluster_index(cluster_axes)
-        chan_c = cluster_channel(chan_all, cidx)
+        chan_c = cluster_channel(chan, cidx)
         head = jax.tree.map(lambda a: a[0], state.heads)
         head_opt = AdamState(step=state.head_opt.step,
                              mu=jax.tree.map(lambda a: a[0], state.head_opt.mu),
@@ -194,22 +206,25 @@ def make_hota_train_step(
         p_i = state.p[0]
         f0_i = state.f0[0]
 
-        # fast path: equal weighting + no local head steps needs no FGN
-        # inputs at all — phases 0/A/B vanish (the naive-baseline config).
-        skip_fgn = fl.weighting == "equal" and fl.tau_h == 0
-
-        if skip_fgn:
-            p_new = jnp.ones(())
+        if fast:
+            # statically-specialized naive baseline (equal weighting,
+            # τ_h = 0, no chan override): phases 0/A/B vanish. Same
+            # passthrough semantics as the traced gate below, minus the
+            # discarded FGN inputs (f0 stays frozen — it is only read by
+            # the FGN branch, which this trace can never take).
+            p_new = p_i
             mu, nu = state.fgn_mu[0], state.fgn_nu[0]
+            fgn_t_new = state.fgn_t
             fgrad_val = jnp.zeros(())
             n_i = jnp.zeros(())
             f0 = f0_i
         else:
-            # ---- phase 0: trunk features (ω frozen; broadcast = gather) ----
+            # ---- phase 0: trunk features (ω frozen; broadcast = gather) --
             hook_fwd = make_param_hook(gather, registry, base_key, 1.0,
                                        chan_c)
             hidden, _, _ = model.trunk_apply(state.omega["trunk"], tokens,
-                                             mode="train", param_hook=hook_fwd)
+                                             mode="train",
+                                             param_hook=hook_fwd)
             hidden = jax.lax.stop_gradient(hidden)
 
             final_full = _plain_gather_tree(state.omega["final"], final_axes,
@@ -219,7 +234,7 @@ def make_hota_train_step(
                 feats = model.final_apply(ff, hidden)
                 return loss_fn(hd, feats, labels)
 
-            # ---- phase A: τ_h personalized-head steps (Alg. 1 l. 10-11) ----
+            # ---- phase A: τ_h personalized-head steps (Alg. 1 l. 10-11) --
             def head_step(carry, _):
                 hd, hopt = carry
                 g = jax.grad(lambda h_: tail_loss(final_full, h_))(hd)
@@ -236,33 +251,46 @@ def make_hota_train_step(
                                         cluster_axes)
             else:
                 n_i = _masked_final_norm(g_final, final_axes, base_key,
-                                         chan_c, fl, cluster_axes, n_clients)
+                                         chan_c, fl, cluster_axes,
+                                         n_clients)
             f0 = jnp.where(state.step == 0, F_i, f0_i)
             ratio = F_i / jnp.maximum(f0, 1e-12)
 
-            if fl.weighting == "fedgradnorm":
-                gbar = jax.lax.pmean(p_i * n_i, CLIENT_AXIS_NAME)
-                rmean = jax.lax.pmean(ratio, CLIENT_AXIS_NAME)
-                target = jnp.power(
-                    jnp.maximum(ratio / jnp.maximum(rmean, 1e-12), 1e-12),
-                    fl.gamma)
-                resid = p_i * n_i - gbar * target
-                gp = jnp.sign(resid) * n_i
-                fgrad_val = jax.lax.psum(jnp.abs(resid), CLIENT_AXIS_NAME)
-                # scalar Adam on p_i (state shared-stepped)
-                t = (state.fgn_t + 1).astype(jnp.float32)
-                b1, b2, eps = 0.9, 0.999, 1e-8
-                mu = b1 * state.fgn_mu[0] + (1 - b1) * gp
-                nu = b2 * state.fgn_nu[0] + (1 - b2) * gp * gp
-                p_new = p_i - fl.alpha * (mu / (1 - b1 ** t)) / (
-                    jnp.sqrt(nu / (1 - b2 ** t)) + eps)
-                p_new = jnp.maximum(p_new, fl.p_min + 1e-6)
-                p_new = p_new * n_clients / jnp.maximum(
-                    jax.lax.psum(p_new, CLIENT_AXIS_NAME), 1e-12)
-            else:
-                mu, nu = state.fgn_mu[0], state.fgn_nu[0]
-                p_new = jnp.ones(())
-                fgrad_val = jnp.zeros(())
+            # Alg. 2, computed unconditionally so the psums stay uniform
+            # across devices, then selected by the traced weighting gate —
+            # equal-weight scenarios take the passthrough of the SAME
+            # trace (the distributed analogue of fgn_update_gated).
+            gbar = jax.lax.pmean(p_i * n_i, CLIENT_AXIS_NAME)
+            rmean = jax.lax.pmean(ratio, CLIENT_AXIS_NAME)
+            target = jnp.power(
+                jnp.maximum(ratio / jnp.maximum(rmean, 1e-12), 1e-12),
+                fl.gamma)
+            resid = p_i * n_i - gbar * target
+            gp = jnp.sign(resid) * n_i
+            fgrad_fgn = jax.lax.psum(jnp.abs(resid), CLIENT_AXIS_NAME)
+            # scalar Adam on p_i (state shared-stepped)
+            t = (state.fgn_t + 1).astype(jnp.float32)
+            b1, b2, eps = 0.9, 0.999, 1e-8
+            mu_fgn = b1 * state.fgn_mu[0] + (1 - b1) * gp
+            nu_fgn = b2 * state.fgn_nu[0] + (1 - b2) * gp * gp
+            p_fgn = p_i - fl.alpha * (mu_fgn / (1 - b1 ** t)) / (
+                jnp.sqrt(nu_fgn / (1 - b2 ** t)) + eps)
+            p_fgn = jnp.maximum(p_fgn, fl.p_min + 1e-6)
+            p_fgn = p_fgn * n_clients / jnp.maximum(
+                jax.lax.psum(p_fgn, CLIENT_AXIS_NAME), 1e-12)
+
+            # gate off: p/mu/nu/t ALL pass through untouched — identical
+            # to fgn_update_gated's FGNState gating, so a scenario
+            # schedule that flips the gate mid-run sees the same p
+            # trajectory (and the same Adam bias-correction t) as the
+            # sim path. p starts at 1, so for pure-equal runs the
+            # passthrough is the old static p≡1 branch.
+            fgn_on = chan_c.fgn_on > 0.5
+            p_new = jnp.where(fgn_on, p_fgn, p_i)
+            mu = jnp.where(fgn_on, mu_fgn, state.fgn_mu[0])
+            nu = jnp.where(fgn_on, nu_fgn, state.fgn_nu[0])
+            fgn_t_new = jnp.where(fgn_on, state.fgn_t + 1, state.fgn_t)
+            fgrad_val = jnp.where(fgn_on, fgrad_fgn, jnp.zeros(()))
 
         # ---- phase C: full backward through the OTA aggregation ----
         # Channel keys fold only (step, layer, leaf): masks and AWGN are
@@ -311,9 +339,11 @@ def make_hota_train_step(
         omega, opt = adam_update(g_omega, state.opt, state.omega, tcfg.lr,
                                  tcfg.betas[0], tcfg.betas[1], tcfg.eps,
                                  tcfg.weight_decay)
-        # Alg. 1 trains heads only in the τ_h phase (lines 10-11); the
-        # fast path has no phase A, so it trains heads here instead.
-        if skip_fgn:
+        # Alg. 1 trains heads only in the τ_h phase (lines 10-11); with
+        # τ_h = 0 there is no phase A, so heads train on the phase-C
+        # gradient instead — statically, for EVERY scenario, so the trace
+        # stays weighting-polymorphic.
+        if fl.tau_h == 0:
             head, head_opt = adam_update(g_head, head_opt, head, tcfg.lr)
 
         new_state = HotaState(
@@ -323,7 +353,7 @@ def make_hota_train_step(
                                mu=jax.tree.map(lambda a: a[None], head_opt.mu),
                                nu=jax.tree.map(lambda a: a[None], head_opt.nu)),
             p=p_new[None], fgn_mu=mu[None], fgn_nu=nu[None],
-            fgn_t=state.fgn_t + 1, f0=f0[None], step=state.step + 1)
+            fgn_t=fgn_t_new, f0=f0[None], step=state.step + 1)
 
         metrics = {
             "loss": jax.lax.pmean(loss_val, client_axes),
@@ -335,11 +365,31 @@ def make_hota_train_step(
         }
         return new_state, metrics
 
-    sharded_step = _shard_map(
-        _step, mesh=mesh,
-        in_specs=(state_specs, batch_spec[0], batch_spec[1], P()),
-        out_specs=(state_specs, metric_spec),
-        axis_names=manual_axes)
+    chan_spec = ChannelParams(*([P()] * len(ChannelParams._fields)))
+    in_specs = (state_specs, batch_spec[0], batch_spec[1], P(), chan_spec)
+    sharded_inner = _shard_map(
+        _step, mesh=mesh, in_specs=in_specs,
+        out_specs=(state_specs, metric_spec), axis_names=manual_axes)
+    # statically-specialized naive baseline: with equal weighting and no
+    # head phase baked into the config, the FGN inputs can never be
+    # consumed, so default-chan calls dispatch to a trace with phases
+    # 0/A/B removed (the pre-traced-knobs fast path). A supplied chan
+    # always takes the scenario-polymorphic trace.
+    fast_inner = (_shard_map(
+        partial(_step, fast=True), mesh=mesh, in_specs=in_specs,
+        out_specs=(state_specs, metric_spec), axis_names=manual_axes)
+        if fl.weighting == "equal" and fl.tau_h == 0 else None)
+
+    def sharded_step(state: HotaState, tokens, labels, key,
+                     chan: Optional[ChannelParams] = None):
+        if chan is None:
+            inner = fast_inner if fast_inner is not None else sharded_inner
+            return inner(state, tokens, labels, key, chan_all)
+        if chan.sigma2.shape != (n_total_clusters,):
+            raise ValueError(
+                f"chan.sigma2 shape {chan.sigma2.shape} != "
+                f"(n_total_clusters,) = ({n_total_clusters},)")
+        return sharded_inner(state, tokens, labels, key, chan)
 
     return init_fn, sharded_step, state_specs, batch_spec
 

@@ -152,9 +152,12 @@ class HotaSim:
     def step_with_channel(self, state: SimState, xb, yb, key,
                           chan: ChannelParams, ota_bits_mode: str = "fused"):
         """Un-jitted step body with explicit traced ChannelParams — the
-        vmap target of ``repro.core.sweep.ScenarioBank`` (which passes
-        ``ota_bits_mode="supplied"`` so the packed channel draw hoists
-        out of the scenario vmap; same stream, same results)."""
+        vmap target of ``repro.core.sweep.ScenarioBank`` and, per device,
+        of ``ShardedScenarioBank``'s scenario-sharded shard_map (DESIGN.md
+        §3.8). Both pass ``ota_bits_mode="supplied"`` so the packed
+        channel draw — a function of the shared key only — hoists out of
+        the scenario vmap and is never re-drawn per scenario or per
+        shard; same stream, same results as the fused default."""
         fl, tcfg = self.fl, self.tcfg
         upd = jax.vmap(jax.vmap(self._client_update,
                                 in_axes=(None, 0, 0, 0, 0, 0)),

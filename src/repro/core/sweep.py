@@ -19,6 +19,16 @@ axis and ``vmap``s ``HotaSim.step_with_channel`` over it inside one jit:
 * XLA batches the S scenarios through the same fused kernels, so the sweep
   costs far less than S sequential runs even ignoring compile time.
 
+``ShardedScenarioBank`` (DESIGN.md §3.8) puts the same (S,) axis on a
+1-D ``("scenario",)`` device mesh: scenario-batched state and ChannelParams
+leaves are scenario-split, while the batch/PRNG inputs stay replicated on
+every shard — common random numbers are preserved ACROSS shards, and the
+plain ``vmap`` memory ceiling (all S states resident on one device) becomes
+S/n_devices per device, so S ≫ 8 banks scale out instead of OOMing. The
+packed OTA path's ``ota_bits_mode="supplied"`` draw depends only on the
+shared key, so every shard computes the identical bit stream its scenarios
+would see unsharded — the draw never varies per scenario or per shard.
+
 Scenarios may vary only the traced knobs (``sigma2``, ``h_threshold``,
 ``noise_std``, ``ota``, ``weighting``); every other ``FLConfig`` field —
 topology, local steps, FGN hyper-params, ``ota_mode``, ... — is baked into
@@ -37,6 +47,8 @@ from repro.common.config import FLConfig
 from repro.core.channel import ChannelParams, channel_params, \
     stack_channel_params
 from repro.core.sim import HotaSim, SimState
+from repro.sharding.mesh_utils import SCENARIO_AXIS, bank_sharding, \
+    replicated_sharding, scenario_axis_size, shard_map_compat
 
 # the ONLY FLConfig fields a scenario may vary — everything else is baked
 # into the trace (topology, local steps, FGN hyper-params, ota_mode, ...)
@@ -61,12 +73,14 @@ def _as_channel_params(sc: Scenario, base: FLConfig) -> ChannelParams:
     for f in dataclasses.fields(FLConfig):
         if f.name in TRACED_FIELDS:
             continue
-        if getattr(sc, f.name) != getattr(base, f.name):
+        sc_val, base_val = getattr(sc, f.name), getattr(base, f.name)
+        if sc_val != base_val:
             raise ValueError(
-                f"scenario field {f.name!r} = {getattr(sc, f.name)!r} differs "
-                f"from the bank's base config ({getattr(base, f.name)!r}); "
-                f"only traced knobs {sorted(TRACED_FIELDS)} may vary within "
-                f"a ScenarioBank — build a second bank for static changes")
+                f"scenario field {f.name!r} differs from the bank's base "
+                f"config: scenario has {f.name}={sc_val!r}, base has "
+                f"{f.name}={base_val!r}; only traced knobs "
+                f"{sorted(TRACED_FIELDS)} may vary within a ScenarioBank — "
+                f"build a second bank for static changes")
     return channel_params(sc)
 
 
@@ -104,8 +118,7 @@ class ScenarioBank:
         states and the returned metrics carry the leading (S,) axis."""
         return self._step(states, xb, yb, key, self.chan_bank)
 
-    @partial(jax.jit, static_argnums=0)
-    def _step(self, states, xb, yb, key, chan_bank):
+    def _vmapped_step(self, states, xb, yb, key, chan_bank):
         # supplied bits mode: the packed OTA path pre-draws its (shared,
         # key-only) bit streams so the RNG hoists out of the scenario
         # vmap — one draw per round, not per scenario (same stream and
@@ -114,6 +127,10 @@ class ScenarioBank:
                        ota_bits_mode="supplied")
         return jax.vmap(step, in_axes=(0, None, None, None, 0))(
             states, xb, yb, key, chan_bank)
+
+    @partial(jax.jit, static_argnums=0)
+    def _step(self, states, xb, yb, key, chan_bank):
+        return self._vmapped_step(states, xb, yb, key, chan_bank)
 
     # ------------------------------------------------------------------
     def run(self, states: SimState, batches: Iterable[Tuple[Any, Any]],
@@ -133,3 +150,71 @@ class ScenarioBank:
     def scenario_state(self, states: SimState, s: int) -> SimState:
         """Slice one scenario's unbatched SimState out of the bank."""
         return jax.tree.map(lambda x: x[s], states)
+
+
+class ShardedScenarioBank(ScenarioBank):
+    """A ScenarioBank whose (S,) axis is sharded over a "scenario" mesh.
+
+    Same single-trace vmapped step as the base class, but wrapped in a
+    manual ``shard_map`` over the 1-D ``("scenario",)`` mesh: each device
+    runs the step on its LOCAL S/n_devices slice of the scenario-batched
+    state and ChannelParams bank, while the per-step batch and PRNG key
+    enter replicated (``P()``) — every shard consumes bit-identical
+    data/keys, so the CRN contract survives sharding. The step body has
+    no cross-scenario collectives, so the shards run embarrassingly
+    parallel (manual mode — GSPMD never gets the chance to replicate the
+    compute or insert all-gathers). See DESIGN.md §3.8.
+
+    >>> mesh = make_scenario_mesh()                 # repro.launch.mesh
+    >>> bank = ShardedScenarioBank(sim, scenarios, mesh)
+    >>> states = bank.init(jax.random.PRNGKey(0))   # leaves (S,...) sharded
+    >>> states, m = bank.step(states, xb, yb, key)  # m: (S, C, N) sharded
+    """
+
+    def __init__(self, sim: HotaSim, scenarios: Sequence[Scenario],
+                 mesh=None):
+        super().__init__(sim, scenarios)
+        if mesh is None:
+            from repro.launch.mesh import make_scenario_mesh
+            mesh = make_scenario_mesh()
+        n_dev = scenario_axis_size(mesh)
+        if self.n_scenarios % n_dev:
+            raise ValueError(
+                f"scenario count S={self.n_scenarios} must divide evenly "
+                f"over the {n_dev}-device scenario mesh — pad the bank or "
+                f"shrink the mesh (make_scenario_mesh(n_devices=...))")
+        self.mesh = mesh
+        self._banked = bank_sharding(mesh)
+        self._shared = replicated_sharding(mesh)
+        self.chan_bank = jax.device_put(self.chan_bank, self._banked)
+
+    # ------------------------------------------------------------------
+    def init(self, key: jax.Array) -> SimState:
+        """(S,)-batched initial state, scenario-split across the mesh.
+        Init itself is shared (CRN extends to init): each shard holds its
+        scenarios' identical copy of the same model/optimizer state."""
+        return jax.device_put(super().init(key), self._banked)
+
+    # ------------------------------------------------------------------
+    def step(self, states: SimState, xb, yb, key: jax.Array):
+        """One Alg.-1 round for every scenario, scenario-parallel across
+        devices. ``xb``/``yb``/``key`` are committed replicated so every
+        shard reads identical data and keys; the supplied-bits channel
+        draw depends only on the shared key, so each shard computes the
+        same stream its scenarios would see unsharded."""
+        xb = jax.device_put(jnp.asarray(xb), self._shared)
+        yb = jax.device_put(jnp.asarray(yb), self._shared)
+        key = jax.device_put(key, self._shared)
+        return self._step(states, xb, yb, key, self.chan_bank)
+
+    @partial(jax.jit, static_argnums=0)
+    def _step(self, states, xb, yb, key, chan_bank):
+        from jax.sharding import PartitionSpec as P
+        banked, shared = P(SCENARIO_AXIS), P()
+        f = shard_map_compat(
+            self._vmapped_step,
+            mesh=self.mesh,
+            in_specs=(banked, shared, shared, shared, banked),
+            out_specs=(banked, banked),
+            axis_names={SCENARIO_AXIS})
+        return f(states, xb, yb, key, chan_bank)

@@ -28,7 +28,9 @@ and zeroes the AWGN (the error-free baseline) inside the same kernel.
 Tiling: slabs are (rows, 128) — lane-aligned for the VPU — processed in
 (CHUNK_ROWS, 128) chunks (sublane-aligned for f32 packing) with the
 cluster loop unrolled in-kernel (C is static). All compute is
-elementwise VPU work.
+elementwise VPU work. The chunk-quantized key schedule — which streams
+exist, what CHUNK_ROWS pins, and why blocking can never shift a draw —
+is specified normatively in DESIGN.md §4 (the RNG stream spec).
 
 Validated in interpret mode against ref.ota_channel_ref /
 ref.ota_aggregate_slab_ref on the same bits stream.
@@ -173,7 +175,8 @@ def _ota_aggregate_kernel(wg_ref, bits_ref, nbits_ref, params_ref, out_ref,
 # (CHUNK_ROWS, 128) pieces keyed by fold_in(fold_in(section_key, cluster),
 # chunk) — so the stream NEVER depends on how the loop is blocked, and a
 # chunk (512 KB of f32) is also the VMEM/cache-sized work unit per step.
-# Changing CHUNK_ROWS changes the draw — it is part of the stream spec.
+# Changing CHUNK_ROWS changes the draw — it is part of the stream spec
+# (DESIGN.md §4).
 CHUNK_ROWS = 1024
 # chunk loops up to this long are unrolled (faster in interpret mode);
 # longer slabs use fori_loop so compile time stays independent of P

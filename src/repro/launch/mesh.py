@@ -24,3 +24,19 @@ def make_debug_mesh(shape=(2, 2, 2), axes=("cluster", "client", "model")):
     import numpy as np
     devs = np.array(jax.devices())[: int(np.prod(shape))].reshape(shape)
     return jax.sharding.Mesh(devs, axes)
+
+
+def make_scenario_mesh(n_devices=None):
+    """1-D ("scenario",) mesh for sharded sweep banks (DESIGN.md §3.8).
+
+    ``ShardedScenarioBank`` lays its (S,)-batched states and ChannelParams
+    bank over this axis while batch/PRNG inputs stay replicated (common
+    random numbers preserved across shards). Defaults to every visible
+    device; pass ``n_devices`` to take a prefix. On CPU, force multiple
+    host devices with ``XLA_FLAGS=--xla_force_host_platform_device_count``.
+    """
+    import numpy as np
+    devs = jax.devices()
+    if n_devices is not None:
+        devs = devs[:n_devices]
+    return jax.sharding.Mesh(np.array(devs), ("scenario",))

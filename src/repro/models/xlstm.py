@@ -11,7 +11,7 @@ exactly as the paper describes it (no parallel form exists).
 Block pattern (xlstm-1.3b): every ``slstm_every``-th block is sLSTM; the
 stack is scanned as super-blocks of (slstm_every-1 mLSTM + 1 sLSTM).
 
-Simplifications vs the reference implementation (documented in DESIGN.md):
+Simplifications vs the reference implementation (DESIGN.md §3.5):
 the short causal conv in front of q/k and per-block learnable skip scales
 are omitted; gates use exp input gate + sigmoid forget gate (one of the two
 variants the paper ablates).

@@ -1,4 +1,4 @@
-"""Mesh helpers: the FL-refined view and axis bookkeeping.
+"""Mesh helpers: the FL-refined view, scenario axis, and axis bookkeeping.
 
 ``make_production_mesh()`` (repro.launch.mesh) returns the assignment's
 meshes: (16,16) ("data","model") and (2,16,16) ("pod","data","model").
@@ -7,13 +7,21 @@ aggregation) from *clusters* (over-the-air MAC). ``fl_view`` reshapes the
 same devices, in the same order, splitting "data" into
 ("cluster", "client") — global array layouts are unchanged, only collective
 scoping differs. This mirrors the dp/fsdp axis split in MaxText.
+
+The SCENARIO axis (DESIGN.md §3.8) is orthogonal to the FL axes: a sweep
+bank's (S,) leading dimension lives on a 1-D ("scenario",) mesh
+(``repro.launch.mesh.make_scenario_mesh``); ``bank_sharding`` /
+``replicated_sharding`` below are the two placements a sharded bank uses —
+scenario-split state vs. replicated batch/PRNG (common random numbers).
 """
 from __future__ import annotations
 
 from typing import Tuple
 
 import numpy as np
-from jax.sharding import Mesh
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+SCENARIO_AXIS = "scenario"
 
 
 def fl_view(mesh: Mesh, n_clients: int) -> Mesh:
@@ -59,3 +67,40 @@ def total_clients(mesh: Mesh) -> int:
     for a in ("pod", "cluster", "client"):
         n *= sizes.get(a, 1)
     return n
+
+
+# --------------------------------------------------------------------------
+# scenario axis (sharded sweep banks — DESIGN.md §3.8)
+# --------------------------------------------------------------------------
+
+def shard_map_compat(f, mesh, in_specs, out_specs, axis_names):
+    """jax.shard_map appeared in newer jax; fall back to the experimental
+    API. The fallback goes fully manual (no ``auto`` axes): on old
+    jax/jaxlib, axis_index inside a partially-manual region lowers to a
+    PartitionId op the SPMD partitioner rejects."""
+    import jax
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=axis_names,
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+def scenario_axis_size(mesh: Mesh) -> int:
+    """Device count along the scenario axis of a sweep mesh."""
+    assert SCENARIO_AXIS in mesh.axis_names, mesh
+    return int(mesh.devices.shape[mesh.axis_names.index(SCENARIO_AXIS)])
+
+
+def bank_sharding(mesh: Mesh) -> NamedSharding:
+    """Placement for (S, ...) bank leaves: leading axis scenario-split."""
+    return NamedSharding(mesh, PartitionSpec(SCENARIO_AXIS))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Placement for the shared batch/PRNG inputs: fully replicated, so
+    every scenario shard consumes identical data and keys (the common-
+    random-numbers contract of the sweep engine)."""
+    return NamedSharding(mesh, PartitionSpec())

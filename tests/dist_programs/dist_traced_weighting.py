@@ -1,0 +1,122 @@
+"""Subprocess program: the traced weighting gate of the distributed step.
+
+``make_hota_train_step``'s step_fn takes an optional traced ChannelParams;
+its ``fgn_on`` gate selects dynamic vs. equal weighting INSIDE one
+compiled step. This program pins the gate to the statically-baked
+behavior in both directions on the 8-device (2x2x2) mesh:
+
+* a step factory built from weighting="fedgradnorm", driven with a chan
+  override carrying fgn_on=0, must reproduce the factory built from
+  weighting="equal" running on its defaults — and vice versa.
+
+Run: python dist_traced_weighting.py   (sets its own XLA_FLAGS)
+"""
+import dataclasses
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.config import FLConfig, ModelConfig, TrainConfig
+from repro.core.channel import channel_params
+from repro.core.hota_step import make_hota_train_step
+from repro.models.model import build_model
+
+C, N, B, D = 2, 2, 4, 256
+MAXC = 8
+STEPS = 3
+
+cfg = ModelConfig(family="mlp", compute_dtype="float32")
+model = build_model(cfg)
+tcfg = TrainConfig(lr=1e-3)
+devs = np.array(jax.devices()).reshape(C, N, 2)
+mesh = Mesh(devs, ("cluster", "client", "model"))
+
+fl_fgn = FLConfig(n_clusters=C, n_clients=N, weighting="fedgradnorm",
+                  noise_std=0.1, tau_h=1)
+fl_eq = dataclasses.replace(fl_fgn, weighting="equal")
+
+key = jax.random.PRNGKey(0)
+x = jax.random.normal(jax.random.fold_in(key, 1), (C * N * B, D))
+y = jax.random.randint(jax.random.fold_in(key, 2), (C * N * B,), 0, MAXC)
+
+
+def run(fl_static, chan_override):
+    init_fn, step_fn, state_specs, batch_spec = make_hota_train_step(
+        model, mesh, fl_static, tcfg, loss_kind="cls", n_out=MAXC)
+    state = init_fn(jax.random.PRNGKey(123))
+    state = jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+        state, state_specs, is_leaf=lambda z: isinstance(z, P))
+    xb = jax.device_put(x, NamedSharding(mesh, batch_spec[0]))
+    yb = jax.device_put(y, NamedSharding(mesh, batch_spec[1]))
+    jstep = jax.jit(step_fn)
+    ms = []
+    for s in range(STEPS):
+        state, m = jstep(state, xb, yb, jax.random.PRNGKey(7 + s),
+                         chan_override)
+        ms.append(m)
+    return state, ms
+
+
+def compare(tag, a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   rtol=1e-6, atol=1e-7, err_msg=tag)
+
+
+chan_eq = channel_params(fl_eq, n_clusters=C)
+chan_fgn = channel_params(fl_fgn, n_clusters=C)
+
+# the weighting gate is TRACED: a step factory baked from either static
+# config, driven with the other weighting's ChannelParams, must
+# reproduce the factory whose static config matches those params
+st_a, ms_a = run(fl_fgn, chan_eq)
+st_b, ms_b = run(fl_eq, chan_eq)
+compare("fgn_factory+eq_chan vs eq_factory+eq_chan", st_a, st_b)
+compare("metrics", ms_a, ms_b)
+assert all(float(m["p_mean"]) == 1.0 for m in ms_a)   # gate off: p stays 1
+
+st_c, ms_c = run(fl_eq, chan_fgn)
+st_d, ms_d = run(fl_fgn, chan_fgn)
+compare("eq_factory+fgn_chan vs fgn_factory+fgn_chan", st_c, st_d)
+compare("metrics", ms_c, ms_d)
+# the gate really turned Alg. 2 on: weights moved off 1
+assert not np.allclose(np.asarray(ms_c[-1]["p_min"]), 1.0)
+
+# chan=None (knobs baked from the factory's FLConfig) is the same math —
+# XLA may fold the constants into different fusions, so compare the loss
+# trajectory at float tolerance rather than params bitwise
+_, ms_def = run(fl_fgn, None)
+for m_def, m_arg in zip(ms_def, ms_d):
+    assert abs(float(m_def["loss"]) - float(m_arg["loss"])) < 2e-4
+    assert abs(float(m_def["p_mean"]) - float(m_arg["p_mean"])) < 1e-4
+
+# gate-flip schedule: turning FGN off mid-run FREEZES p (and the FGN
+# Adam state/t) exactly like the sim's fgn_update_gated — it must NOT
+# reset p to 1 or keep ticking the bias-correction step
+init_fn, step_fn, state_specs, batch_spec = make_hota_train_step(
+    model, mesh, fl_fgn, tcfg, loss_kind="cls", n_out=MAXC)
+state = init_fn(jax.random.PRNGKey(123))
+state = jax.tree.map(
+    lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+    state, state_specs, is_leaf=lambda z: isinstance(z, P))
+xb = jax.device_put(x, NamedSharding(mesh, batch_spec[0]))
+yb = jax.device_put(y, NamedSharding(mesh, batch_spec[1]))
+jstep = jax.jit(step_fn)
+for s in range(2):
+    state, _ = jstep(state, xb, yb, jax.random.PRNGKey(7 + s), chan_fgn)
+p_after_fgn = np.asarray(state.p)
+t_after_fgn = int(state.fgn_t)
+assert t_after_fgn == 2 and not np.allclose(p_after_fgn, 1.0)
+state, _ = jstep(state, xb, yb, jax.random.PRNGKey(9), chan_eq)
+np.testing.assert_array_equal(np.asarray(state.p), p_after_fgn)
+assert int(state.fgn_t) == t_after_fgn
+
+print(f"DIST_TRACED_WEIGHTING_OK steps={STEPS} "
+      f"p_range=[{float(ms_c[-1]['p_min']):.4f},"
+      f"{float(ms_c[-1]['p_max']):.4f}]")

@@ -1,0 +1,114 @@
+"""Subprocess program: ShardedScenarioBank on a forced 2-device CPU mesh.
+
+Checks, at S=16 over two forced host devices:
+
+1. sharded bank == plain vmap bank, leaf for leaf (states AND metrics) —
+   putting the scenario axis on the mesh changes placement, not values;
+2. common random numbers survive sharding: scenario i (device 0) and
+   scenario i+8 (device 1) differ only in weighting, so their first-round
+   masked grad norms must be BIT-identical across the shard boundary;
+3. sharded bank == the sequential per-scenario HotaSim oracle (spot-checked
+   on scenarios from both shards — the full S=8 oracle sweep lives in
+   tests/test_sweep.py; transitively check 1 extends it to the bank).
+
+Run: python sweep_sharded.py   (sets its own XLA_FLAGS)
+"""
+import dataclasses
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import FLConfig, TrainConfig
+from repro.core.paper_setup import paper_mlp_setup
+from repro.core.sim import HotaSim
+from repro.core.sweep import ScenarioBank, ShardedScenarioBank
+
+C, N, S, STEPS = 2, 3, 16, 2
+assert len(jax.devices()) == 2, jax.devices()
+
+base_fl = FLConfig(n_clusters=C, n_clients=N)
+sim, batcher = paper_mlp_setup(base_fl, batch=8, n_points=3000)
+
+# scenarios 0-7 sweep channel knobs under dynamic weighting; 8-15 are the
+# SAME channel knobs under equal weighting -> pair (i, i+8) spans the two
+# shards and differs only in the weighting gate (the CRN probe)
+half = [
+    dict(),
+    dict(sigma2=(0.05, 1.0)),
+    dict(sigma2=(2.0, 0.75)),
+    dict(sigma2=(0.25, 0.75)),
+    dict(noise_std=3.0),
+    dict(noise_std=0.25),
+    dict(ota=False),
+    dict(sigma2=(1.5, 0.1), noise_std=2.0),
+]
+scenarios = [dict(sc) for sc in half] + \
+    [dict(sc, weighting="equal") for sc in half]
+
+key0 = jax.random.PRNGKey(0)
+batches = [batcher.next_stacked() for _ in range(STEPS)]
+step_keys = [jax.random.PRNGKey(100 + s) for s in range(STEPS)]
+
+vbank = ScenarioBank(sim, scenarios)
+sbank = ShardedScenarioBank(sim, scenarios)
+assert sbank.n_scenarios == S
+shard_spec = jax.tree.leaves(sbank.chan_bank)[0].sharding.spec
+assert tuple(shard_spec) == ("scenario",), shard_spec
+
+# an odd S cannot split over the 2-device scenario mesh
+try:
+    ShardedScenarioBank(sim, scenarios[:3])
+except ValueError as e:
+    assert "S=3" in str(e) and "2-device" in str(e), e
+else:
+    raise AssertionError("S=3 on 2 devices should have been rejected")
+
+vstates, sstates = vbank.init(key0), sbank.init(key0)
+vms, sms = [], []
+for (x, y), k in zip(batches, step_keys):
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    vstates, vm = vbank.step(vstates, x, y, k)
+    sstates, sm = sbank.step(sstates, x, y, k)
+    vms.append(vm)
+    sms.append(sm)
+
+# --- 1. sharded == vmap ----------------------------------------------------
+for vm, sm in zip(vms, sms):
+    for a, b in zip(jax.tree.leaves(vm), jax.tree.leaves(sm)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+for a, b in zip(jax.tree.leaves(vstates), jax.tree.leaves(sstates)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-6, atol=1e-7)
+
+# --- 2. CRN across the shard boundary -------------------------------------
+norms = np.asarray(sms[0]["grad_norms"])          # (S, C, N)
+for i in range(8):
+    np.testing.assert_array_equal(norms[i], norms[i + 8])
+p = np.asarray(sms[0]["p"])
+np.testing.assert_allclose(p[8:], 1.0)            # equal shard: p stays 1
+assert not np.allclose(p[:8], 1.0)                # dynamic shard adapted
+
+# --- 3. sequential oracle, scenarios from both shards ----------------------
+n_cls = [int(c) for c in sim.n_classes]
+for s in (0, 5, 10, 15):
+    fl_s = dataclasses.replace(base_fl, **scenarios[s])
+    seq = HotaSim(sim.model, fl_s, TrainConfig(lr=3e-4), n_cls)
+    st = seq.init(key0)
+    for t, ((x, y), k) in enumerate(zip(batches, step_keys)):
+        st, m = seq.step(st, jnp.asarray(x), jnp.asarray(y), k)
+        for a, b in zip(jax.tree.leaves(m),
+                        jax.tree.leaves(
+                            jax.tree.map(lambda z: z[s], sms[t]))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=1e-5)
+    for a, b in zip(jax.tree.leaves(st),
+                    jax.tree.leaves(sbank.scenario_state(sstates, s))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=1e-5)
+
+print(f"SWEEP_SHARDED_OK S={S} devices=2 steps={STEPS}")

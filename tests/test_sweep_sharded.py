@@ -1,0 +1,66 @@
+"""Sharded sweep engine + traced-weighting distributed step.
+
+Each heavy check runs in a subprocess so it can force multiple host
+devices before jax initializes (the main pytest process stays
+single-device); the light checks (bank validation, error messages) run
+in-process on the default device.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.abspath(os.path.join(HERE, "..", "src"))
+
+
+def _run(program: str, *args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "dist_programs", program), *args],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, (
+        f"{program} {args} failed:\nSTDOUT:{proc.stdout[-3000:]}\n"
+        f"STDERR:{proc.stderr[-3000:]}")
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_sharded_bank_matches_vmap_and_oracle():
+    """S=16 sharded over 2 forced CPU devices: sharded == vmap == the
+    sequential per-scenario oracle, and CRN holds across shards."""
+    out = _run("sweep_sharded.py")
+    assert "SWEEP_SHARDED_OK" in out
+
+
+@pytest.mark.slow
+def test_traced_weighting_matches_static_step():
+    """One compiled distributed step serves both weightings: driving the
+    fgn-built step with an equal-weighting ChannelParams reproduces the
+    equal-built step, and vice versa."""
+    out = _run("dist_traced_weighting.py")
+    assert "DIST_TRACED_WEIGHTING_OK" in out
+
+
+def test_traced_fields_error_names_both_values():
+    """The bank's static-mismatch rejection must name the offending field
+    AND both differing values, so a failing sweep config is debuggable
+    from the message alone."""
+    from repro.common.config import FLConfig
+    from repro.core.paper_setup import paper_mlp_setup
+    from repro.core.sweep import ScenarioBank
+
+    sim, _ = paper_mlp_setup(FLConfig(n_clusters=2, n_clients=3),
+                             batch=8, n_points=3000)
+    with pytest.raises(ValueError) as exc:
+        ScenarioBank(sim, [dict(ota_mode="naive")])
+    msg = str(exc.value)
+    assert "ota_mode" in msg            # the field
+    assert "'naive'" in msg             # the scenario's value
+    assert "'scatter'" in msg           # the bank's base value
+    with pytest.raises(ValueError) as exc:
+        ScenarioBank(sim, [dict(gamma=0.9)])
+    msg = str(exc.value)
+    assert "gamma" in msg and "0.9" in msg and "0.6" in msg
