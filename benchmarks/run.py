@@ -46,6 +46,11 @@ def main() -> None:
                          "mesh; with --json also writes BENCH_sweep.json")
     ap.add_argument("--sweep-devices", type=int, default=2,
                     help="forced host device count for --sweep (default 2)")
+    ap.add_argument("--dist", action="store_true",
+                    help="distributed-step rows only (slab-native vs "
+                         "per-leaf engines + the 2-D scenario × client "
+                         "bank) on a forced 4-device CPU mesh; with "
+                         "--json writes BENCH_dist.json")
     ap.add_argument("--json", nargs="?", const="BENCH_kernels.json",
                     default=None, metavar="PATH",
                     help="also write the kernel rows to PATH as JSON "
@@ -54,15 +59,32 @@ def main() -> None:
                          "BENCH_sweep.json")
     args, _ = ap.parse_known_args()
 
-    if args.sweep:
+    if args.sweep or args.dist:
         # must land before ANY jax import in this process
+        n_dev = 4 if args.dist else args.sweep_devices
         flags = os.environ.get("XLA_FLAGS", "")
         if "xla_force_host_platform_device_count" not in flags:
             os.environ["XLA_FLAGS"] = (
                 flags + " --xla_force_host_platform_device_count="
-                f"{args.sweep_devices}").strip()
+                f"{n_dev}").strip()
 
     rows = []
+
+    if args.dist:
+        # --- distributed step: slab-native vs per-leaf + 2-D bank --------
+        from benchmarks.dist_bench import dist_rows
+        drows = dist_rows(smoke=args.smoke)
+        if args.json:
+            path = ("BENCH_dist.json" if args.json == "BENCH_kernels.json"
+                    else args.json)
+            with open(path, "w") as f:
+                json.dump({"rows": [
+                    {"name": n, "us_per_call": round(us, 1), "derived": d}
+                    for n, us, d in drows]}, f, indent=1)
+        print("name,us_per_call,derived")
+        for name, us, derived in drows:
+            print(f"{name},{us:.1f},{derived}")
+        return
 
     if args.sweep:
         # --- sweep-engine comparison: sharded vs vmap vs sequential -------

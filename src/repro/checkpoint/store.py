@@ -7,7 +7,15 @@ Layout::
 
 Arrays are gathered to host before save (fine at example scale; sharded
 save would use a per-shard layout keyed by PartitionSpec — noted in
-DESIGN.md §3.9 as the production extension point).
+DESIGN.md §3.9 as the production extension point). Sweep-aware
+checkpointing (DESIGN.md §3.9): bank states with a leading (S,) scenario
+axis — vmapped, scenario-sharded or 2-D (scenario × client) — save
+through the same envelope (``np.asarray`` gathers a sharded global array
+on a single process), restore shape-checked against the bank's abstract
+state, and re-place onto the bank's shardings via ``restore_checkpoint``'s
+``shardings`` pytree; the scenario count is pinned in ``metadata`` so a
+bank never silently restores another bank's state (see
+``repro.core.sweep.ScenarioBank.save/restore``).
 """
 from __future__ import annotations
 
@@ -44,19 +52,44 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, metadata: Optional[dict] = N
     return path
 
 
-def restore_checkpoint(ckpt_dir: str, step: int, like_tree):
-    """Restore into the structure of ``like_tree`` (shape/dtype-checked)."""
+def restore_checkpoint(ckpt_dir: str, step: int, like_tree, shardings=None):
+    """Restore into the structure of ``like_tree`` (shape/dtype-checked).
+
+    ``like_tree`` may hold arrays or ShapeDtypeStructs (only shape/dtype
+    are read). ``shardings``: optional placement for the restored leaves —
+    a single ``Sharding`` applied to every leaf, or a same-structure
+    pytree of them (the sweep banks pass their banked layout so a restore
+    lands scenario-split exactly like a fresh ``init``)."""
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
         manifest = msgpack.unpackb(f.read())
     treedef, like_leaves = _leaf_paths(like_tree)
     assert manifest["n_leaves"] == len(like_leaves), "checkpoint/tree mismatch"
+    if shardings is None:
+        shard_leaves = None
+    elif hasattr(shardings, "device_set"):        # one Sharding for all
+        shard_leaves = [shardings] * len(like_leaves)
+    else:                                         # same-structure pytree
+        shard_leaves = jax.tree.leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "device_set"))
+        assert len(shard_leaves) == len(like_leaves), \
+            (len(shard_leaves), len(like_leaves))
     leaves = []
     for i, like in enumerate(like_leaves):
         arr = np.load(os.path.join(path, f"arr_{i}.npy"))
         assert list(arr.shape) == list(like.shape), (i, arr.shape, like.shape)
-        leaves.append(arr.astype(like.dtype))
+        arr = arr.astype(like.dtype)
+        if shard_leaves is not None:
+            arr = jax.device_put(arr, shard_leaves[i])
+        leaves.append(arr)
     return jax.tree.unflatten(treedef, leaves)
+
+
+def checkpoint_metadata(ckpt_dir: str, step: int) -> dict:
+    """The metadata dict a checkpoint was saved with (empty if none)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        return msgpack.unpackb(f.read()).get("metadata", {})
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:

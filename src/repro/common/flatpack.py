@@ -26,8 +26,20 @@ Layout contract (relied on by ``repro.core.ota.final_layer_masks_packed``):
   ω̃: with this layout they are the tail slice of the same flat channel
   draw the transmission uses — no second per-leaf mask loop.
 
-Packers are cached on (treedef, shapes, dtypes, tail), so tracing a step
-re-uses the offsets computed at the first call.
+Multi-section layouts (``sections="toplevel"`` — DESIGN.md §3.10): every
+depth-≤2 path prefix of the template becomes its own ROW_QUANTUM-aligned
+section (so a {"final", "trunk"} omega template splits into one section
+per trunk layer stack — "trunk/embed", "trunk/layers", ... — each with
+its own bit stream), with the ``tail`` key's section always last. Within
+a section every leaf additionally starts
+ROW_QUANTUM-aligned, so a leaf's slice of the section's bit stream is
+computable from static offsets alone — the zero-copy contract: the
+slab-native distributed step (``repro.core.hota_slab``) never
+materializes the (P,) slab, it walks ``leaf_runs()`` and consumes each
+leaf's storage in place against the stream positions this layout pins.
+
+Packers are cached on (treedef, shapes, dtypes, tail, sections), so
+tracing a step re-uses the offsets computed at the first call.
 """
 from __future__ import annotations
 
@@ -47,12 +59,51 @@ class LeafSlot(NamedTuple):
     dtype: Any
 
 
-def _in_tail(path, tail: Optional[str]) -> bool:
-    if tail is None or not path:
-        return False
-    step = path[0]
+class Section(NamedTuple):
+    """One ROW_QUANTUM-aligned region of the slab (DESIGN.md §4 streams)."""
+    name: str                  # top-level template key ("" = head catch-all)
+    index: int                 # section position — selects the stream fold
+    start: int                 # slab offset (ROW_QUANTUM-aligned)
+    length: int                # padded length (ROW_QUANTUM multiple)
+    leaf_indices: Tuple[int, ...]   # flatten-order leaf ids, pack order
+
+
+class LeafRun(NamedTuple):
+    """Zero-copy map entry: where one leaf's data sits inside a section's
+    bit stream. The slab-native executor reads the leaf array in place
+    and draws stream elements [offset, offset+size) of the section."""
+    leaf: int                  # flatten-order leaf index
+    section: int               # section index
+    offset: int                # start within the section (elements)
+    size: int
+
+
+def _path_key(step):
+    """One path step's key: dict key / attr name / sequence index (list
+    and tuple containers carry SequenceKey with .idx, not .key/.name)."""
     key = getattr(step, "key", getattr(step, "name", None))
-    return key == tail
+    return getattr(step, "idx", None) if key is None else key
+
+
+def _top_key(path):
+    return _path_key(path[0]) if path else None
+
+
+def _in_tail(path, tail: Optional[str]) -> bool:
+    return tail is not None and _top_key(path) == tail
+
+
+def _section_key(path, tail: Optional[str]) -> Optional[str]:
+    """Section of a leaf in the multi-section layout: the tail key, or
+    the depth-≤2 path prefix — one section PER LAYER STACK ("trunk/
+    layers", "trunk/embed", ...), not per top-level container, so a
+    {"final", "trunk"} omega template still splits its trunk stacks
+    into separate stream sections."""
+    if _in_tail(path, tail):
+        return tail
+    if not path:
+        return None
+    return "/".join(str(_path_key(s)) for s in path[:2])
 
 
 class TreePacker:
@@ -61,12 +112,46 @@ class TreePacker:
     ``tail`` names a top-level key of ``template`` (usually ``"final"``)
     whose leaves are laid out as the contiguous tail of the slab; pass
     ``None`` to pack everything as one head section.
+
+    ``sections`` selects the layout:
+
+    * ``"tail"`` (default, the PR-2 layout): two sections — head leaves
+      butt-packed in flatten order, tail leaves butt-packed last, each
+      section ROW_QUANTUM-padded. Streams and values are bit-identical
+      to the original two-section packer.
+    * ``"toplevel"``: one section per depth-≤2 path prefix of
+      ``template`` (the per-layer-stack trunk sections — "trunk/embed",
+      "trunk/layers", ...), tail key last, and EVERY leaf starts
+      ROW_QUANTUM-aligned inside its section — the zero-copy layout:
+      ``leaf_runs()`` / ``chunk_leaf_map()`` give static maps from leaf
+      storage to stream positions, so the slab-native executor
+      (repro.core.hota_slab) never materializes the slab, and a
+      full-section stream draw is bounded by ONE layer stack.
+
+    The template must carry ONE uniform leaf dtype: the slab is a single
+    flat buffer and the zero-copy maps alias leaf storage in place, so a
+    mixed-dtype tree has no representable layout — cast it first.
     """
 
-    def __init__(self, template, tail: Optional[str] = "final"):
+    def __init__(self, template, tail: Optional[str] = "final",
+                 sections: str = "tail"):
+        if sections not in ("tail", "toplevel"):
+            raise ValueError(
+                f"sections must be 'tail' or 'toplevel', got {sections!r}")
         paths_leaves, treedef = jtu.tree_flatten_with_path(template)
         self.treedef = treedef
         self.tail_name = tail
+        self.layout = sections
+
+        dtypes = sorted({jnp.dtype(l.dtype).name for _, l in paths_leaves})
+        if len(dtypes) > 1:
+            detail = ", ".join(f"{jtu.keystr(p)}={jnp.dtype(l.dtype).name}"
+                               for p, l in paths_leaves)
+            raise ValueError(
+                f"TreePacker requires one uniform leaf dtype (the slab is "
+                f"one flat buffer and the zero-copy maps read leaf storage "
+                f"in place) but the template mixes {dtypes}; cast the tree "
+                f"to a single dtype first. Leaves: {detail}")
 
         head_idx = [i for i, (p, _) in enumerate(paths_leaves)
                     if not _in_tail(p, tail)]
@@ -77,24 +162,92 @@ class TreePacker:
         self.tail_indices = tail_idx
 
         self.slots: Dict[int, LeafSlot] = {}
-        off = 0
-        for i in head_idx:
+        self.sections: List[Section] = []
+
+        def _slot(i, off):
             leaf = paths_leaves[i][1]
             self.slots[i] = LeafSlot(off, int(leaf.size), tuple(leaf.shape),
                                      jnp.dtype(leaf.dtype))
-            off += int(leaf.size)
-        self.head_len = round_up(off, ROW_QUANTUM)      # section boundary
-        off = self.head_len
-        for i in tail_idx:
-            leaf = paths_leaves[i][1]
-            self.slots[i] = LeafSlot(off, int(leaf.size), tuple(leaf.shape),
-                                     jnp.dtype(leaf.dtype))
-            off += int(leaf.size)
-        self.tail_len = round_up(off - self.head_len, ROW_QUANTUM)
+            return int(leaf.size)
+
+        if sections == "tail":
+            off = 0
+            for i in head_idx:
+                off += _slot(i, off)
+            self.head_len = round_up(off, ROW_QUANTUM)  # section boundary
+            off = self.head_len
+            for i in tail_idx:
+                off += _slot(i, off)
+            self.tail_len = round_up(off - self.head_len, ROW_QUANTUM)
+            if head_idx:
+                self.sections.append(Section("", 0, 0, self.head_len,
+                                             tuple(head_idx)))
+            if tail_idx:
+                self.sections.append(
+                    Section(tail, len(self.sections), self.head_len,
+                            self.tail_len, tuple(tail_idx)))
+        else:
+            names: List[Optional[str]] = []
+            groups: Dict[Optional[str], List[int]] = {}
+            for i in head_idx + tail_idx:
+                name = _section_key(paths_leaves[i][0], tail)
+                if name not in groups:
+                    groups[name] = []
+                    names.append(name)
+                groups[name].append(i)
+            if tail is not None and tail in names:   # tail always last
+                names.remove(tail)
+                names.append(tail)
+            off = 0
+            self.order = []
+            for name in names:
+                start = off
+                for i in groups[name]:
+                    # every leaf ROW_QUANTUM-aligned: its stream slice is
+                    # a static, lane-aligned range of the section stream
+                    off = start + round_up(off - start, ROW_QUANTUM)
+                    off += _slot(i, off)
+                length = round_up(off - start, ROW_QUANTUM)
+                off = start + length
+                self.sections.append(
+                    Section("" if name is None else name,
+                            len(self.sections), start, length,
+                            tuple(groups[name])))
+                self.order.extend(groups[name])
+            self.tail_len = (self.sections[-1].length
+                             if tail is not None and tail in names else 0)
+            self.head_len = off - self.tail_len
+
         self.size = self.head_len + self.tail_len       # P, lane-aligned
         if self.size == 0:
             raise ValueError("cannot pack an empty pytree")
         self.n_rows = self.size // LANE
+
+    # ------------------------------------------------------------------
+    def leaf_runs(self) -> List[LeafRun]:
+        """Static zero-copy map: one entry per leaf in pack order, giving
+        the (section, offset, size) stream slice its storage occupies."""
+        runs = []
+        for sec in self.sections:
+            for i in sec.leaf_indices:
+                slot = self.slots[i]
+                runs.append(LeafRun(i, sec.index, slot.offset - sec.start,
+                                    slot.size))
+        return runs
+
+    def chunk_leaf_map(
+            self, chunk: int,
+    ) -> Dict[int, List[Tuple[int, List[LeafRun]]]]:
+        """section index -> {chunk j: leaf runs intersecting
+        [j·chunk, (j+1)·chunk)} — the inverse view of ``leaf_runs`` a
+        chunk-driven kernel would walk. Purely static."""
+        out: Dict[int, Dict[int, List[LeafRun]]] = {}
+        for run in self.leaf_runs():
+            per = out.setdefault(run.section, {})
+            j0, j1 = run.offset // chunk, (run.offset + run.size - 1) // chunk
+            for j in range(j0, j1 + 1):
+                per.setdefault(j, []).append(run)
+        return {s: sorted(d.items()) for s, d in out.items()}
 
     # ------------------------------------------------------------------
     def pack(self, tree) -> jax.Array:
@@ -156,25 +309,77 @@ class TreePacker:
 
 
 # ---------------------------------------------------------------------------
+# template validation — readable mismatch errors for the gather paths
+# ---------------------------------------------------------------------------
+
+def check_tree_matches_packer(packer: TreePacker, tree, what: str,
+                              check_shapes: bool = True) -> None:
+    """Raise a readable error when ``tree`` does not match the packer
+    template: names the first offending leaf path and the section it was
+    expected in, instead of letting a zip mispair leaves and die in an
+    opaque downstream shape error (used by the packed gathers in
+    repro.core.hota / repro.core.hota_slab)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    if treedef == packer.treedef:
+        if not check_shapes or all(
+                tuple(l.shape) == packer.slots[i].shape
+                for i, l in enumerate(leaves)):
+            return
+    by_leaf = {i: sec for sec in packer.sections for i in sec.leaf_indices}
+    n = len(packer.slots)
+    tpl = packer.treedef.unflatten(list(range(n)))
+    exp_paths = [None] * n
+    for p, i in jtu.tree_flatten_with_path(tpl)[0]:
+        exp_paths[i] = jtu.keystr(p)
+    got_paths = [jtu.keystr(p)
+                 for p, _ in jtu.tree_flatten_with_path(tree)[0]]
+    for i in range(max(n, len(got_paths))):
+        exp = exp_paths[i] if i < n else "<nothing — extra leaf>"
+        got = got_paths[i] if i < len(got_paths) else "<missing leaf>"
+        shape_ok = (not check_shapes) or (
+            i < n and i < len(leaves)
+            and tuple(leaves[i].shape) == packer.slots[i].shape)
+        if exp != got or not shape_ok:
+            sec = by_leaf.get(i)
+            where = (f"section {sec.index} ({sec.name or 'head'!r}, slab "
+                     f"[{sec.start}:{sec.start + sec.length}))"
+                     if sec is not None else "beyond the template")
+            exp_shape = packer.slots[i].shape if i < n else "-"
+            got_shape = tuple(leaves[i].shape) if i < len(leaves) else "-"
+            raise ValueError(
+                f"{what} does not match the packer template at leaf {i}: "
+                f"expected {exp} with shape {exp_shape} in {where}, got "
+                f"{got} with shape {got_shape}. The packer was built from "
+                f"the model's parameter template — pass a pytree of that "
+                f"exact structure (same treedef, same leaf shapes).")
+    raise ValueError(
+        f"{what} does not match the packer template: treedefs differ "
+        f"({treedef} vs {packer.treedef}) though every leaf path agrees — "
+        f"check container types (dict vs namedtuple) at the root.")
+
+
+# ---------------------------------------------------------------------------
 # packer cache — keyed on static structure, reused across traces
 # ---------------------------------------------------------------------------
 
 _PACKER_CACHE: Dict[Any, TreePacker] = {}
 
 
-def packer_for(tree, tail: Optional[str] = "final") -> TreePacker:
-    """Cached TreePacker for ``tree``'s (treedef, shapes, dtypes, tail).
+def packer_for(tree, tail: Optional[str] = "final",
+               sections: str = "tail") -> TreePacker:
+    """Cached TreePacker for ``tree``'s (treedef, shapes, dtypes, tail,
+    sections).
 
     ``tree`` may hold arrays, tracers or ShapeDtypeStructs — only the
     static structure is read.
     """
     leaves, treedef = jax.tree.flatten(tree)
     key = (treedef, tuple((tuple(l.shape), jnp.dtype(l.dtype).name)
-                          for l in leaves), tail)
+                          for l in leaves), tail, sections)
     packer = _PACKER_CACHE.get(key)
     if packer is None:
         packer = TreePacker(
             treedef.unflatten([jax.ShapeDtypeStruct(tuple(l.shape), l.dtype)
-                               for l in leaves]), tail)
+                               for l in leaves]), tail, sections=sections)
         _PACKER_CACHE[key] = packer
     return packer

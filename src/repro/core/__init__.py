@@ -7,6 +7,7 @@
 * sweep.py        — ScenarioBank / ShardedScenarioBank: multi-scenario
                     sweeps, one jit (vmap'd or scenario-sharded)
 * hota.py         — distributed machinery: custom-vjp OTA-FSDP gather
+* hota_slab.py    — slab-native whole-model gather (zero-copy, §3.10)
 * hota_step.py    — the production shard_map training step
 * power.py        — eq. (4): expected transmit power + H_th calibration
 """
@@ -23,12 +24,17 @@ from repro.core.ota import (
     power_allocation, sample_gain, transmit_signal, tree_channel,
 )
 from repro.core.sim import HotaSim, SimState, masked_cls_loss
-from repro.core.sweep import ScenarioBank, ShardedScenarioBank
+from repro.core.sweep import DistScenarioBank, ScenarioBank, \
+    ShardedScenarioBank
 from repro.core.hota import (
     OTACtx, build_axes_registry, make_ota_gather, make_packed_final_gather,
     make_param_hook, packed_final_norm,
 )
-from repro.core.hota_step import HotaState, make_hota_train_step
+from repro.core.hota_slab import (
+    make_packed_omega_gather, packed_omega_key, sectioned_final_norm,
+)
+from repro.core.hota_step import HotaState, StepParts, \
+    make_hota_step_parts, make_hota_train_step
 from repro.core.power import (
     calibrate_h_threshold, expected_transmit_power, pass_rate,
 )
@@ -43,6 +49,8 @@ __all__ = [
     "sample_gain", "transmit_signal", "tree_channel", "HotaSim", "SimState",
     "masked_cls_loss", "OTACtx", "build_axes_registry", "make_ota_gather",
     "make_packed_final_gather", "make_param_hook", "packed_final_norm",
-    "HotaState", "make_hota_train_step",
+    "make_packed_omega_gather", "packed_omega_key", "sectioned_final_norm",
+    "HotaState", "StepParts", "make_hota_step_parts", "make_hota_train_step",
+    "DistScenarioBank",
     "calibrate_h_threshold", "expected_transmit_power", "pass_rate",
 ]

@@ -36,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import FLConfig, ModelConfig, TrainConfig
-from repro.common.flatpack import packer_for
+from repro.common.flatpack import check_tree_matches_packer, packer_for
 from repro.core.channel import ChannelParams
 from repro.kernels.ota_channel.ops import _ON_TPU, _ota_channel_impl
 from repro.kernels.slab import flat_to_slab
@@ -276,7 +276,7 @@ def _packed_mask_apply(x_slab: jax.Array, key: jax.Array, sigma2, h_th,
 def make_packed_final_gather(data_axes: Tuple[str, ...],
                              cluster_axes: Tuple[str, ...],
                              n_clients: int, n_shards: int, compute_dtype,
-                             axes_list: List[tuple]):
+                             axes_list: List[tuple], template=None):
     """Custom-vjp gather for the WHOLE final subtree.
 
     forward : per-leaf all-gather of the FSDP shards (as before)
@@ -289,10 +289,32 @@ def make_packed_final_gather(data_axes: Tuple[str, ...],
     mask draws. Masks are whole-tensor draws (the scatter-mode per-region
     scheme does not apply to the packed slab); ω̃ is small, so the full-
     size psums cost less than the per-leaf dispatch they replace.
+
+    ``template`` (optional, full-size ω̃ shapes — e.g.
+    ``abstract_params(model.final_specs())``) turns a mismatched
+    gradient pytree into a readable error naming the leaf path and its
+    expected section, instead of an opaque downstream shape error.
     """
+    tpl_packer = (packer_for(jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(tuple(l.shape), jnp.float32),
+        template), tail=None) if template is not None else None)
+
+    def _check(tree, what):
+        if tpl_packer is not None:
+            check_tree_matches_packer(tpl_packer, tree, what)
+        elif len(jax.tree.leaves(tree)) != len(axes_list):
+            raise ValueError(
+                f"{what}: got {len(jax.tree.leaves(tree))} leaves but this "
+                f"gather was built over {len(axes_list)} ω̃ leaves (the "
+                f"tail section 'final') — the pytree must mirror "
+                f"model.final_specs() exactly.")
 
     @jax.custom_vjp
     def gather_final(shard_tree, ctx: OTACtx):
+        if tpl_packer is not None:   # structure only — shards are smaller
+            check_tree_matches_packer(tpl_packer, shard_tree,
+                                      "parameter pytree (packed final "
+                                      "gather)", check_shapes=False)
         leaves, treedef = jax.tree.flatten(shard_tree)
         out = []
         for leaf, axes in zip(leaves, axes_list):
@@ -308,6 +330,7 @@ def make_packed_final_gather(data_axes: Tuple[str, ...],
 
     def _bwd(res, g_tree):
         (ctx,) = res
+        _check(g_tree, "gradient pytree (packed final gather)")
         g_tree = jax.tree.map(lambda g: g.astype(jnp.float32), g_tree)
         packer = packer_for(g_tree, tail=None)
         g_slab = packer.pack(g_tree)                       # (P,) full-size

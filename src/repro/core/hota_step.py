@@ -11,6 +11,21 @@ state_specs) where step_fn is the *full* Algorithm 1 round:
            the custom-vjp OTA gather (LAN psum -> masked MAC psum -> ĝ);
            Adam on the FSDP shards (the PS update), local Adam on heads.
 
+Two phase-C/optimizer engines share the phases (DESIGN.md §3.10):
+
+* **slab-native** (``fl.use_pallas_ota=True``, the default): the WHOLE
+  shared model rides ONE packed multi-section layout — a single
+  custom-vjp gather (``repro.core.hota_slab.make_packed_omega_gather``)
+  whose backward runs the fused mask+weighted-apply kernel on each
+  leaf's storage in place (zero-copy — the (P,) slab never
+  materializes) and needs one psum set for the whole model; phase B's
+  ‖M∘∇ω̃‖ re-draws only the ω̃ section stream; the PS Adam runs on the
+  slab view (``repro.optim.adam.SlabAdamState`` — moments as one flat
+  slab, params unpacked once at the model-apply boundary). ``ota_mode``
+  does not apply to this engine (DESIGN.md §3.11).
+* **per-leaf** (``use_pallas_ota=False``): the PR-1 oracle — per-leaf
+  param hooks, per-leaf gain draws, 3 psums per leaf, pytree Adam.
+
 Every channel/weighting knob is TRACED (DESIGN.md §3.8): ``step_fn`` takes
 an optional ``ChannelParams`` whose leaves (σ², H_th, noise std, the
 ``ota_on`` gate AND the ``fgn_on`` weighting gate) are plain arrays, so one
@@ -24,6 +39,11 @@ and when that config is the naive baseline (equal weighting AND τ_h = 0),
 default-chan calls take a statically-specialized trace with phases 0/A/B
 removed entirely (their outputs could never be consumed).
 
+``make_hota_step_parts`` exposes the raw (un-shard_mapped) step body plus
+its specs so other harnesses can lay it on bigger meshes — the 2-D
+(scenario × client) ``DistScenarioBank`` (``repro.core.sweep``) vmaps it
+over scenario slices inside one shard_map.
+
 Scale adaptations vs the paper (DESIGN.md §3.7): τ_ω = 1 (per-client local
 ω copies are impossible at 14B-141B params); the loss over the vocab head
 is computed in sequence chunks to bound logit memory. With τ_h = 0 there
@@ -33,7 +53,7 @@ scenario — head training must be scenario-uniform under a traced gate).
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,18 +63,31 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.common.config import FLConfig, TrainConfig
 from repro.core.channel import ChannelParams, channel_params, cluster_channel
 from repro.core.hota import (
-    OTACtx, build_axes_registry, channel_mask_for, cluster_index, fold_tags,
-    full_transmission_mask, identity_hook, make_ota_gather,
-    make_packed_final_gather, make_param_hook, packed_final_norm,
+    OTACtx, build_axes_registry, cluster_index, fold_tags,
+    full_transmission_mask, make_ota_gather, make_param_hook,
     shard_specs_for, _fsdp_axis, _is_axes, _mesh_client_axes,
     _mesh_cluster_axes, _mesh_data_axes,
 )
+from repro.core.hota_slab import (
+    _fsdp_axis_full, make_packed_omega_gather, packed_omega_key,
+    plain_gather_full, sectioned_final_norm,
+)
 from repro.models.model import Model
-from repro.models.params import init_params, logical_axes
-from repro.optim.adam import AdamState, adam_init, adam_update
+from repro.models.params import abstract_params, init_params, logical_axes
+from repro.optim.adam import (
+    AdamState, SlabAdamState, adam_init, adam_update, slab_adam_init,
+    slab_adam_update,
+)
 from repro.sharding.mesh_utils import shard_map_compat
 
 LOSS_CHUNK = 512
+
+# One entry appended per TRACE of a step body (tag, ota_mode). Pinned by
+# the retrace check in tests/dist_programs/dist_slab_step.py: sweeping
+# ChannelParams VALUES through a compiled step must never grow this list —
+# only genuinely static knobs (ota_mode, use_pallas_ota, topology) may
+# (DESIGN.md §3.11).
+TRACE_LOG: List[Tuple[str, str]] = []
 
 
 # no spec here references the "model" axis, so the compat fallback's
@@ -105,7 +138,22 @@ class HotaState(NamedTuple):
     step: jax.Array
 
 
-def make_hota_train_step(
+class StepParts(NamedTuple):
+    """The raw distributed round, before any shard_map: everything a
+    harness needs to lay the body on its own mesh (the 1-D wrapper below,
+    or the 2-D scenario × client ``DistScenarioBank``)."""
+    init_fn: Callable
+    step: Callable          # step(state, tokens, labels, key, chan[, fast])
+    state_specs: Any        # HotaState of PartitionSpecs (FL axes only)
+    batch_spec: Tuple
+    metric_spec: Dict
+    chan_spec: Any          # ChannelParams of P() (replicated knobs)
+    chan_all: Any           # the factory FLConfig's baked ChannelParams
+    n_total_clusters: int
+    has_fast: bool          # statically-specialized naive baseline exists
+
+
+def make_hota_step_parts(
     model: Model,
     mesh,
     fl: FLConfig,
@@ -113,13 +161,10 @@ def make_hota_train_step(
     *,
     loss_kind: str = "lm",
     n_out: Optional[int] = None,
-):
-    """Returns (init_fn, sharded_step_fn, state_sharding, batch_sharding).
-
-    ``sharded_step_fn(state, tokens, labels, key, chan=None)``: ``chan`` is
-    an optional traced ``ChannelParams`` (σ² of shape (n_total_clusters,))
-    overriding the factory config's knobs for this call — scenario sweeps
-    pass a different ``chan`` per call into ONE compiled step."""
+) -> StepParts:
+    """Build the un-shard_mapped Alg.-1 round body + its specs for ``mesh``
+    (only the FL axes — cluster/client/pod — of the mesh are read, so the
+    same body serves 1-D FL meshes and the 2-D scenario × client mesh)."""
     cfg = model.cfg
     data_axes = _mesh_data_axes(mesh)           # ("cluster","client")
     cluster_axes = _mesh_cluster_axes(mesh)     # ("pod","cluster") | ("cluster",)
@@ -129,7 +174,6 @@ def make_hota_train_step(
     n_shards = int(np.prod([sizes[a] for a in data_axes]))
     n_total_clients = int(np.prod([sizes[a] for a in client_axes]))
     n_total_clusters = int(np.prod([sizes[a] for a in cluster_axes]))
-    manual_axes = set(client_axes)
 
     compute_dtype = jnp.dtype(cfg.compute_dtype)
     gather = make_ota_gather(data_axes, cluster_axes, n_clients, n_shards,
@@ -140,11 +184,34 @@ def make_hota_train_step(
     head_specs = model.head_specs(n_out)
     final_axes = [a for a in jax.tree.leaves(
         logical_axes(model.final_specs()), is_leaf=_is_axes)]
-    # ω̃ rides the flat-packed OTA path: one slab, one fused mask kernel,
-    # one set of psums for the whole subtree (see make_packed_final_gather).
-    final_gather = (make_packed_final_gather(
-        data_axes, cluster_axes, n_clients, n_shards, compute_dtype,
-        final_axes) if fl.use_pallas_ota else None)
+    use_slab = fl.use_pallas_ota
+    if use_slab:
+        # slab-native engine: the ENTIRE shared model {final, trunk} rides
+        # one multi-section packed gather — one fused kernel per leaf (in
+        # place), ONE psum set for the whole model (DESIGN.md §3.10).
+        omega_template = {"final": abstract_params(model.final_specs()),
+                          "trunk": abstract_params(model.trunk_specs())}
+        omega_axes = [a for a in jax.tree.leaves(
+            {"final": logical_axes(model.final_specs()),
+             "trunk": logical_axes(model.trunk_specs())}, is_leaf=_is_axes)]
+        omega_gather, omega_pk = make_packed_omega_gather(
+            data_axes, cluster_axes, n_clients, n_shards, compute_dtype,
+            omega_template, omega_axes, n_clusters=n_total_clusters)
+        # local (per-device) slab length: FSDP leaves contribute their
+        # shard, replicated leaves their full size — the SlabAdamState
+        # moments layout (repro.optim.adam)
+        omega_fsdp = [_fsdp_axis_full(ax) for ax in omega_axes]
+        slab_local_len = sum(
+            int(np.prod(l.shape)) // (n_shards if ax >= 0 else 1)
+            for l, ax in zip(jax.tree.leaves(omega_template), omega_fsdp))
+    else:
+        # the PR-2 combination (per-leaf trunk + packed-ω̃ gather) is
+        # retired: use_pallas_ota=True now means the whole-model slab
+        # engine, and False is the all-per-leaf oracle
+        # (make_packed_final_gather stays exported + tested as the
+        # subtree-scale reference of the packed formulation).
+        omega_gather = omega_pk = None
+        omega_axes = omega_fsdp = slab_local_len = None
 
     if loss_kind == "lm":
         loss_fn = lambda head, feats, labels: chunked_lm_loss(
@@ -160,9 +227,16 @@ def make_hota_train_step(
         is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "axes"))
     scalar_clients = P(client_axes)
 
+    if use_slab:
+        # moments live as ONE flat slab per device; the global array is
+        # the shard-major concatenation of the local slabs
+        slab_spec = P(data_axes if len(data_axes) > 1 else data_axes[0])
+        opt_spec = SlabAdamState(step=P(), mu=slab_spec, nu=slab_spec)
+    else:
+        opt_spec = AdamState(step=P(), mu=omega_manual, nu=omega_manual)
     state_specs = HotaState(
         omega=omega_manual,
-        opt=AdamState(step=P(), mu=omega_manual, nu=omega_manual),
+        opt=opt_spec,
         heads=heads_manual,
         head_opt=AdamState(step=P(), mu=heads_manual, nu=heads_manual),
         p=scalar_clients, fgn_mu=scalar_clients, fgn_nu=scalar_clients,
@@ -185,8 +259,15 @@ def make_hota_train_step(
             lambda x: jnp.zeros_like(x, jnp.float32), t)
         head_opt = AdamState(step=jnp.zeros((), jnp.int32),
                              mu=zeros32(heads), nu=zeros32(heads))
+        if use_slab:
+            opt0 = SlabAdamState(
+                step=jnp.zeros((), jnp.int32),
+                mu=jnp.zeros((n_shards * slab_local_len,), jnp.float32),
+                nu=jnp.zeros((n_shards * slab_local_len,), jnp.float32))
+        else:
+            opt0 = adam_init(omega)
         return HotaState(
-            omega=omega, opt=adam_init(omega), heads=heads,
+            omega=omega, opt=opt0, heads=heads,
             head_opt=head_opt,
             p=jnp.ones((n_total_clients,), jnp.float32),
             fgn_mu=zc, fgn_nu=zc, fgn_t=jnp.zeros((), jnp.int32),
@@ -196,6 +277,7 @@ def make_hota_train_step(
     # ---------------- the sharded step ----------------
     def _step(state: HotaState, tokens, labels, key, chan: ChannelParams,
               fast: bool = False):
+        TRACE_LOG.append(("slab" if use_slab else "leaf", fl.ota_mode))
         base_key = jax.random.fold_in(key, state.step)
         cidx = cluster_index(cluster_axes)
         chan_c = cluster_channel(chan, cidx)
@@ -220,15 +302,24 @@ def make_hota_train_step(
             f0 = f0_i
         else:
             # ---- phase 0: trunk features (ω frozen; broadcast = gather) --
-            hook_fwd = make_param_hook(gather, registry, base_key, 1.0,
-                                       chan_c)
-            hidden, _, _ = model.trunk_apply(state.omega["trunk"], tokens,
-                                             mode="train",
-                                             param_hook=hook_fwd)
+            if use_slab:
+                # one plain whole-model gather — phases 0/B never
+                # backprop through the channel, so no custom vjp here
+                omega_full0 = plain_gather_full(state.omega, omega_fsdp,
+                                                data_axes, compute_dtype)
+                hidden, _, _ = model.trunk_apply(omega_full0["trunk"],
+                                                 tokens, mode="train")
+                final_full = omega_full0["final"]
+            else:
+                hook_fwd = make_param_hook(gather, registry, base_key, 1.0,
+                                           chan_c)
+                hidden, _, _ = model.trunk_apply(state.omega["trunk"],
+                                                 tokens, mode="train",
+                                                 param_hook=hook_fwd)
+                final_full = _plain_gather_tree(state.omega["final"],
+                                                final_axes, data_axes,
+                                                compute_dtype)
             hidden = jax.lax.stop_gradient(hidden)
-
-            final_full = _plain_gather_tree(state.omega["final"], final_axes,
-                                            data_axes, compute_dtype)
 
             def tail_loss(ff, hd):
                 feats = model.final_apply(ff, hidden)
@@ -246,9 +337,12 @@ def make_hota_train_step(
             # ---- phase B: FGN inputs + distributed Alg. 2 ----
             F_i, g_final = jax.value_and_grad(
                 lambda ff: tail_loss(ff, head))(final_full)
-            if final_gather is not None:
-                n_i = packed_final_norm(g_final, base_key, chan_c,
-                                        cluster_axes)
+            if use_slab:
+                # eq. 5 masks = the ω̃ SECTION of the same slab draw the
+                # phase-C backward applies (only that stream is re-drawn)
+                n_i = sectioned_final_norm(g_final,
+                                           packed_omega_key(base_key),
+                                           chan_c, cluster_axes, omega_pk)
             else:
                 n_i = _masked_final_norm(g_final, final_axes, base_key,
                                          chan_c, fl, cluster_axes,
@@ -297,15 +391,38 @@ def make_hota_train_step(
         # identical across microbatches, so averaging the per-microbatch
         # estimates equals ONE MAC transmission of the round-averaged
         # x^(l) — exact Alg.-1 round semantics under grad accumulation.
-        hook = make_param_hook(gather, registry, base_key, p_new, chan_c,
-                               final_packed_gather=final_gather)
+        if use_slab:
+            # one custom-vjp gather for the WHOLE model: its backward is
+            # the slab-native aggregation (fused w·g·M kernel per leaf in
+            # place + ONE psum set — repro.core.hota_slab)
+            slab_ctx = OTACtx(
+                p_weight=jnp.asarray(p_new, jnp.float32),
+                key=packed_omega_key(base_key),
+                # FULL (C,) σ² vector: the backward narrows to its own
+                # cluster (ctx.sigma2[cidx]) in the default psum count
+                # mode, and needs every cluster's σ² under
+                # count_mode="local" (collective-free |M|)
+                sigma2=jnp.asarray(chan.sigma2, jnp.float32),
+                h_th=jnp.asarray(chan_c.h_threshold, jnp.float32),
+                noise_std=jnp.asarray(chan_c.noise_std, jnp.float32),
+                ota_on=jnp.asarray(chan_c.ota_on, jnp.float32))
 
-        def mb_loss(omega, hd, tok_mb, lab_mb):
-            h, aux, _ = model.trunk_apply(omega["trunk"], tok_mb,
-                                          mode="train", param_hook=hook)
-            ff = hook(omega["final"], "final")
-            feats = model.final_apply(ff, h)
-            return loss_fn(hd, feats, lab_mb) + aux
+            def mb_loss(omega, hd, tok_mb, lab_mb):
+                full = omega_gather(omega, slab_ctx)
+                h, aux, _ = model.trunk_apply(full["trunk"], tok_mb,
+                                              mode="train")
+                feats = model.final_apply(full["final"], h)
+                return loss_fn(hd, feats, lab_mb) + aux
+        else:
+            hook = make_param_hook(gather, registry, base_key, p_new,
+                                   chan_c)
+
+            def mb_loss(omega, hd, tok_mb, lab_mb):
+                h, aux, _ = model.trunk_apply(omega["trunk"], tok_mb,
+                                              mode="train", param_hook=hook)
+                ff = hook(omega["final"], "final")
+                feats = model.final_apply(ff, h)
+                return loss_fn(hd, feats, lab_mb) + aux
 
         n_mb = max(fl.microbatches, 1)
         b_loc = tokens.shape[0]
@@ -336,9 +453,16 @@ def make_hota_train_step(
             g_head = jax.tree.map(lambda x: x / n_mb, g_head)
             loss_val = l_sum / n_mb
 
-        omega, opt = adam_update(g_omega, state.opt, state.omega, tcfg.lr,
-                                 tcfg.betas[0], tcfg.betas[1], tcfg.eps,
-                                 tcfg.weight_decay)
+        if use_slab:
+            # slab-view PS update: moments stay one flat slab, params
+            # unpack exactly once (the model-apply boundary)
+            omega, opt = slab_adam_update(
+                g_omega, state.opt, state.omega, tcfg.lr, tcfg.betas[0],
+                tcfg.betas[1], tcfg.eps, tcfg.weight_decay)
+        else:
+            omega, opt = adam_update(g_omega, state.opt, state.omega,
+                                     tcfg.lr, tcfg.betas[0], tcfg.betas[1],
+                                     tcfg.eps, tcfg.weight_decay)
         # Alg. 1 trains heads only in the τ_h phase (lines 10-11); with
         # τ_h = 0 there is no phase A, so heads train on the phase-C
         # gradient instead — statically, for EVERY scenario, so the trace
@@ -366,9 +490,36 @@ def make_hota_train_step(
         return new_state, metrics
 
     chan_spec = ChannelParams(*([P()] * len(ChannelParams._fields)))
-    in_specs = (state_specs, batch_spec[0], batch_spec[1], P(), chan_spec)
+    return StepParts(
+        init_fn=init_fn, step=_step, state_specs=state_specs,
+        batch_spec=batch_spec, metric_spec=metric_spec, chan_spec=chan_spec,
+        chan_all=chan_all, n_total_clusters=n_total_clusters,
+        has_fast=(fl.weighting == "equal" and fl.tau_h == 0))
+
+
+def make_hota_train_step(
+    model: Model,
+    mesh,
+    fl: FLConfig,
+    tcfg: TrainConfig,
+    *,
+    loss_kind: str = "lm",
+    n_out: Optional[int] = None,
+):
+    """Returns (init_fn, sharded_step_fn, state_sharding, batch_sharding).
+
+    ``sharded_step_fn(state, tokens, labels, key, chan=None)``: ``chan`` is
+    an optional traced ``ChannelParams`` (σ² of shape (n_total_clusters,))
+    overriding the factory config's knobs for this call — scenario sweeps
+    pass a different ``chan`` per call into ONE compiled step."""
+    parts = make_hota_step_parts(model, mesh, fl, tcfg, loss_kind=loss_kind,
+                                 n_out=n_out)
+    manual_axes = set(_mesh_client_axes(mesh))
+    state_specs, metric_spec = parts.state_specs, parts.metric_spec
+    in_specs = (state_specs, parts.batch_spec[0], parts.batch_spec[1], P(),
+                parts.chan_spec)
     sharded_inner = _shard_map(
-        _step, mesh=mesh, in_specs=in_specs,
+        parts.step, mesh=mesh, in_specs=in_specs,
         out_specs=(state_specs, metric_spec), axis_names=manual_axes)
     # statically-specialized naive baseline: with equal weighting and no
     # head phase baked into the config, the FGN inputs can never be
@@ -376,9 +527,11 @@ def make_hota_train_step(
     # 0/A/B removed (the pre-traced-knobs fast path). A supplied chan
     # always takes the scenario-polymorphic trace.
     fast_inner = (_shard_map(
-        partial(_step, fast=True), mesh=mesh, in_specs=in_specs,
+        partial(parts.step, fast=True), mesh=mesh, in_specs=in_specs,
         out_specs=(state_specs, metric_spec), axis_names=manual_axes)
-        if fl.weighting == "equal" and fl.tau_h == 0 else None)
+        if parts.has_fast else None)
+    n_total_clusters = parts.n_total_clusters
+    chan_all = parts.chan_all
 
     def sharded_step(state: HotaState, tokens, labels, key,
                      chan: Optional[ChannelParams] = None):
@@ -391,21 +544,15 @@ def make_hota_train_step(
                 f"(n_total_clusters,) = ({n_total_clusters},)")
         return sharded_inner(state, tokens, labels, key, chan)
 
-    return init_fn, sharded_step, state_specs, batch_spec
+    return parts.init_fn, sharded_step, state_specs, parts.batch_spec
 
 
 CLIENT_AXIS_NAME = "client"
 
 
 def _plain_gather_tree(shards, axes_list, data_axes, compute_dtype):
-    leaves, treedef = jax.tree.flatten(shards)
-    out = []
-    for leaf, axes in zip(leaves, axes_list):
-        ax = _fsdp_axis(axes)
-        if ax >= 0:
-            leaf = jax.lax.all_gather(leaf, data_axes, axis=ax, tiled=True)
-        out.append(leaf.astype(compute_dtype))
-    return jax.tree.unflatten(treedef, out)
+    return plain_gather_full(shards, [_fsdp_axis(a) for a in axes_list],
+                             data_axes, compute_dtype)
 
 
 def _masked_final_norm(g_final, axes_list, base_key, chan_c: ChannelParams,

@@ -59,6 +59,10 @@ from repro.kernels.slab import LANE
 NOISE_FOLD = 0x7FFFFFFF          # AWGN stream (per-leaf AND packed)
 PACKED_HEAD_FOLD = 0x7FFF0001    # gain bits for the packed head section
 PACKED_TAIL_FOLD = 0x7FFF0002    # gain bits for the packed tail (ω̃) section
+# multi-section layouts (DESIGN.md §3.10): trunk section s folds BASE + s;
+# the tail (ω̃) section keeps PACKED_TAIL_FOLD in EVERY layout, so eq.-5
+# consumers re-draw only the ω̃ stream without knowing the trunk split.
+PACKED_SECTION_FOLD_BASE = 0x7FFF0100
 
 
 def cluster_key(key: jax.Array, cluster: jax.Array | int) -> jax.Array:
@@ -212,6 +216,58 @@ def _section_bits(key: jax.Array, fold: int, n_clusters: int, length: int):
     return jax.vmap(
         lambda c: _chunked_stream(cluster_key(skey, c), length)
     )(jnp.arange(n_clusters))
+
+
+def packed_section_folds(packer: TreePacker) -> List[int]:
+    """The stream fold of each ``packer.sections`` entry (DESIGN.md §4).
+
+    Legacy two-section layouts keep PACKED_HEAD_FOLD / PACKED_TAIL_FOLD
+    (streams bit-identical to PR 2); multi-section ("toplevel") layouts
+    fold PACKED_SECTION_FOLD_BASE + index per trunk section while the
+    tail section always keeps PACKED_TAIL_FOLD."""
+    folds = []
+    for sec in packer.sections:
+        if sec.name == packer.tail_name:
+            folds.append(PACKED_TAIL_FOLD)
+        elif packer.layout == "tail":
+            folds.append(PACKED_HEAD_FOLD)
+        else:
+            folds.append(PACKED_SECTION_FOLD_BASE + sec.index)
+    return folds
+
+
+def stream_range_bits(key: jax.Array, start: int, length: int) -> jax.Array:
+    """uint32 elements [start, start+length) of ``key``'s chunk-quantized
+    stream (chunk j is ``bits(fold_in(key, j), (CHUNK,))`` — DESIGN.md §4).
+
+    ``start``/``length`` are STATIC: only the chunks intersecting the
+    range are drawn, and because the kernel's partial-chunk rule is
+    truncation, a mid-chunk slice here is bit-identical to what a kernel
+    sweeping the whole section would apply at these positions. This is
+    the zero-copy executor's bit source: a leaf's run (see
+    ``TreePacker.leaf_runs``) maps to exactly one such range."""
+    j0 = start // CHUNK
+    j1 = (start + length - 1) // CHUNK
+    chunks = jax.vmap(
+        lambda j: jax.random.bits(jax.random.fold_in(key, j), (CHUNK,),
+                                  jnp.uint32)
+    )(jnp.arange(j0, j1 + 1))
+    a = start - j0 * CHUNK
+    return jax.lax.slice(chunks.reshape(-1), (a,), (a + length,))
+
+
+def section_gain_key(slab_key: jax.Array, fold: int,
+                     cluster: jax.Array | int) -> jax.Array:
+    """Gain-bit stream key for one (section, cluster) — the same
+    fold_in(fold_in(key, section_fold), cluster) scheme as
+    ``_section_bits``, usable with a TRACED cluster index (the
+    distributed path folds the mesh position)."""
+    return cluster_key(jax.random.fold_in(slab_key, fold), cluster)
+
+
+def section_noise_key(slab_key: jax.Array, fold: int) -> jax.Array:
+    """AWGN stream key for one section (``packed_noise_bits``' scheme)."""
+    return jax.random.fold_in(noise_key(slab_key), fold)
 
 
 def packed_gain_bits(key: jax.Array, packer: TreePacker, n_clusters: int):

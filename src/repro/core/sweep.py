@@ -29,6 +29,22 @@ packed OTA path's ``ota_bits_mode="supplied"`` draw depends only on the
 shared key, so every shard computes the identical bit stream its scenarios
 would see unsharded — the draw never varies per scenario or per shard.
 
+``DistScenarioBank`` (DESIGN.md §3.10) lifts the *distributed* step onto
+a 2-D ``("scenario", "cluster", "client")`` mesh: the raw Alg.-1 round
+body (``repro.core.hota_step.make_hota_step_parts``) is vmapped over each
+device row's local S/n_rows scenario slice INSIDE one shard_map, so the
+client/cluster collectives (LAN psum, MAC psum, FSDP gathers) run
+per-scenario on the trailing FL axes while scenario rows stay
+embarrassingly parallel. Batch/PRNG enter replicated along the scenario
+axis and nothing in the step reads a scenario coordinate, so CRN holds
+across scenario shards by construction.
+
+Every bank checkpoints through ``save``/``restore`` (DESIGN.md §3.9):
+the (S,)-banked state rides the generic msgpack+npy envelope, the
+scenario count is pinned in the manifest metadata, and restore re-places
+leaves on the bank's own shardings — bit-identical trajectories across a
+save/restore boundary.
+
 Scenarios may vary only the traced knobs (``sigma2``, ``h_threshold``,
 ``noise_std``, ``ota``, ``weighting``); every other ``FLConfig`` field —
 topology, local steps, FGN hyper-params, ``ota_mode``, ... — is baked into
@@ -48,7 +64,8 @@ from repro.core.channel import ChannelParams, channel_params, \
     stack_channel_params
 from repro.core.sim import HotaSim, SimState
 from repro.sharding.mesh_utils import SCENARIO_AXIS, bank_sharding, \
-    replicated_sharding, scenario_axis_size, shard_map_compat
+    replicated_sharding, scenario_axis_size, scenario_banked_spec, \
+    scenario_banked_tree, shard_map_compat
 
 # the ONLY FLConfig fields a scenario may vary — everything else is baked
 # into the trace (topology, local steps, FGN hyper-params, ota_mode, ...)
@@ -84,7 +101,40 @@ def _as_channel_params(sc: Scenario, base: FLConfig) -> ChannelParams:
     return channel_params(sc)
 
 
-class ScenarioBank:
+class _BankCheckpoint:
+    """Sweep-aware checkpointing shared by every bank flavor (DESIGN.md
+    §3.9): one envelope for the whole (S,)-banked state, scenario count
+    pinned in the manifest, restore re-placed on the bank's shardings."""
+
+    def _abstract_states(self):
+        raise NotImplementedError
+
+    def _state_shardings(self):
+        return None          # default placement (single-device banks)
+
+    def save(self, ckpt_dir: str, step: int, states) -> str:
+        from repro.checkpoint.store import save_checkpoint
+        return save_checkpoint(ckpt_dir, step, states,
+                               {"kind": type(self).__name__,
+                                "n_scenarios": self.n_scenarios})
+
+    def restore(self, ckpt_dir: str, step: int):
+        """Restore a state saved by ``save`` into THIS bank's layout —
+        shape-checked against the bank's abstract state and re-placed on
+        its shardings, so a restored bank continues bit-identically."""
+        from repro.checkpoint.store import checkpoint_metadata, \
+            restore_checkpoint
+        s = checkpoint_metadata(ckpt_dir, step).get("n_scenarios")
+        if s is not None and s != self.n_scenarios:
+            raise ValueError(
+                f"checkpoint at step {step} was saved from a {s}-scenario "
+                f"bank but this bank has S={self.n_scenarios} — a bank "
+                f"only restores states with a matching scenario axis")
+        return restore_checkpoint(ckpt_dir, step, self._abstract_states(),
+                                  shardings=self._state_shardings())
+
+
+class ScenarioBank(_BankCheckpoint):
     """An (S,)-batched bank of channel scenarios over one ``HotaSim``.
 
     >>> sim = HotaSim(model, base_fl, tcfg, n_cls)
@@ -150,6 +200,13 @@ class ScenarioBank:
     def scenario_state(self, states: SimState, s: int) -> SimState:
         """Slice one scenario's unbatched SimState out of the bank."""
         return jax.tree.map(lambda x: x[s], states)
+
+    # ------------------------------------------------------------------
+    def _abstract_states(self):
+        # the PLAIN init's shapes (placement-free): subclasses re-place
+        # via _state_shardings, so eval_shape must not hit device_put
+        return jax.eval_shape(lambda k: ScenarioBank.init(self, k),
+                              jax.random.PRNGKey(0))
 
 
 class ShardedScenarioBank(ScenarioBank):
@@ -218,3 +275,135 @@ class ShardedScenarioBank(ScenarioBank):
             out_specs=(banked, banked),
             axis_names={SCENARIO_AXIS})
         return f(states, xb, yb, key, chan_bank)
+
+    # ------------------------------------------------------------------
+    def _state_shardings(self):
+        return self._banked
+
+
+class DistScenarioBank(_BankCheckpoint):
+    """The DISTRIBUTED step on a 2-D (scenario × client) mesh.
+
+    Where ``ScenarioBank`` sweeps the vmap *simulator*, this bank sweeps
+    the production shard_map step (``repro.core.hota_step``): the mesh is
+    ("scenario", "cluster", "client") — ``repro.launch.mesh.
+    make_dist_scenario_mesh`` — and ONE shard_map covers all three axes.
+    Each scenario row vmaps the raw Alg.-1 round body over its local
+    S/n_rows scenario slice while the body's client/cluster collectives
+    (LAN psum, MAC psum, FSDP gathers — slab-native per DESIGN.md §3.10)
+    run on the trailing FL axes. Scenario rows never communicate.
+
+    CRN across scenario shards: batch and PRNG enter replicated along
+    the scenario axis, channel keys fold only (step, section, cluster,
+    chunk) — no scenario coordinate exists in the step — so every
+    scenario sees bit-identical data and channel draws whether it lives
+    on row 0 or row k, and a bank sharded S-ways reproduces the 1-row
+    bank exactly.
+
+    >>> mesh = make_dist_scenario_mesh(n_clusters=1, n_clients=2)
+    >>> bank = DistScenarioBank(model, fl, tcfg, scenarios, mesh,
+    ...                         loss_kind="cls", n_out=8)
+    >>> states = bank.init(jax.random.PRNGKey(0))
+    >>> states, m = bank.step(states, tokens, labels, key)  # m: (S, ...)
+    """
+
+    def __init__(self, model, fl: FLConfig, tcfg, scenarios:
+                 Sequence[Scenario], mesh=None, *, loss_kind: str = "lm",
+                 n_out=None):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.hota import _mesh_client_axes
+        from repro.core.hota_step import make_hota_step_parts
+        if mesh is None:
+            from repro.launch.mesh import make_dist_scenario_mesh
+            mesh = make_dist_scenario_mesh(fl.n_clusters, fl.n_clients)
+        assert SCENARIO_AXIS in mesh.axis_names, mesh
+        self.mesh = mesh
+        self.fl = fl
+        parts = make_hota_step_parts(model, mesh, fl, tcfg,
+                                     loss_kind=loss_kind, n_out=n_out)
+        if parts.n_total_clusters != fl.n_clusters:
+            raise ValueError(
+                f"mesh has {parts.n_total_clusters} clusters but "
+                f"fl.n_clusters={fl.n_clusters}")
+        self._parts = parts
+        self.chan_bank = stack_channel_params(
+            [_as_channel_params(sc, fl) for sc in scenarios])
+        self.n_scenarios = int(self.chan_bank.ota_on.shape[0])
+        n_rows = scenario_axis_size(mesh)
+        if self.n_scenarios % n_rows:
+            raise ValueError(
+                f"scenario count S={self.n_scenarios} must divide evenly "
+                f"over the {n_rows}-row scenario axis — pad the bank or "
+                f"shrink the mesh")
+
+        self._state_banked = scenario_banked_tree(parts.state_specs)
+        self._metric_banked = scenario_banked_tree(parts.metric_spec)
+        chan_banked = scenario_banked_tree(parts.chan_spec)
+
+        def body(states, tokens, labels, key, chan_bank):
+            # local scenario slice: vmap the single-scenario round body;
+            # its client/cluster collectives batch over the vmap axis
+            return jax.vmap(parts.step, in_axes=(0, None, None, None, 0))(
+                states, tokens, labels, key, chan_bank)
+
+        self._inner = shard_map_compat(
+            body, mesh=mesh,
+            in_specs=(self._state_banked, parts.batch_spec[0],
+                      parts.batch_spec[1], P(), chan_banked),
+            out_specs=(self._state_banked, self._metric_banked),
+            axis_names=set(_mesh_client_axes(mesh)) | {SCENARIO_AXIS})
+        self._jstep = jax.jit(self._inner)
+        self.chan_bank = jax.tree.map(
+            lambda a: jax.device_put(
+                a, NamedSharding(mesh, P(SCENARIO_AXIS))), self.chan_bank)
+
+    # ------------------------------------------------------------------
+    def _init_states(self, key: jax.Array):
+        st = self._parts.init_fn(key)
+        s = self.n_scenarios
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (s,) + x.shape), st)
+
+    def init(self, key: jax.Array):
+        """(S,)-banked initial HotaState, scenario-split over the rows
+        and FSDP-sharded inside each row (CRN extends to init: every
+        scenario starts from the same state)."""
+        return self._place(self._init_states(key))
+
+    def _place(self, states):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.tree.map(
+            lambda a, sp: jax.device_put(a, NamedSharding(self.mesh, sp)),
+            states, self._state_banked,
+            is_leaf=lambda x: isinstance(x, P))
+
+    # ------------------------------------------------------------------
+    def step(self, states, tokens, labels, key: jax.Array):
+        """One distributed Alg.-1 round for every scenario. ``tokens``/
+        ``labels`` are the GLOBAL flat client batch (the 1-D step's
+        layout), committed replicated along the scenario axis; ``key``
+        is shared — CRN across scenarios and across scenario rows."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        tokens = jax.device_put(
+            jnp.asarray(tokens),
+            NamedSharding(self.mesh, self._parts.batch_spec[0]))
+        labels = jax.device_put(
+            jnp.asarray(labels),
+            NamedSharding(self.mesh, self._parts.batch_spec[1]))
+        key = jax.device_put(key, NamedSharding(self.mesh, P()))
+        return self._jstep(states, tokens, labels, key, self.chan_bank)
+
+    # ------------------------------------------------------------------
+    def scenario_state(self, states, s: int):
+        """Slice one scenario's unbatched HotaState out of the bank."""
+        return jax.tree.map(lambda x: x[s], states)
+
+    # ------------------------------------------------------------------
+    def _abstract_states(self):
+        return jax.eval_shape(self._init_states, jax.random.PRNGKey(0))
+
+    def _state_shardings(self):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.tree.map(
+            lambda sp: NamedSharding(self.mesh, sp), self._state_banked,
+            is_leaf=lambda x: isinstance(x, P))

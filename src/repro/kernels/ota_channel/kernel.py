@@ -110,6 +110,124 @@ def _ota_channel_kernel(x_ref, bits_ref, params_ref, out_ref, mask_ref):
     mask_ref[...] = mask.astype(mask_ref.dtype)
 
 
+def _ota_mask_weight_kernel(x_ref, bits_ref, params_ref, out_ref, mask_ref):
+    """Weighted-einsum fold (DESIGN.md §3.10): out = M ∘ (w·x) in ONE pass.
+
+    This is the slab-native distributed trunk's local kernel — the
+    FedGradNorm weight w multiplies inside the masked apply, so the
+    LAN/MAC psum consumes the kernel output directly (no separate p·g
+    materialization). Masks use the same inverse-CDF law as the fused
+    aggregate kernel (one compare per entry, matches ref.bits_to_mask on
+    the identical bit stream)."""
+    sigma2 = params_ref[0, 0]
+    h_th = params_ref[0, 1]
+    ota_on = params_ref[0, 2]
+    w = params_ref[0, 3]
+    mask = _bits_mask(bits_ref[...], _pass_probability(sigma2, h_th),
+                      ota_on < 0.5)
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[...] = jnp.where(mask, w * x, 0.0)
+    mask_ref[...] = mask.astype(mask_ref.dtype)
+
+
+def ota_mask_weight_pallas(
+    x: jax.Array,            # (rows, 128) slab
+    bits: jax.Array,         # (rows, 128) uint32
+    params: jax.Array,       # (1, 4) f32: [sigma2, h_th, ota_on, w] (traced)
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+):
+    """Fused mask + weighted apply. Returns (M∘(w·x), M) as f32 slabs."""
+    rows, lane = x.shape
+    assert lane == LANE, x.shape
+    br = _pick_block_rows(rows, 4, block_rows, interpret)
+    grid = (rows // br,)
+
+    out, mask = pl.pallas_call(
+        _ota_mask_weight_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((1, 4), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANE), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+            jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, bits, params.astype(jnp.float32))
+    return out, mask
+
+
+def _ota_mask_count_kernel(x_ref, bits_ref, params_ref, out_ref, cnt_ref,
+                           *, n_clusters):
+    """Slab-native local channel work (DESIGN.md §3.10): from the
+    counter-based per-cluster bit streams, compute in ONE pass
+    out = M_me ∘ (w·x) (this device's masked weighted gradient) and
+    cnt = Σ_l M_l (the |M| count — every cluster's mask is a pure
+    function of the streams, so the count needs NO collective)."""
+    c = n_clusters
+    h_th = params_ref[0, c]
+    ota_on = params_ref[0, c + 1]
+    w = params_ref[0, c + 2]
+    me = params_ref[0, c + 3]
+    off = ota_on < 0.5
+    x = x_ref[...].astype(jnp.float32)
+    out = jnp.zeros_like(x)
+    cnt = jnp.zeros_like(x)
+    for l in range(n_clusters):              # static unrolled cluster loop
+        mask = _bits_mask(bits_ref[l],
+                          _pass_probability(params_ref[0, l], h_th), off)
+        cnt = cnt + mask.astype(jnp.float32)
+        mine = jnp.logical_and(mask, me == jnp.float32(l))
+        out = out + jnp.where(mine, w * x, 0.0)
+    out_ref[...] = out
+    cnt_ref[...] = cnt
+
+
+def ota_mask_count_pallas(
+    x: jax.Array,            # (rows, 128) slab
+    bits: jax.Array,         # (C, rows, 128) uint32 — per-cluster streams
+    params: jax.Array,       # (1, C+4): [σ²_0..σ²_{C-1}, H_th, ota_on, w, me]
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+):
+    """Fused M_me∘(w·x) + Σ_l M_l. Returns (out, cnt) as f32 slabs."""
+    n_clusters, rows, lane = bits.shape
+    assert lane == LANE and x.shape == (rows, LANE), (bits.shape, x.shape)
+    br = _pick_block_rows(rows, n_clusters + 3, block_rows, interpret)
+    grid = (rows // br,)
+
+    kernel = functools.partial(_ota_mask_count_kernel,
+                               n_clusters=n_clusters)
+    out, cnt = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((n_clusters, br, LANE), lambda i: (0, i, 0)),
+            pl.BlockSpec((1, n_clusters + 4), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((br, LANE), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+            jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, bits, params.astype(jnp.float32))
+    return out, cnt
+
+
 def ota_channel_pallas(
     x: jax.Array,            # (rows, 128) slab
     bits: jax.Array,         # (rows, 128) uint32

@@ -22,11 +22,12 @@ import jax.numpy as jnp
 
 from repro.kernels.ota_channel.kernel import (
     ota_aggregate_fused_pallas, ota_aggregate_pallas, ota_channel_pallas,
+    ota_mask_count_pallas, ota_mask_weight_pallas,
 )
 from repro.kernels.ota_channel.ref import (
-    ota_aggregate_slab_ref, ota_channel_ref,
+    bits_to_mask, ota_aggregate_slab_ref, ota_channel_ref,
 )
-from repro.kernels.slab import flat_to_slab, pad_to_lanes
+from repro.kernels.slab import LANE, ROW_QUANTUM, flat_to_slab, pad_to_lanes
 
 _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
 
@@ -57,6 +58,127 @@ def ota_channel(x: jax.Array, key: jax.Array, sigma2, h_th,
     out = out.reshape(-1)[:n].reshape(x.shape)
     mask = mask.reshape(-1)[:n].reshape(x.shape)
     return out, mask
+
+
+def ota_mask_weight_apply(x: jax.Array, bits: jax.Array, sigma2, h_th,
+                          ota_on, weight,
+                          interpret: bool = not _ON_TPU,
+                          impl: str = None):
+    """Zero-copy fused mask + weighted apply for ONE leaf (DESIGN.md §3.10).
+
+    ``x`` is consumed through a reshape of its own storage — no slab is
+    packed: the LANE-aligned main body (a ROW_QUANTUM multiple) runs the
+    ``ota_mask_weight_pallas`` kernel in place and the < ROW_QUANTUM
+    ragged remainder takes the jnp reference on the SAME pre-sliced bit
+    stream (``bits`` is the leaf's static slice of its section stream —
+    see ``repro.common.flatpack.TreePacker.leaf_runs``). Returns
+    (M ∘ (w·x), M) shaped like ``x``, both f32. This is the weighted-
+    einsum fold: the FedGradNorm weight multiplies inside the kernel, so
+    the caller's psum consumes the output directly.
+
+    ``impl``: "pallas" | "jnp". Default: "pallas" on TPU (the compiled
+    kernel), "jnp" elsewhere — per-device there is no cluster axis to
+    fuse over, so on CPU the interpret-mode pallas_call is pure dispatch
+    overhead while the jnp form computes the identical values
+    (bit-equality pinned in tests/test_slab_native.py) AND fuses with
+    the adjacent psums. Tests force ``impl="pallas"`` + interpret to
+    validate the kernel itself.
+    """
+    if impl is None:
+        impl = "pallas" if _ON_TPU else "jnp"
+    n = int(x.size)
+    assert bits.shape == (n,), (bits.shape, n)
+    flat = x.reshape(-1).astype(jnp.float32)
+    w = jnp.asarray(weight, jnp.float32)
+    if impl == "jnp":
+        m = bits_to_mask(bits, sigma2, h_th, ota_on)
+        out = jnp.where(m, w * flat, 0.0)
+        return out.reshape(x.shape), m.astype(jnp.float32).reshape(x.shape)
+    main = n - n % ROW_QUANTUM
+    outs, masks = [], []
+    if main:
+        params = jnp.stack([
+            jnp.asarray(sigma2, jnp.float32).reshape(()),
+            jnp.asarray(h_th, jnp.float32).reshape(()),
+            jnp.asarray(ota_on, jnp.float32).reshape(()),
+            w.reshape(())]).reshape(1, 4)
+        o, m = ota_mask_weight_pallas(
+            jax.lax.slice(flat, (0,), (main,)).reshape(main // LANE, LANE),
+            jax.lax.slice(bits, (0,), (main,)).reshape(main // LANE, LANE),
+            params, interpret=interpret)
+        outs.append(o.reshape(main))
+        masks.append(m.reshape(main))
+    if n - main:
+        m = bits_to_mask(jax.lax.slice(bits, (main,), (n,)), sigma2, h_th,
+                         ota_on)
+        x_rem = jax.lax.slice(flat, (main,), (n,))
+        outs.append(jnp.where(m, w * x_rem, 0.0))
+        masks.append(m.astype(jnp.float32))
+    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+    mask = masks[0] if len(masks) == 1 else jnp.concatenate(masks)
+    return out.reshape(x.shape), mask.reshape(x.shape)
+
+
+def ota_mask_count_apply(x: jax.Array, bits_all: jax.Array, me, sigma2_all,
+                         h_th, ota_on, weight,
+                         interpret: bool = not _ON_TPU,
+                         impl: str = None):
+    """Slab-native local channel work for ONE leaf (DESIGN.md §3.10):
+    returns (M_me ∘ (w·x), Σ_l M_l) shaped like ``x``, both f32.
+
+    ``bits_all`` is the (C, n) stack of EVERY cluster's stream slice for
+    this leaf — the masks are pure functions of the counter-based
+    streams, so the |M| count is computed locally and the backward needs
+    NO mask collective. ``me`` is this device's (traced) cluster index;
+    the FedGradNorm weight folds into the apply (w·g·M in one pass).
+
+    ``impl``: "pallas" | "jnp" — default "pallas" on TPU, "jnp"
+    elsewhere (per-device elementwise work; in interpret mode the
+    pallas_call is pure dispatch overhead while the jnp form computes
+    identical values — pinned in tests/test_slab_native.py — and fuses
+    with the adjacent psums).
+    """
+    if impl is None:
+        impl = "pallas" if _ON_TPU else "jnp"
+    n = int(x.size)
+    n_clusters = bits_all.shape[0]
+    assert bits_all.shape == (n_clusters, n), (bits_all.shape, n)
+    flat = x.reshape(-1).astype(jnp.float32)
+    w = jnp.asarray(weight, jnp.float32)
+    sig = jnp.asarray(sigma2_all, jnp.float32).reshape(n_clusters, 1)
+    if impl == "jnp":
+        masks = bits_to_mask(bits_all, sig, h_th, ota_on)   # (C, n)
+        cnt = jnp.sum(masks.astype(jnp.float32), axis=0)
+        mine = jnp.take(masks, me, axis=0)
+        out = jnp.where(mine, w * flat, 0.0)
+        return out.reshape(x.shape), cnt.reshape(x.shape)
+    main = n - n % ROW_QUANTUM
+    params = jnp.concatenate([
+        sig.reshape(n_clusters),
+        jnp.stack([jnp.asarray(h_th, jnp.float32).reshape(()),
+                   jnp.asarray(ota_on, jnp.float32).reshape(()),
+                   w.reshape(()),
+                   jnp.asarray(me, jnp.float32).reshape(())])
+    ]).reshape(1, n_clusters + 4)
+    outs, cnts = [], []
+    if main:
+        o, c = ota_mask_count_pallas(
+            jax.lax.slice(flat, (0,), (main,)).reshape(main // LANE, LANE),
+            jax.lax.slice(bits_all, (0, 0), (n_clusters, main)).reshape(
+                n_clusters, main // LANE, LANE),
+            params, interpret=interpret)
+        outs.append(o.reshape(main))
+        cnts.append(c.reshape(main))
+    if n - main:
+        b_rem = jax.lax.slice(bits_all, (0, main), (n_clusters, n))
+        masks = bits_to_mask(b_rem, sig, h_th, ota_on)
+        cnts.append(jnp.sum(masks.astype(jnp.float32), axis=0))
+        mine = jnp.take(masks, me, axis=0)
+        outs.append(jnp.where(
+            mine, w * jax.lax.slice(flat, (main,), (n,)), 0.0))
+    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+    cnt = cnts[0] if len(cnts) == 1 else jnp.concatenate(cnts)
+    return out.reshape(x.shape), cnt.reshape(x.shape)
 
 
 @jax.jit

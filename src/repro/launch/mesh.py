@@ -26,6 +26,35 @@ def make_debug_mesh(shape=(2, 2, 2), axes=("cluster", "client", "model")):
     return jax.sharding.Mesh(devs, axes)
 
 
+def make_dist_scenario_mesh(n_clusters: int, n_clients: int,
+                            n_scenario_devices=None):
+    """2-D (scenario × client) mesh for distributed sweep banks
+    (DESIGN.md §3.10): axes ("scenario", "cluster", "client").
+
+    ``DistScenarioBank`` shard_maps scenario slices over the leading axis
+    while each slice runs the full distributed HOTA round's client/cluster
+    collectives on the trailing FL axes — one mesh, one compiled step for
+    every scenario. Uses ``n_scenario_devices`` scenario rows (default:
+    every visible device / (n_clusters·n_clients)). On CPU, force host
+    devices with ``XLA_FLAGS=--xla_force_host_platform_device_count``.
+    """
+    import numpy as np
+    devs = jax.devices()
+    per_row = n_clusters * n_clients
+    if n_scenario_devices is None:
+        n_scenario_devices = len(devs) // per_row
+    need = n_scenario_devices * per_row
+    if n_scenario_devices < 1 or need > len(devs):
+        raise ValueError(
+            f"make_dist_scenario_mesh needs {per_row} devices per scenario "
+            f"row × {n_scenario_devices} rows = {need}, but only "
+            f"{len(devs)} devices are visible")
+    return jax.sharding.Mesh(
+        np.array(devs[:need]).reshape(n_scenario_devices, n_clusters,
+                                      n_clients),
+        ("scenario", "cluster", "client"))
+
+
 def make_scenario_mesh(n_devices=None):
     """1-D ("scenario",) mesh for sharded sweep banks (DESIGN.md §3.8).
 

@@ -94,6 +94,21 @@ def scenario_axis_size(mesh: Mesh) -> int:
     return int(mesh.devices.shape[mesh.axis_names.index(SCENARIO_AXIS)])
 
 
+def scenario_banked_spec(spec: PartitionSpec) -> PartitionSpec:
+    """Prepend the scenario axis to a single-scenario PartitionSpec: an
+    FL-sharded leaf P(*dims) becomes the bank leaf P("scenario", *dims) —
+    the 2-D (scenario × client) layout of ``DistScenarioBank``'s
+    (S,)-leading state/metric/ChannelParams leaves."""
+    return PartitionSpec(SCENARIO_AXIS, *tuple(spec))
+
+
+def scenario_banked_tree(spec_tree):
+    """``scenario_banked_spec`` over a pytree of PartitionSpecs."""
+    import jax
+    return jax.tree.map(scenario_banked_spec, spec_tree,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
 def bank_sharding(mesh: Mesh) -> NamedSharding:
     """Placement for (S, ...) bank leaves: leading axis scenario-split."""
     return NamedSharding(mesh, PartitionSpec(SCENARIO_AXIS))

@@ -1,0 +1,136 @@
+"""Subprocess program: DistScenarioBank on the 2-D (scenario × client) mesh.
+
+Forced 4 devices. S=4 scenarios × (1 cluster × 2 clients), exercising the
+acceptance contract of DESIGN.md §3.10:
+
+* CRN across scenario shards: the bank on a 2-row scenario axis must
+  reproduce, per scenario, the bank on a 1-row axis bit-identically at
+  float tolerance — scenario placement cannot change a trajectory;
+* oracle: each scenario's trajectory equals the plain 1-D distributed
+  step driven with that scenario's ChannelParams override;
+* sweep-aware checkpointing (DESIGN.md §3.9): save from the 2-row bank
+  mid-run, restore into the 1-row bank (different placement), continue
+  both — states stay equal; a bank with a different S refuses the
+  checkpoint.
+
+Run: python dist_scenario_bank.py   (sets its own XLA_FLAGS)
+"""
+import os
+import tempfile
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.config import FLConfig, ModelConfig, TrainConfig
+from repro.core.channel import channel_params
+from repro.core.sweep import DistScenarioBank
+from repro.core.hota_step import make_hota_train_step
+from repro.launch.mesh import make_dist_scenario_mesh
+from repro.models.model import build_model
+
+C, N, B, D = 1, 2, 4, 256
+MAXC = 8
+S = 4
+STEPS = 4
+SAVE_AT = 2
+
+cfg = ModelConfig(family="mlp", compute_dtype="float32")
+model = build_model(cfg)
+tcfg = TrainConfig(lr=1e-3)
+fl = FLConfig(n_clusters=C, n_clients=N, noise_std=0.1, tau_h=1)
+scenarios = [dict(sigma2=(0.5,)), dict(sigma2=(2.0,)),
+             dict(weighting="equal"), dict(ota=False)]
+
+key = jax.random.PRNGKey(0)
+xs = [jax.random.normal(jax.random.fold_in(key, 10 + t), (C * N * B, D))
+      for t in range(STEPS)]
+ys = [jax.random.randint(jax.random.fold_in(key, 50 + t), (C * N * B,), 0,
+                         MAXC) for t in range(STEPS)]
+keys = [jax.random.PRNGKey(100 + t) for t in range(STEPS)]
+
+
+def drive(bank, states, t0, t1, collect=False):
+    ms = []
+    for t in range(t0, t1):
+        states, m = bank.step(states, xs[t], ys[t], keys[t])
+        ms.append(m)
+    return (states, ms) if collect else states
+
+
+# dist_vs_sim.py's comparator: a handful of near-zero-gradient entries are
+# sign-sensitive under Adam's rsqrt (float associativity differs across
+# device layouts), each bounded by ~lr per step — so bound the max by the
+# Adam step budget and the FRACTION of entries beyond float noise.
+def states_close(a, b, tag, atol=1e-5):
+    lr = tcfg.lr
+    for (ka, la), (_, lb) in zip(
+            jax.tree_util.tree_flatten_with_path(a)[0],
+            jax.tree_util.tree_flatten_with_path(b)[0]):
+        da = np.abs(np.asarray(la, np.float64) - np.asarray(lb, np.float64))
+        name = f"{tag} at {jax.tree_util.keystr(ka)}"
+        assert da.size == 0 or da.max() < 2 * STEPS * lr + atol, \
+            (name, float(da.max()))
+        assert da.size == 0 or float((da > atol).mean()) < 1e-4, \
+            (name, float((da > atol).mean()))
+
+
+mesh2 = make_dist_scenario_mesh(C, N, n_scenario_devices=2)   # 2 rows
+mesh1 = make_dist_scenario_mesh(C, N, n_scenario_devices=1)   # 1 row
+bank2 = DistScenarioBank(model, fl, tcfg, scenarios, mesh2,
+                         loss_kind="cls", n_out=MAXC)
+bank1 = DistScenarioBank(model, fl, tcfg, scenarios, mesh1,
+                         loss_kind="cls", n_out=MAXC)
+
+# --- CRN across scenario shards: 2-row bank == 1-row bank -------------------
+st2, ms2 = drive(bank2, bank2.init(jax.random.PRNGKey(123)), 0, STEPS, True)
+st1, ms1 = drive(bank1, bank1.init(jax.random.PRNGKey(123)), 0, STEPS, True)
+states_close(st2, st1, "2-row vs 1-row bank")
+for m2, m1 in zip(ms2, ms1):
+    np.testing.assert_allclose(np.asarray(m2["loss"]), np.asarray(m1["loss"]),
+                               rtol=1e-5, atol=1e-6)
+
+# --- oracle: per-scenario 1-D distributed step with chan override -----------
+fl_mesh = Mesh(np.array(jax.devices())[:C * N].reshape(C, N),
+               ("cluster", "client"))
+init_fn, step_fn, state_specs, batch_spec = make_hota_train_step(
+    model, fl_mesh, fl, tcfg, loss_kind="cls", n_out=MAXC)
+jstep = jax.jit(step_fn)
+for s, sc in enumerate(scenarios):
+    import dataclasses
+    chan_s = channel_params(dataclasses.replace(fl, **sc), n_clusters=C)
+    state = init_fn(jax.random.PRNGKey(123))
+    state = jax.tree.map(
+        lambda a, spec: jax.device_put(a, NamedSharding(fl_mesh, spec)),
+        state, state_specs, is_leaf=lambda z: isinstance(z, P))
+    for t in range(STEPS):
+        xb = jax.device_put(xs[t], NamedSharding(fl_mesh, batch_spec[0]))
+        yb = jax.device_put(ys[t], NamedSharding(fl_mesh, batch_spec[1]))
+        state, _ = jstep(state, xb, yb, keys[t], chan_s)
+    states_close(bank2.scenario_state(st2, s), state,
+                 f"bank scenario {s} vs 1-D oracle", atol=1e-5)
+
+# --- sweep-aware checkpointing: cross-layout restore equivalence ------------
+st_mid = drive(bank2, bank2.init(jax.random.PRNGKey(123)), 0, SAVE_AT)
+with tempfile.TemporaryDirectory() as d:
+    bank2.save(d, SAVE_AT, st_mid)
+    restored = bank1.restore(d, SAVE_AT)       # other placement, same state
+    states_close(restored, st_mid, "restore round-trip")
+    end_a = drive(bank2, st_mid, SAVE_AT, STEPS)
+    end_b = drive(bank1, restored, SAVE_AT, STEPS)
+    states_close(end_a, end_b, "post-restore trajectory")
+
+    # a bank with a different scenario count must refuse the checkpoint
+    bank_s2 = DistScenarioBank(model, fl, tcfg, scenarios[:2], mesh2,
+                               loss_kind="cls", n_out=MAXC)
+    try:
+        bank_s2.restore(d, SAVE_AT)
+        raise SystemExit("S-mismatch restore did not raise")
+    except ValueError as e:
+        assert "scenario" in str(e), e
+
+print(f"DIST_SCENARIO_BANK_OK S={S} steps={STEPS} "
+      f"loss={[round(float(v), 4) for v in np.asarray(ms2[-1]['loss'])]}")

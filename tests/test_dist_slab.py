@@ -1,0 +1,39 @@
+"""Slab-native distributed path tests (DESIGN.md §3.10). Each runs in a
+subprocess so it can claim 4 host devices before jax initializes (the
+main pytest process stays single-device) — same harness as test_dist.py."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.abspath(os.path.join(HERE, "..", "src"))
+
+
+def _run(program: str, *args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "dist_programs", program), *args],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, (
+        f"{program} {args} failed:\nSTDOUT:{proc.stdout[-3000:]}\n"
+        f"STDERR:{proc.stderr[-3000:]}")
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_dist_slab_step():
+    """Slab step == per-leaf oracle; channel-on == jnp oracle on shared
+    keys; zero-copy HLO pin; ChannelParams values never retrace."""
+    out = _run("dist_slab_step.py")
+    assert "DIST_SLAB_OK" in out
+
+
+@pytest.mark.slow
+def test_dist_scenario_bank():
+    """2-D (scenario × client) bank: CRN across scenario shards, 1-D step
+    oracle per scenario, cross-layout checkpoint restore-equivalence."""
+    out = _run("dist_scenario_bank.py")
+    assert "DIST_SCENARIO_BANK_OK" in out

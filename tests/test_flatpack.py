@@ -1,12 +1,16 @@
 """TreePacker: layout contract + round-trip properties (the flat-packed
-OTA engine's foundation — see repro/common/flatpack.py)."""
+OTA engine's foundation — see repro/common/flatpack.py), including the
+multi-section / zero-copy layout of DESIGN.md §3.10 and the edge cases
+(empty tail, mixed dtypes, single leaf, non-contiguous tail key)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.common.flatpack import TreePacker, packer_for
+from repro.common.flatpack import (
+    TreePacker, check_tree_matches_packer, packer_for,
+)
 from repro.kernels.slab import LANE, ROW_QUANTUM, pad_to_lanes, slab_rows
 
 TREE = {
@@ -110,6 +114,140 @@ def test_roundtrip_property(shapes, final_n, seed):
     out = p.unpack(slab)
     for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_toplevel_sections_layout_contract():
+    """Multi-section layout: one ROW_QUANTUM-aligned section per layer
+    stack (depth-≤2 path prefix), tail last, every leaf ROW_QUANTUM-
+    aligned inside its section."""
+    p = TreePacker(TREE, tail="final", sections="toplevel")
+    names = [s.name for s in p.sections]
+    assert names == ["trunk/fc0", "trunk/fc1", "final"]   # tail last
+    off = 0
+    for s in p.sections:
+        assert s.start == off and s.length % ROW_QUANTUM == 0
+        off += s.length
+    assert off == p.size
+    for run in p.leaf_runs():
+        assert run.offset % ROW_QUANTUM == 0         # zero-copy contract
+    # round-trip still exact (padding between leaves stays zero)
+    out = p.unpack(p.pack(TREE))
+    for a, b in zip(jax.tree.leaves(TREE), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # tail slice/unpack agree with the legacy layout's contract
+    sub = p.unpack_tail(p.tail_slice(p.pack(TREE)))
+    for a, b in zip(jax.tree.leaves(TREE["final"]), jax.tree.leaves(sub)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_chunk_leaf_map_partitions_leaves():
+    """The chunk->leaf map covers every leaf run exactly, in order."""
+    p = TreePacker(TREE, tail="final", sections="toplevel")
+    cmap = p.chunk_leaf_map(ROW_QUANTUM)
+    seen = set()
+    for sec_idx, per_chunk in cmap.items():
+        for j, runs in per_chunk:
+            for run in runs:
+                assert run.section == sec_idx
+                assert run.offset < (j + 1) * ROW_QUANTUM
+                assert run.offset + run.size > j * ROW_QUANTUM
+                seen.add(run.leaf)
+    assert seen == set(range(len(jax.tree.leaves(TREE))))
+
+
+def test_legacy_layout_unchanged_by_sections_param():
+    """sections='tail' (the default) must keep PR-2's exact offsets."""
+    a = TreePacker(TREE, tail="final")
+    b = TreePacker(TREE, tail="final", sections="tail")
+    assert a.slots == b.slots and a.size == b.size
+    assert [s[:4] for s in a.sections] == [s[:4] for s in b.sections]
+
+
+def test_empty_tail_subtree():
+    """A tail key with no leaves: no tail section, everything head."""
+    tree = {"final": {}, "trunk": TREE["trunk"]}
+    for sections in ("tail", "toplevel"):
+        p = TreePacker(tree, tail="final", sections=sections)
+        assert p.tail_len == 0 and p.head_len == p.size
+        assert all(s.name != "final" for s in p.sections)
+        out = p.unpack(p.pack(tree))
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mixed_dtypes_rejected_with_clear_error():
+    tree = {"final": {"w": jnp.zeros((3,), jnp.float32)},
+            "trunk": {"w": jnp.zeros((3,), jnp.bfloat16)}}
+    with pytest.raises(ValueError) as e:
+        TreePacker(tree, tail="final")
+    msg = str(e.value)
+    assert "uniform leaf dtype" in msg and "bfloat16" in msg \
+        and "float32" in msg
+    # the offending leaves are named
+    assert "trunk" in msg and "w" in msg
+    with pytest.raises(ValueError):
+        packer_for(tree, tail="final")
+
+
+def test_single_leaf_tree():
+    """A bare array (no container) packs as one head section."""
+    x = jnp.arange(300.0)
+    for sections in ("tail", "toplevel"):
+        p = TreePacker(x, tail="final", sections=sections)
+        assert p.tail_len == 0 and p.size == ROW_QUANTUM
+        np.testing.assert_array_equal(np.asarray(p.unpack(p.pack(x))),
+                                      np.asarray(x))
+        assert len(p.sections) == 1 and p.sections[0].leaf_indices == (0,)
+
+
+def test_non_contiguous_tail_name():
+    """The tail key need not flatten last — its leaves still form the
+    contiguous tail slice (the layout reorders, unpack restores)."""
+    tree = {"a_first": jnp.ones((5,)),
+            "final": {"w": jnp.arange(6.0)},       # flattens in the middle
+            "z_last": jnp.full((7,), 3.0)}
+    for sections in ("tail", "toplevel"):
+        p = TreePacker(tree, tail="final", sections=sections)
+        slab = p.pack(tree)
+        tail = p.tail_slice(slab)
+        np.testing.assert_array_equal(np.asarray(tail[:6]),
+                                      np.arange(6.0))
+        out = p.unpack(slab)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_check_tree_matches_packer_names_leaf_and_section():
+    p = TreePacker(TREE, tail="final", sections="toplevel")
+    check_tree_matches_packer(p, TREE, "ok tree")        # no raise
+    bad_shape = jax.tree.map(lambda l: l, TREE)
+    bad_shape["trunk"]["fc1"]["w"] = jnp.zeros((9, 9))
+    with pytest.raises(ValueError) as e:
+        check_tree_matches_packer(p, bad_shape, "gradient pytree")
+    msg = str(e.value)
+    assert "fc1" in msg and "section" in msg and "(9, 9)" in msg
+    bad_struct = {"final": TREE["final"],
+                  "trunk": {"fc0": TREE["trunk"]["fc0"]}}   # fc1 missing
+    with pytest.raises(ValueError) as e:
+        check_tree_matches_packer(p, bad_struct, "gradient pytree")
+    assert "missing" in str(e.value) or "fc1" in str(e.value)
+
+
+def test_packed_final_gather_mismatch_error_is_readable():
+    """The distributed packed-ω̃ gather raises with leaf path + expected
+    section on a wrong pytree, not an opaque shape error."""
+    from repro.core.hota import OTACtx, make_packed_final_gather
+    template = {"w": jax.ShapeDtypeStruct((8, 4), jnp.float32),
+                "b": jax.ShapeDtypeStruct((4,), jnp.float32)}
+    gather = make_packed_final_gather(
+        ("client", "cluster"), ("cluster",), 2, 4, jnp.float32,
+        [("embed", "mlp"), ("mlp",)], template=template)
+    ctx = OTACtx(*(jnp.zeros(()) for _ in range(6)))
+    wrong = {"w": jnp.zeros((8, 4)), "extra": jnp.zeros((3,))}
+    with pytest.raises(ValueError) as e:
+        jax.eval_shape(gather, wrong, ctx)
+    msg = str(e.value)
+    assert "packed final gather" in msg and ("extra" in msg or "b" in msg)
 
 
 def test_slab_helpers_roundtrip():

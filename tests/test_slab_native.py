@@ -1,0 +1,208 @@
+"""Single-device units of the slab-native distributed machinery
+(DESIGN.md §3.10): slab-view Adam, the fused mask+weighted-apply op on
+chunk-quantized stream slices, the stream-range helper, and sweep-aware
+bank checkpointing. The multi-device step itself is pinned in
+tests/test_dist_slab.py (subprocess, forced devices)."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import FLConfig, TrainConfig
+from repro.core import ota
+from repro.core.paper_setup import paper_mlp_setup
+from repro.core.sweep import ScenarioBank
+from repro.kernels.ota_channel.ops import ota_mask_weight_apply
+from repro.kernels.ota_channel.ref import bits_to_mask
+from repro.optim.adam import (
+    AdamState, SlabAdamState, adam_init, adam_update, slab_adam_init,
+    slab_adam_update, slab_to_tree, tree_to_slab,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tree(key):
+    ks = jax.random.split(key, 4)
+    return {"a": jax.random.normal(ks[0], (17, 9)),
+            "b": {"w": jax.random.normal(ks[1], (300,)),
+                  "v": jax.random.normal(ks[2], (4, 4, 4))},
+            "c": jax.random.normal(ks[3], (1,))}
+
+
+def test_tree_slab_roundtrip():
+    t = _tree(KEY)
+    slab = tree_to_slab(t)
+    assert slab.ndim == 1 and slab.dtype == jnp.float32
+    out = slab_to_tree(slab, t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_slab_adam_equals_pytree_adam():
+    """Moments-as-slab Adam is the SAME elementwise math as pytree Adam —
+    identical trajectories including bias correction and weight decay."""
+    params = _tree(KEY)
+    st_tree = adam_init(params)
+    st_slab = slab_adam_init(params)
+    assert st_slab.mu.shape == (sum(l.size for l in jax.tree.leaves(params)),)
+    p_tree, p_slab = params, params
+    for s in range(5):
+        g = _tree(jax.random.fold_in(KEY, s + 1))
+        p_tree, st_tree = adam_update(g, st_tree, p_tree, 1e-2,
+                                      weight_decay=0.01)
+        p_slab, st_slab = slab_adam_update(g, st_slab, p_slab, 1e-2,
+                                           weight_decay=0.01)
+    for a, b in zip(jax.tree.leaves(p_tree), jax.tree.leaves(p_slab)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(tree_to_slab(st_tree.mu)),
+                               np.asarray(st_slab.mu), rtol=1e-6, atol=1e-8)
+    assert int(st_slab.step) == 5
+
+
+def test_slab_adam_accepts_flat_slabs():
+    """The distributed step hands slabs straight through (no pytree)."""
+    p = jnp.linspace(-1, 1, 2048)
+    g = jnp.ones((2048,)) * 0.1
+    st = slab_adam_init(p)
+    p2, st = slab_adam_update(g, st, p, 1e-2)
+    assert isinstance(p2, jax.Array) and p2.shape == p.shape
+    p_ref, _ = adam_update(g, AdamState(jnp.zeros((), jnp.int32),
+                                        jnp.zeros_like(p), jnp.zeros_like(p)),
+                           p, 1e-2)
+    np.testing.assert_allclose(np.asarray(p2), np.asarray(p_ref), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n", [100, 1024, 5000, 8192])
+def test_ota_mask_weight_apply_matches_ref(n):
+    """Fused kernel main body + jnp ragged remainder == plain jnp on the
+    same pre-sliced bit stream, for aligned and ragged sizes."""
+    x = jax.random.normal(jax.random.fold_in(KEY, n), (n,))
+    bits = jax.random.bits(jax.random.fold_in(KEY, 2 * n + 1), (n,),
+                           jnp.uint32)
+    sigma2, h_th, w = 0.8, 0.15, 1.7
+    # the pallas kernel (interpret mode) and the jnp dispatch compute
+    # identical values on the identical pre-sliced stream
+    out, mask = ota_mask_weight_apply(x, bits, sigma2, h_th, 1.0, w,
+                                      impl="pallas", interpret=True)
+    out_j, mask_j = ota_mask_weight_apply(x, bits, sigma2, h_th, 1.0, w,
+                                          impl="jnp")
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(mask_j))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_j),
+                               rtol=1e-6, atol=1e-7)
+    m_ref = bits_to_mask(bits, sigma2, h_th, 1.0)
+    np.testing.assert_array_equal(np.asarray(mask).astype(bool),
+                                  np.asarray(m_ref))
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(jnp.where(m_ref, w * x, 0.0)),
+        rtol=1e-6, atol=1e-7)
+    # ota off: all-pass mask, weight still applied
+    out_off, mask_off = ota_mask_weight_apply(x, bits, sigma2, h_th, 0.0, w)
+    assert np.asarray(mask_off).all()
+    np.testing.assert_allclose(np.asarray(out_off), np.asarray(w * x),
+                               rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("n", [300, 2048])
+def test_ota_mask_count_apply_matches_ref(n):
+    """The collective-free |M| variant: out = M_me∘(w·x) and
+    cnt = Σ_l M_l from every cluster's stream — pallas (interpret) and
+    jnp dispatches agree with the plain-jnp construction."""
+    from repro.kernels.ota_channel.ops import ota_mask_count_apply
+    C = 3
+    x = jax.random.normal(jax.random.fold_in(KEY, n), (n,))
+    bits = jax.random.bits(jax.random.fold_in(KEY, 3 * n), (C, n),
+                           jnp.uint32)
+    sig = jnp.asarray([0.5, 1.0, 2.0])
+    me = jnp.asarray(1)
+    for kwargs in (dict(impl="jnp"), dict(impl="pallas", interpret=True)):
+        out, cnt = ota_mask_count_apply(x, bits, me, sig, 0.2, 1.0, 1.3,
+                                        **kwargs)
+        masks = bits_to_mask(bits, sig.reshape(C, 1), 0.2, 1.0)
+        np.testing.assert_allclose(
+            np.asarray(cnt),
+            np.asarray(jnp.sum(masks.astype(jnp.float32), axis=0)),
+            rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(out),
+            np.asarray(jnp.where(masks[1], 1.3 * x, 0.0)),
+            rtol=1e-6, atol=1e-7)
+
+
+def test_ota_mask_weight_apply_shaped_leaf():
+    """Leaf storage is consumed in place via reshape — shaped leaves OK."""
+    x = jax.random.normal(KEY, (33, 77))
+    bits = jax.random.bits(jax.random.fold_in(KEY, 9), (33 * 77,),
+                           jnp.uint32)
+    out, mask = ota_mask_weight_apply(x, bits, 1.0, 0.032, 1.0, 2.0)
+    assert out.shape == x.shape and mask.shape == x.shape
+
+
+def test_stream_range_bits_matches_chunked_stream():
+    """A [start, start+len) slice of a section stream equals the same
+    positions of the full chunked draw — the zero-copy bit source."""
+    key = jax.random.fold_in(KEY, 77)
+    full = ota._chunked_stream(key, 3 * ota.CHUNK + 500)
+    for start, length in [(0, 100), (1000, ota.CHUNK), (ota.CHUNK - 3, 7),
+                          (2 * ota.CHUNK + 17, ota.CHUNK + 100)]:
+        got = ota.stream_range_bits(key, start, length)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(full[start:start + length]))
+
+
+def test_packed_section_folds_tail_invariant():
+    """The ω̃ section keeps PACKED_TAIL_FOLD in EVERY layout, so eq.-5
+    consumers re-draw the same stream regardless of the trunk split."""
+    from repro.common.flatpack import TreePacker
+    tree = {"final": {"w": jnp.zeros((10,))},
+            "trunk": {"a": jnp.zeros((5,)), "b": jnp.zeros((2000,))}}
+    legacy = TreePacker(tree, tail="final")
+    multi = TreePacker(tree, tail="final", sections="toplevel")
+    f_legacy = ota.packed_section_folds(legacy)
+    f_multi = ota.packed_section_folds(multi)
+    assert f_legacy[-1] == ota.PACKED_TAIL_FOLD
+    assert f_multi[-1] == ota.PACKED_TAIL_FOLD
+    assert f_legacy[0] == ota.PACKED_HEAD_FOLD
+    assert all(f >= ota.PACKED_SECTION_FOLD_BASE for f in f_multi[:-1])
+    assert len(set(f_multi)) == len(f_multi)     # streams disjoint
+
+
+@pytest.mark.slow
+def test_scenario_bank_checkpoint_restore_equivalence():
+    """Sweep-aware checkpointing (DESIGN.md §3.9): save a plain (S,)-
+    banked state mid-run, restore, continue — identical to never having
+    stopped; a bank with a different S refuses the checkpoint."""
+    base_fl = FLConfig(n_clusters=2, n_clients=3)
+    sim, batcher = paper_mlp_setup(base_fl, batch=8, n_points=3000)
+    scenarios = [dict(), dict(weighting="equal"), dict(sigma2=(0.05, 1.0)),
+                 dict(ota=False)]
+    bank = ScenarioBank(sim, scenarios)
+    batches = [batcher.next_stacked() for _ in range(4)]
+    keys = [jax.random.PRNGKey(100 + s) for s in range(4)]
+
+    states = bank.init(jax.random.PRNGKey(0))
+    for t in range(2):
+        states, _ = bank.step(states, jnp.asarray(batches[t][0]),
+                              jnp.asarray(batches[t][1]), keys[t])
+    with tempfile.TemporaryDirectory() as d:
+        bank.save(d, 2, states)
+        from repro.checkpoint.store import checkpoint_metadata
+        assert checkpoint_metadata(d, 2)["n_scenarios"] == 4
+        restored = bank.restore(d, 2)
+        for a, b in zip(jax.tree.leaves(states), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # continue both — bit-identical trajectories
+        for t in range(2, 4):
+            states, ma = bank.step(states, jnp.asarray(batches[t][0]),
+                                   jnp.asarray(batches[t][1]), keys[t])
+            restored, mb = bank.step(restored, jnp.asarray(batches[t][0]),
+                                     jnp.asarray(batches[t][1]), keys[t])
+        for a, b in zip(jax.tree.leaves(states), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        small = ScenarioBank(sim, scenarios[:2])
+        with pytest.raises(ValueError, match="scenario"):
+            small.restore(d, 2)
