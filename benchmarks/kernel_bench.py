@@ -45,8 +45,12 @@ def run():
 
     g = jax.random.normal(key, (8, 1 << 16))
     m = jax.random.uniform(jax.random.fold_in(key, 1), (1 << 16,)) > 0.3
-    rows.append(("masked_gradnorm_pallas_8x64k", _time(masked_gradnorm, g, m),
-                 "tiled masked L2"))
+    rows.append(("masked_gradnorm_pallas_8x64k",
+                 _time(masked_gradnorm, g, m, impl="pallas"),
+                 "tiled masked L2 (impl forced)"))
+    rows.append(("masked_gradnorm_dispatch_8x64k",
+                 _time(masked_gradnorm, g, m),
+                 "default dispatch (jnp off-TPU)"))
     rows.append(("masked_gradnorm_ref_8x64k",
                  _time(masked_gradnorm_reference, g, m), "jnp oracle"))
 
@@ -156,6 +160,116 @@ def packed_rows(n_scenarios: int = 8, iters: int = 3, quick: bool = False):
     return rows
 
 
+def _client_grad_tree(n_params: int, n_leaves: int, C: int, N: int, key):
+    """Synthetic RAW per-client gradient pytree — leaves (C, N, ...)."""
+    final_n = max(128, n_params // 20)
+    trunk_n = max(128, (n_params - final_n) // n_leaves)
+    tree = {"final": {"w": jax.random.normal(key, (C, N, final_n))},
+            "trunk": {}}
+    for i in range(n_leaves):
+        tree["trunk"][f"l{i}"] = jax.random.normal(
+            jax.random.fold_in(key, i + 1), (C, N, trunk_n))
+    return tree
+
+
+def _paper_mlp_client_tree(C: int, N: int, key) -> dict:
+    """The real paper-MLP omega shapes, (cluster, client)-batched."""
+    from repro.common.config import ModelConfig
+    from repro.models.model import build_model
+    from repro.models.params import ParamSpec
+
+    model = build_model(ModelConfig(family="mlp"))
+    specs = {"final": model.final_specs(), "trunk": model.trunk_specs()}
+    i = [0]
+
+    def draw(spec):
+        i[0] += 1
+        return jax.random.normal(jax.random.fold_in(key, i[0]),
+                                 (C, N) + spec.shape)
+    return jax.tree.map(draw, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def client_folded_rows(n_scenarios: int = 8, iters: int = 3,
+                       quick: bool = False):
+    """Client-folded zero-copy OTA (DESIGN.md §3.12) vs the sim's old
+    formulation (einsum the client weights, then per-leaf jnp channel) —
+    BOTH paths start from the RAW (C, N, ...) gradient tree + the (C, N)
+    weight matrix, i.e. exactly what ``HotaSim.step_with_channel`` holds
+    after the local phase. This is the sim-hot-path comparison the old
+    ``packed_rows`` (pre-weighted wg input, pack-copy path) could not
+    express; those rows stay for the trajectory."""
+    from repro.common.config import FLConfig
+    from repro.common.flatpack import packer_for
+    from repro.core import ota
+    from repro.core.channel import channel_params, stack_channel_params
+
+    rows = []
+    key = jax.random.PRNGKey(0)
+    N = 3
+    cases = [
+        ("paperMLP_3.9M", None, 10),            # real Table-I shapes
+        ("1M_x32leaves", (1 << 20, 32), 10),
+        ("16M_x64leaves", (1 << 24, 64), 10),   # raw grads = 1.9 GB
+    ]
+    if quick:                                   # CI smoke: small case only
+        cases, n_scenarios, iters = cases[:1], min(n_scenarios, 4), 1
+    for label, spec, C in cases:
+        if spec is None:
+            g = _paper_mlp_client_tree(C, N, key)
+        else:
+            g = _client_grad_tree(spec[0], spec[1], C, N, key)
+        p = jax.random.uniform(jax.random.fold_in(key, 99), (C, N),
+                               jnp.float32, 0.5, 1.5)
+        n_leaves = len(jax.tree.leaves(g))
+        fl = FLConfig(n_clusters=C, n_clients=N,
+                      sigma2=tuple(0.25 + 0.25 * i for i in range(C)))
+        chan = channel_params(fl)
+        template = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape[2:], l.dtype), g)
+        packer = packer_for(template, tail="final", sections="toplevel")
+
+        f_fold = jax.jit(lambda k, gg, pp, ch: ota.ota_aggregate_client_folded(
+            k, gg, pp, ch, N, packer))
+        f_leaf = jax.jit(lambda k, gg, pp, ch: ota.ota_aggregate_tree(
+            k, jax.tree.map(
+                lambda l: jnp.einsum("cn,cn...->c...", pp, l), gg), ch, N))
+        t_fold = _time(f_fold, key, g, p, chan, iters=iters)
+        t_leaf = _time(f_leaf, key, g, p, chan, iters=iters)
+        rows.append((f"ota_agg_clientfold_{label}", t_fold,
+                     f"{n_leaves} leaves,C={C},N={N};zero-copy client fold"))
+        rows.append((f"ota_agg_perleaf_raw_{label}", t_leaf,
+                     f"einsum+jnp per-leaf;"
+                     f"clientfold_speedup={t_leaf / t_fold:.2f}x"))
+
+        # banked: vmap over an (S,)-batched ChannelParams bank — shared
+        # key/grads/weights (CRN); the key-only stream draw hoists out of
+        # the scenario vmap by construction
+        bank = stack_channel_params(
+            [channel_params(FLConfig(
+                n_clusters=C, n_clients=N,
+                sigma2=(0.25 + 0.25 * (s % 8),),
+                ota=(s % 4 != 3))) for s in range(n_scenarios)])
+        fb_fold = jax.jit(jax.vmap(
+            lambda ch, k, gg, pp: ota.ota_aggregate_client_folded(
+                k, gg, pp, ch, N, packer),
+            in_axes=(0, None, None, None)))
+        fb_leaf = jax.jit(jax.vmap(
+            lambda ch, k, gg, pp: ota.ota_aggregate_tree(
+                k, jax.tree.map(
+                    lambda l: jnp.einsum("cn,cn...->c...", pp, l), gg),
+                ch, N),
+            in_axes=(0, None, None, None)))
+        tb_fold = _time(fb_fold, bank, key, g, p, iters=iters)
+        tb_leaf = _time(fb_leaf, bank, key, g, p, iters=iters)
+        rows.append((f"ota_agg_clientfold_S{n_scenarios}_{label}", tb_fold,
+                     "banked vmap"))
+        rows.append((f"ota_agg_perleaf_raw_S{n_scenarios}_{label}", tb_leaf,
+                     f"clientfold_speedup={tb_leaf / tb_fold:.2f}x"))
+        del g
+    return rows
+
+
 def _time_bank(bank, batches, keys, steps, block):
     """(compile_s, steady_step_s) of one bank flavor over the shared
     batch/key schedule."""
@@ -257,5 +371,6 @@ def sweep_rows(n_scenarios: int = 8, steps: int = 3, n_clusters: int = 10,
 
 
 if __name__ == "__main__":
-    for name, us, note in run() + packed_rows() + sweep_rows():
+    for name, us, note in (run() + packed_rows() + client_folded_rows()
+                           + sweep_rows()):
         print(f"{name},{us:.0f},{note}")

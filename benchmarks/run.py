@@ -136,11 +136,15 @@ def main() -> None:
             pass
 
     # --- kernel microbenchmarks ------------------------------------------
-    from benchmarks.kernel_bench import packed_rows, run as kbench, sweep_rows
+    from benchmarks.kernel_bench import client_folded_rows, packed_rows, \
+        run as kbench, sweep_rows
     kernel_rows = kbench()
 
     # --- flat-packed OTA engine vs per-leaf jnp path ----------------------
     kernel_rows += packed_rows(quick=args.smoke)
+
+    # --- client-folded zero-copy sim channel vs einsum+per-leaf ----------
+    kernel_rows += client_folded_rows(quick=args.smoke)
 
     # --- scenario-sweep engine: banked vs sequential ----------------------
     if not args.smoke:
@@ -148,10 +152,20 @@ def main() -> None:
     rows += kernel_rows
 
     if args.json:
+        # merge by row name into an existing artifact: a --smoke pass
+        # refreshes only the rows it actually ran, so the committed
+        # full-size rows (1M/16M, banked S=8) survive a local CI-smoke
+        # invocation instead of being clobbered by the smaller row set
+        new = {n: {"name": n, "us_per_call": round(us, 1), "derived": d}
+               for n, us, d in kernel_rows}
+        merged = []
+        if os.path.exists(args.json):
+            with open(args.json) as f:
+                merged = [new.pop(row["name"], row)
+                          for row in json.load(f).get("rows", [])]
+        merged += list(new.values())
         with open(args.json, "w") as f:
-            json.dump({"rows": [
-                {"name": n, "us_per_call": round(us, 1), "derived": d}
-                for n, us, d in kernel_rows]}, f, indent=1)
+            json.dump({"rows": merged}, f, indent=1)
 
     if not args.kernels:
         # --- roofline table (from cached dry-run JSONs) -------------------

@@ -37,6 +37,11 @@ computable from static offsets alone — the zero-copy contract: the
 slab-native distributed step (``repro.core.hota_slab``) never
 materializes the (P,) slab, it walks ``leaf_runs()`` and consumes each
 leaf's storage in place against the stream positions this layout pins.
+The zero-copy consumers also accept leaves carrying identical LEADING
+batch axes over the template shapes — the simulator's client-folded
+channel (DESIGN.md §3.12) reads raw (C, N, *shape) gradient leaves
+against (*shape,) slots (``check_tree_matches_packer(batch_ndim=2)``);
+the maps themselves are batch-free element ranges.
 
 Packers are cached on (treedef, shapes, dtypes, tail, sections), so
 tracing a step re-uses the offsets computed at the first call.
@@ -313,17 +318,34 @@ class TreePacker:
 # ---------------------------------------------------------------------------
 
 def check_tree_matches_packer(packer: TreePacker, tree, what: str,
-                              check_shapes: bool = True) -> None:
+                              check_shapes: bool = True,
+                              batch_ndim: int = 0) -> None:
     """Raise a readable error when ``tree`` does not match the packer
     template: names the first offending leaf path and the section it was
     expected in, instead of letting a zip mispair leaves and die in an
     opaque downstream shape error (used by the packed gathers in
-    repro.core.hota / repro.core.hota_slab)."""
+    repro.core.hota / repro.core.hota_slab and the client-folded sim
+    path in repro.core.ota).
+
+    ``batch_ndim`` allows every leaf to carry that many IDENTICAL
+    leading batch axes on top of its template shape — the zero-copy
+    consumers read e.g. (C, N, *shape) gradient leaves against a
+    template of (*shape,) slots (the (cluster, client) axes of the
+    simulator)."""
     leaves, treedef = jax.tree.flatten(tree)
+
+    def _leaf_ok(i, l):
+        shape = tuple(l.shape)
+        if len(shape) < batch_ndim:
+            return False
+        if batch_ndim and shape[:batch_ndim] != tuple(
+                leaves[0].shape[:batch_ndim]):
+            return False
+        return shape[batch_ndim:] == packer.slots[i].shape
+
     if treedef == packer.treedef:
         if not check_shapes or all(
-                tuple(l.shape) == packer.slots[i].shape
-                for i, l in enumerate(leaves)):
+                _leaf_ok(i, l) for i, l in enumerate(leaves)):
             return
     by_leaf = {i: sec for sec in packer.sections for i in sec.leaf_indices}
     n = len(packer.slots)
@@ -337,8 +359,7 @@ def check_tree_matches_packer(packer: TreePacker, tree, what: str,
         exp = exp_paths[i] if i < n else "<nothing — extra leaf>"
         got = got_paths[i] if i < len(got_paths) else "<missing leaf>"
         shape_ok = (not check_shapes) or (
-            i < n and i < len(leaves)
-            and tuple(leaves[i].shape) == packer.slots[i].shape)
+            i < n and i < len(leaves) and _leaf_ok(i, leaves[i]))
         if exp != got or not shape_ok:
             sec = by_leaf.get(i)
             where = (f"section {sec.index} ({sec.name or 'head'!r}, slab "

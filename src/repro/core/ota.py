@@ -25,7 +25,12 @@ Two implementations share the math:
   and runs eqs. 7-10 for every parameter of every cluster in ONE fused
   Pallas kernel (``repro.kernels.ota_channel.ota_aggregate``); the
   last-shared-layer masks FedGradNorm needs (eq. 5) are the tail slice
-  of the same flat draw (``final_layer_masks_packed``).
+  of the same flat draw (``final_layer_masks_packed``);
+* the **client-folded zero-copy path** (``ota_aggregate_client_folded``,
+  the simulator's hot path — DESIGN.md §3.12) folds eq. 3's Σ_i p_i g_i
+  INTO the masked MAC sum and consumes each raw (C, N, ·) gradient leaf
+  in place against the multi-section stream layout — no weighted tree,
+  no (C, P) pack copy.
 
 Per-leaf channel keys are derived with ``fold_in(cluster_key, leaf_index)``,
 which realizes the paper's "one i.i.d. gain per parameter entry" over an
@@ -41,10 +46,12 @@ from typing import List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.common.flatpack import TreePacker
+from repro.common.flatpack import TreePacker, check_tree_matches_packer
 from repro.core.channel import ChannelParams
 from repro.kernels.ota_channel.kernel import CHUNK_ROWS
-from repro.kernels.ota_channel.ops import _ON_TPU, _ota_aggregate_fused_impl
+from repro.kernels.ota_channel.ops import (
+    _ON_TPU, _ota_aggregate_fused_impl, ota_client_fold_apply,
+)
 from repro.kernels.ota_channel.ref import bits_to_mask
 from repro.kernels.slab import LANE
 
@@ -59,6 +66,11 @@ from repro.kernels.slab import LANE
 NOISE_FOLD = 0x7FFFFFFF          # AWGN stream (per-leaf AND packed)
 PACKED_HEAD_FOLD = 0x7FFF0001    # gain bits for the packed head section
 PACKED_TAIL_FOLD = 0x7FFF0002    # gain bits for the packed tail (ω̃) section
+# the simulator round's channel-key domain (DESIGN.md §4): HotaSim derives
+# its per-round channel key as fold_in(step_key, SIM_CHAN_FOLD) — a
+# reserved value, NOT a bare literal, so no future fold of the step key
+# (data order, head init, ...) can collide with the channel streams.
+SIM_CHAN_FOLD = 0x7FFF0003
 # multi-section layouts (DESIGN.md §3.10): trunk section s folds BASE + s;
 # the tail (ω̃) section keeps PACKED_TAIL_FOLD in EVERY layout, so eq.-5
 # consumers re-draw only the ω̃ stream without knowing the trunk split.
@@ -76,6 +88,14 @@ def leaf_key(ckey: jax.Array, leaf_idx: int) -> jax.Array:
 def noise_key(key: jax.Array) -> jax.Array:
     """AWGN key in a fold-in domain no cluster index can reach."""
     return jax.random.fold_in(key, NOISE_FOLD)
+
+
+def sim_channel_key(key: jax.Array) -> jax.Array:
+    """The simulator round's channel key (DESIGN.md §4): every channel
+    stream of a ``HotaSim.step_with_channel`` round — per-leaf gains,
+    packed section bits, AWGN — folds off this key, in a reserved domain
+    disjoint from any other fold of the step key."""
+    return jax.random.fold_in(key, SIM_CHAN_FOLD)
 
 
 def sample_gain(key: jax.Array, shape, sigma2) -> jax.Array:
@@ -270,30 +290,44 @@ def section_noise_key(slab_key: jax.Array, fold: int) -> jax.Array:
     return jax.random.fold_in(noise_key(slab_key), fold)
 
 
+def section_gain_streams(key: jax.Array, packer: TreePacker,
+                         n_clusters: int) -> List[jax.Array]:
+    """One (C, length) gain-bit stream per ``packer.sections`` entry,
+    drawn under the fold ``packed_section_folds`` assigns it. The SINGLE
+    source of the packed gain schedule: ``packed_gain_bits`` concatenates
+    these, the zero-copy consumers (``ota_aggregate_client_folded``,
+    ``repro.core.hota_slab``) slice them per leaf — so sim and
+    distributed paths draw identical bits for identical layouts (pinned
+    in tests/test_client_folded.py)."""
+    folds = packed_section_folds(packer)
+    return [_section_bits(key, folds[sec.index], n_clusters, sec.length)
+            for sec in packer.sections]
+
+
+def section_noise_streams(key: jax.Array,
+                          packer: TreePacker) -> List[jax.Array]:
+    """One (length,) AWGN bit stream per section — the noise twin of
+    ``section_gain_streams`` (same fold schedule, noise-key domain)."""
+    folds = packed_section_folds(packer)
+    return [_chunked_stream(section_noise_key(key, folds[sec.index]),
+                            sec.length)
+            for sec in packer.sections]
+
+
 def packed_gain_bits(key: jax.Array, packer: TreePacker, n_clusters: int):
-    """The whole round's (C, P) gain-bit slab (head ++ tail streams)."""
-    parts = []
-    if packer.head_len:
-        parts.append(_section_bits(key, PACKED_HEAD_FOLD, n_clusters,
-                                   packer.head_len))
-    if packer.tail_len:
-        parts.append(_section_bits(key, PACKED_TAIL_FOLD, n_clusters,
-                                   packer.tail_len))
-    return jnp.concatenate(parts, axis=-1)
+    """The whole round's (C, P) gain-bit slab: the per-section streams of
+    ``section_gain_streams`` in layout order — the legacy head ++ tail
+    pair for two-section layouts (bit-identical to PR 2), one stream per
+    trunk section for multi-section layouts."""
+    parts = section_gain_streams(key, packer, n_clusters)
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
 
 
 def packed_noise_bits(key: jax.Array, packer: TreePacker) -> jax.Array:
     """The round's (P,) AWGN bit stream (per-section, chunk-quantized —
     the fused kernel's in-kernel draw at each section's final steps)."""
-    nk = noise_key(key)
-    parts = []
-    if packer.head_len:
-        parts.append(_chunked_stream(jax.random.fold_in(nk, PACKED_HEAD_FOLD),
-                                     packer.head_len))
-    if packer.tail_len:
-        parts.append(_chunked_stream(jax.random.fold_in(nk, PACKED_TAIL_FOLD),
-                                     packer.tail_len))
-    return jnp.concatenate(parts)
+    parts = section_noise_streams(key, packer)
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
 
 
 def ota_aggregate_packed(
@@ -328,18 +362,73 @@ def ota_aggregate_packed(
         bits = nbits = None
     else:
         raise ValueError(bits_mode)
+    # per-section stream schedule from the packer's own layout (DESIGN.md
+    # §4): NOT a hard-coded head/tail pair — a "toplevel" packer's trunk
+    # sections fold PACKED_SECTION_FOLD_BASE + s here exactly as the
+    # slab-native distributed engine (repro.core.hota_slab) draws them
+    folds = packed_section_folds(packer)
     nk = noise_key(key)
     section_keys = jnp.stack([
-        jnp.stack([jax.random.fold_in(key, PACKED_HEAD_FOLD),
-                   jax.random.fold_in(nk, PACKED_HEAD_FOLD)]),
-        jnp.stack([jax.random.fold_in(key, PACKED_TAIL_FOLD),
-                   jax.random.fold_in(nk, PACKED_TAIL_FOLD)]),
-    ]).astype(jnp.uint32)                                  # (2, 2, 2)
+        jnp.stack([jax.random.fold_in(key, f), jax.random.fold_in(nk, f)])
+        for f in folds]).astype(jnp.uint32)                # (S, 2, 2)
     ghat = _ota_aggregate_fused_impl(
-        wg, section_keys, (packer.head_len, packer.tail_len), chan.sigma2,
-        chan.h_threshold, chan.noise_std, chan.ota_on, n_clients,
-        interpret=not _ON_TPU, bits=bits, nbits=nbits)
+        wg, section_keys, tuple(sec.length for sec in packer.sections),
+        chan.sigma2, chan.h_threshold, chan.noise_std, chan.ota_on,
+        n_clients, interpret=not _ON_TPU, bits=bits, nbits=nbits)
     return packer.unpack(ghat)
+
+
+def ota_aggregate_client_folded(
+    key: jax.Array,
+    grads,                       # pytree with leading (C, N, ...) leaves
+    p: jax.Array,                # (C, N) loss weights
+    chan: ChannelParams,         # traced knobs; chan.sigma2 is (C,)
+    n_clients: int,
+    packer: TreePacker,
+    bits_mode: str = "fused",    # accepted for API symmetry (see below)
+):
+    """Slab-native sim-path OTA aggregation (DESIGN.md §3.12): fold the
+    client-weight einsum INTO the channel and consume every gradient
+    leaf's storage in place.
+
+    Same math as ``einsum("cn,cn...->c...", p, g)`` followed by
+    ``ota_aggregate_packed`` on a matching layout — eqs. 3 + 8-10 with
+    the traced ``ota_on`` gate — but computed leaf by leaf against the
+    static zero-copy maps (``TreePacker.leaf_runs``): neither the
+    client-weighted tree nor the (C, P) packed slab is ever
+    materialized. Streams are the per-section chunk-quantized draws of
+    ``packed_section_folds`` — identical bits to the packed kernel and
+    to the slab-native distributed engine on the same layout — drawn
+    once per (section, cluster) and sliced per leaf, so leaves sharing a
+    chunk never redraw it.
+
+    ``bits_mode``: "fused" | "supplied" — both return identical values.
+    In this zero-copy formulation the draw always happens outside the
+    kernel and depends only on ``key``, so under ``ScenarioBank``'s
+    scenario vmap (shared key, ``in_axes=None``) it hoists out of the
+    scenario axis in EITHER mode; the parameter survives so the sweep
+    engines compose unchanged.
+    """
+    if bits_mode not in ("fused", "supplied"):
+        raise ValueError(bits_mode)
+    check_tree_matches_packer(packer, grads,
+                              "gradient pytree (client-folded OTA)",
+                              batch_ndim=2)
+    n_clusters = int(chan.sigma2.shape[0])
+    gbits = section_gain_streams(key, packer, n_clusters)
+    nbits = section_noise_streams(key, packer)
+    leaves = packer.treedef.flatten_up_to(grads)
+    out = [None] * len(leaves)
+    for run in packer.leaf_runs():
+        b = jax.lax.slice(gbits[run.section], (0, run.offset),
+                          (n_clusters, run.offset + run.size))
+        nb = jax.lax.slice(nbits[run.section], (run.offset,),
+                           (run.offset + run.size,))
+        out[run.leaf] = ota_client_fold_apply(
+            leaves[run.leaf], p, b, nb, chan.sigma2, chan.h_threshold,
+            chan.noise_std, chan.ota_on, n_clients,
+            interpret=not _ON_TPU)
+    return packer.treedef.unflatten(out)
 
 
 def final_layer_masks_packed(key: jax.Array, chan: ChannelParams,

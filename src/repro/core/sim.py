@@ -15,6 +15,14 @@ Per global iteration k (Alg. 1):
     superimposes clusters; PS estimates ĝ (eqs. 3, 8-10).
  5. PS updates ω (Adam by default, matching Sec. IV-B; SGD available).
 
+With ``use_pallas_ota=True`` (the default) the channel is **slab-native**
+(DESIGN.md §3.12): step 4 runs client-folded — Σ_l M_l ∘ (Σ_n p·g) is
+computed leaf by leaf from the raw (C, N, ·) gradients against the
+multi-section zero-copy stream layout, so neither the client-weighted
+tree nor a (C, P) packed slab is ever materialized (HLO-pinned), and
+step 5 is the slab-view Adam (moments as one flat slab). The per-leaf
+jnp path (``use_pallas_ota=False``) stays the bit-exact oracle.
+
 Heads are padded to the max class count across tasks so clients vmap
 homogeneously; logits above a client's class count are masked to -inf.
 """
@@ -30,12 +38,13 @@ from repro.common.config import FLConfig, TrainConfig
 from repro.common.flatpack import packer_for
 from repro.core import ota
 from repro.core.channel import ChannelParams, channel_params
-from repro.core.fedgradnorm import (
-    FGNState, fgn_init, fgn_update_gated, masked_tree_norm,
-)
+from repro.core.fedgradnorm import FGNState, fgn_init, fgn_update_gated
+from repro.kernels.masked_gradnorm.ops import masked_gradnorm
 from repro.models.model import Model
 from repro.models.params import init_params
-from repro.optim.adam import AdamState, adam_init, adam_update
+from repro.optim.adam import (
+    AdamState, adam_init, adam_update, slab_adam_init, slab_adam_update,
+)
 
 
 class SimState(NamedTuple):
@@ -91,8 +100,12 @@ class HotaSim:
         p = jnp.ones((fl.n_clusters, fl.n_clients), jnp.float32)
         fgn = jax.vmap(lambda _: fgn_init(fl.n_clients))(
             jnp.arange(fl.n_clusters))
+        # slab-native path (DESIGN.md §3.12): PS Adam moments live as one
+        # flat slab — n_leaves-independent update, params unpacked once
+        ps_opt = (slab_adam_init(omega) if fl.use_pallas_ota
+                  else adam_init(omega))
         return SimState(
-            omega=omega, heads=heads, p=p, ps_opt=adam_init(omega),
+            omega=omega, heads=heads, p=p, ps_opt=ps_opt,
             head_opt=head_opt, fgn=fgn,
             f0=jnp.ones((fl.n_clusters, fl.n_clients), jnp.float32),
             step=jnp.zeros((), jnp.int32))
@@ -135,6 +148,23 @@ class HotaSim:
         return head, head_opt, g_avg, f_avg
 
     # ------------------------------------------------------------------
+    def _masked_final_norms(self, g_final, final_masks) -> jax.Array:
+        """(C, N) masked last-shared-layer grad norms n_i (eq. 6), routed
+        through the ``masked_gradnorm`` kernel per cluster: clients are
+        the task rows, the cluster's eq.-7 mask is the shared column
+        mask. Off-TPU the kernel wrapper dispatches to its jnp reference
+        (same values — see repro.kernels.masked_gradnorm.ops), replacing
+        the old per-(cluster, client) double-vmap tree walk."""
+        c, n = self.fl.n_clusters, self.fl.n_clients
+        gm = jnp.concatenate(
+            [l.reshape(c, n, -1).astype(jnp.float32)
+             for l in jax.tree.leaves(g_final)], axis=-1)        # (C, N, P̃)
+        mm = jnp.concatenate(
+            [m.reshape(c, -1).astype(jnp.float32)
+             for m in jax.tree.leaves(final_masks)], axis=-1)    # (C, P̃)
+        return jax.vmap(masked_gradnorm)(gm, mm)
+
+    # ------------------------------------------------------------------
     def step(self, state: SimState, xb, yb, key,
              chan: ChannelParams = None):
         """One Alg.-1 round. xb: (C,N,B,d) float32; yb: (C,N,B) int32.
@@ -166,31 +196,27 @@ class HotaSim:
                                     xb, yb, self.n_classes)
         # g leaves: (C, N, ...); F: (C, N)
 
-        chan_key = jax.random.fold_in(key, 17)
-        # flat-packed OTA: the whole shared tree is one lane-aligned slab
-        # with ω̃ as its tail slice; one fused kernel replaces the per-leaf
-        # channel loops. fl.use_pallas_ota is static config — the per-leaf
-        # jnp path stays available as the property-test oracle.
-        packer = (packer_for(state.omega, tail="final")
+        chan_key = ota.sim_channel_key(key)   # reserved fold (DESIGN.md §4)
+        # slab-native OTA (DESIGN.md §3.12): the shared tree is laid out by
+        # a multi-section zero-copy packer (per-layer-stack trunk sections,
+        # ω̃ tail) and the channel consumes every RAW (C, N, ·) gradient
+        # leaf in place — no client-weighted tree, no (C, P) pack copy.
+        # fl.use_pallas_ota is static config — the per-leaf jnp path stays
+        # available as the property-test oracle.
+        packer = (packer_for(state.omega, tail="final", sections="toplevel")
                   if fl.use_pallas_ota else None)
 
         # --- Alg. 2: FGN_Server per cluster -------------------------------
         f0 = jnp.where(state.step == 0, F, state.f0)
         ratios = F / jnp.maximum(f0, 1e-12)
 
-        if packer is not None:   # tail slice of the round's packed draw
+        if packer is not None:   # tail section of the round's stream draw
             final_masks = ota.final_layer_masks_packed(chan_key, chan, packer)
         else:
             final_masks = ota.final_layer_masks(
                 chan_key, state.omega["final"], chan)   # leaves (C, ...)
 
-        def cluster_norms(c):
-            mask_c = jax.tree.map(lambda m: m[c], final_masks)
-            return jax.vmap(
-                lambda n: masked_tree_norm(
-                    jax.tree.map(lambda leaf: leaf[c, n], g["final"]), mask_c)
-            )(jnp.arange(fl.n_clients))
-        norms = jax.vmap(cluster_norms)(jnp.arange(fl.n_clusters))  # (C,N)
+        norms = self._masked_final_norms(g["final"], final_masks)   # (C, N)
 
         # weighting gate is traced (chan.fgn_on): "equal" scenarios take the
         # same trace and just select the passthrough
@@ -200,18 +226,24 @@ class HotaSim:
         )(state.p, norms, ratios, state.fgn)
 
         # --- eqs. (3), (8)-(10): weighted transmission + OTA --------------
-        weighted = jax.tree.map(
-            lambda gl: jnp.einsum("cn,cn...->c...", p_new, gl), g)
         if packer is not None:
-            ghat = ota.ota_aggregate_packed(chan_key, weighted, chan,
-                                            fl.n_clients, packer,
-                                            bits_mode=ota_bits_mode)
+            # client-folded: Σ_n p[l,n]·g[l,n] folds into the masked MAC
+            # sum leaf by leaf — the einsum'd weighted tree never exists
+            ghat = ota.ota_aggregate_client_folded(
+                chan_key, g, p_new, chan, fl.n_clients, packer,
+                bits_mode=ota_bits_mode)
+            # slab-view PS update: moments stay one flat slab, params
+            # unpack exactly once (the model-apply boundary)
+            omega, ps_opt = slab_adam_update(ghat, state.ps_opt,
+                                             state.omega, tcfg.lr)
         else:
+            weighted = jax.tree.map(
+                lambda gl: jnp.einsum("cn,cn...->c...", p_new, gl), g)
             ghat = ota.ota_aggregate_tree(chan_key, weighted, chan,
                                           fl.n_clients)
-
-        # --- PS update (line 20) -------------------------------------------
-        omega, ps_opt = adam_update(ghat, state.ps_opt, state.omega, tcfg.lr)
+            # --- PS update (line 20) ---------------------------------------
+            omega, ps_opt = adam_update(ghat, state.ps_opt, state.omega,
+                                        tcfg.lr)
 
         metrics = {"loss": F, "p": p_new, "fgrad": fval,
                    "grad_norms": norms}

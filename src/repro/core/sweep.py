@@ -169,10 +169,11 @@ class ScenarioBank(_BankCheckpoint):
         return self._step(states, xb, yb, key, self.chan_bank)
 
     def _vmapped_step(self, states, xb, yb, key, chan_bank):
-        # supplied bits mode: the packed OTA path pre-draws its (shared,
-        # key-only) bit streams so the RNG hoists out of the scenario
-        # vmap — one draw per round, not per scenario (same stream and
-        # values as the fused default).
+        # supplied bits mode: the OTA stream draw is a function of the
+        # shared key only, so it hoists out of the scenario vmap — one
+        # draw per round, not per scenario. The client-folded sim path
+        # (DESIGN.md §3.12) draws key-only in either mode; the flag is
+        # kept so the per-slab kernel path composes identically.
         step = partial(self.sim.step_with_channel,
                        ota_bits_mode="supplied")
         return jax.vmap(step, in_axes=(0, None, None, None, 0))(

@@ -14,10 +14,22 @@ from repro.kernels.slab import LANE, pad_axis
 _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
 
 
-@partial(jax.jit, static_argnames=("interpret",))
+@partial(jax.jit, static_argnames=("interpret", "impl"))
 def masked_gradnorm(g: jax.Array, mask: jax.Array,
-                    interpret: bool = not _ON_TPU) -> jax.Array:
-    """g: (T, P); mask: (P,) — returns (T,) masked L2 norms (fp32)."""
+                    interpret: bool = not _ON_TPU,
+                    impl: str = None) -> jax.Array:
+    """g: (T, P); mask: (P,) — returns (T,) masked L2 norms (fp32).
+
+    ``impl``: "pallas" | "jnp". Default: "pallas" on TPU (the tiled VMEM
+    kernel), "jnp" elsewhere — the interpret-mode pallas_call is ~28x
+    slower than its own jnp oracle on this CPU (BENCH_kernels.json:
+    28258 vs 1009 µs at 8x64k) while computing identical values, so
+    off-TPU callers (the simulator's per-cluster eq.-6 norms) take the
+    reference. Tests force ``impl="pallas"`` to validate the kernel."""
+    if impl is None:
+        impl = "pallas" if _ON_TPU else "jnp"
+    if impl == "jnp":
+        return masked_gradnorm_ref(g, mask)
     t, p = g.shape
     tb = TASK_BLOCK if t >= TASK_BLOCK else t
     cb = COL_BLOCK if p >= COL_BLOCK else max(LANE, p)

@@ -10,6 +10,12 @@
   (C, rows, 128) weighted-grad slab (already Σ_i p_i g_i per cluster)
   and the traced channel knobs; an in-kernel loop over the cluster axis
   fuses mask draw→Σ_l mask·wg accumulation→AWGN→guarded |M|·N estimate.
+
+* ``ota_aggregate_client_pallas`` — the client-folded variant (DESIGN.md
+  §3.12): input the RAW (C, N, rows, 128) per-client gradient slab and
+  the (C, N) loss-weight matrix (riding the params block); the MAC loop
+  computes Σ_l mask_l · (Σ_n p[l,n]·g[l,n]) in block — eqs. 3 + 8-10 in
+  one pass, so the caller never materializes the client-weighted tree.
   Masks are drawn by inverse-CDF thresholding (``u < erfc(√(H_th/2σ²))``
   — exactly the law of 1{|H|² ≥ H_th}; the estimator never consumes H
   because channel inversion cancels it on passing entries), so the
@@ -226,6 +232,81 @@ def ota_mask_count_pallas(
         interpret=interpret,
     )(x, bits, params.astype(jnp.float32))
     return out, cnt
+
+
+def _ota_aggregate_client_kernel(x_ref, bits_ref, nbits_ref, params_ref,
+                                 out_ref, *, n_clusters, n_clients):
+    """Client-folded PS estimator (DESIGN.md §3.12): the MAC loop computes
+    Σ_l M_l ∘ (Σ_n p[l,n]·x[l,n]) IN BLOCK from the raw (C, N, ·) gradient
+    slab and the (C, N) loss-weight matrix — eqs. 3 + 8-10 in one pass;
+    neither the client-weighted tree nor a (C, P) pack copy exists. The
+    weight matrix rides the params block after the per-cluster σ²."""
+    c, n = n_clusters, n_clients
+    h_th = params_ref[0, c + c * n]
+    noise_std = params_ref[0, c + c * n + 1]
+    ota_on = params_ref[0, c + c * n + 2]
+    off = ota_on < 0.5                       # traced error-free gate
+
+    acc = jnp.zeros_like(out_ref[...], jnp.float32)
+    cnt = jnp.zeros_like(acc)
+    for l in range(n_clusters):              # static unrolled cluster loop
+        wg = jnp.zeros_like(acc)
+        for i in range(n_clients):           # eq. 3: Σ_n p[l,n]·g[l,n]
+            wg = wg + params_ref[0, c + l * n + i] * (
+                x_ref[l, i].astype(jnp.float32))
+        mask = _bits_mask(bits_ref[l],
+                          _pass_probability(params_ref[0, l], h_th), off)
+        acc = acc + jnp.where(mask, wg, 0.0)
+        cnt = cnt + mask.astype(jnp.float32)
+
+    z = _box_muller(nbits_ref[...], 1.0) * noise_std * ota_on
+    y = acc + z
+    out_ref[...] = jnp.where(cnt > 0,
+                             y / (jnp.maximum(cnt, 1.0) * n_clients), 0.0)
+
+
+def ota_aggregate_client_pallas(
+    x: jax.Array,            # (C, N, rows, 128) f32 — RAW per-client grads
+    bits: jax.Array,         # (C, rows, 128) uint32 — gain bits per cluster
+    nbits: jax.Array,        # (rows, 128) uint32 — AWGN bits
+    params: jax.Array,       # (1, C·(N+1)+3): [σ²_·, p_··, H_th, z_std, ota_on]
+    *,
+    n_clients: int,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused client-folded OTA aggregation for one leaf/section slab.
+
+    Returns the (rows, 128) PS estimate ĝ. The caller supplies the bit
+    streams (the chunk-quantized key schedule lives in ``repro.core.ota``
+    — under a scenario vmap the draw depends only on the shared key and
+    hoists out of the scenario axis)."""
+    n_clusters, n_cl, rows, lane = x.shape
+    assert lane == LANE and n_cl == n_clients, (x.shape, n_clients)
+    assert bits.shape == (n_clusters, rows, LANE), (bits.shape, x.shape)
+    assert nbits.shape == (rows, LANE), nbits.shape
+    # C·N grad blocks + C bits blocks + noise + out resident at once
+    br = _pick_block_rows(rows, n_clusters * (n_clients + 1) + 2,
+                          block_rows, interpret)
+    grid = (rows // br,)
+
+    kernel = functools.partial(_ota_aggregate_client_kernel,
+                               n_clusters=n_clusters, n_clients=n_clients)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_clusters, n_clients, br, LANE),
+                         lambda i: (0, 0, i, 0)),
+            pl.BlockSpec((n_clusters, br, LANE), lambda i: (0, i, 0)),
+            pl.BlockSpec((br, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_clusters * (n_clients + 1) + 3),
+                         lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        interpret=interpret,
+    )(x, bits, nbits, params.astype(jnp.float32))
 
 
 def ota_channel_pallas(

@@ -21,11 +21,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ota_channel.kernel import (
-    ota_aggregate_fused_pallas, ota_aggregate_pallas, ota_channel_pallas,
-    ota_mask_count_pallas, ota_mask_weight_pallas,
+    ota_aggregate_client_pallas, ota_aggregate_fused_pallas,
+    ota_aggregate_pallas, ota_channel_pallas, ota_mask_count_pallas,
+    ota_mask_weight_pallas,
 )
 from repro.kernels.ota_channel.ref import (
-    bits_to_mask, ota_aggregate_slab_ref, ota_channel_ref,
+    bits_to_mask, ota_aggregate_client_ref, ota_aggregate_slab_ref,
+    ota_channel_ref,
 )
 from repro.kernels.slab import LANE, ROW_QUANTUM, flat_to_slab, pad_to_lanes
 
@@ -119,6 +121,76 @@ def ota_mask_weight_apply(x: jax.Array, bits: jax.Array, sigma2, h_th,
     return out.reshape(x.shape), mask.reshape(x.shape)
 
 
+def ota_client_fold_apply(g: jax.Array, p: jax.Array, bits: jax.Array,
+                          nbits: jax.Array, sigma2, h_th, noise_std, ota_on,
+                          n_clients: int,
+                          interpret: bool = not _ON_TPU,
+                          impl: str = None):
+    """Zero-copy client-folded OTA aggregation for ONE leaf (DESIGN.md
+    §3.12): ĝ = guard(Σ_l M_l ∘ (Σ_n p[l,n]·g[l,n]) + z), eqs. 3 + 8-10
+    in one pass from the RAW (C, N, *shape) gradient leaf and the (C, N)
+    loss-weight matrix — the client-weighted tree is never materialized.
+
+    ``g`` is consumed through a reshape of its own storage: the
+    LANE-aligned main body runs the ``ota_aggregate_client_pallas``
+    kernel in place, the < ROW_QUANTUM ragged remainder takes the jnp
+    reference on the SAME pre-sliced streams (``bits``/``nbits`` are the
+    leaf's static slices of its section streams — see
+    ``repro.common.flatpack.TreePacker.leaf_runs``). Returns the
+    (*shape,) f32 PS estimate.
+
+    ``impl``: "pallas" | "jnp". Default: "pallas" on TPU (the compiled
+    kernel), "jnp" elsewhere — on CPU the interpret-mode pallas_call is
+    pure dispatch overhead while the jnp form computes the identical
+    values (pinned in tests/test_client_folded.py) AND lets XLA fuse the
+    weight fold with the masked sum. Tests force ``impl="pallas"`` +
+    interpret to validate the kernel itself.
+    """
+    if impl is None:
+        impl = "pallas" if _ON_TPU else "jnp"
+    n_clusters, n_cl = g.shape[:2]
+    assert n_cl == n_clients, (g.shape, n_clients)
+    shape = g.shape[2:]
+    n = int(g.size) // (n_clusters * n_clients)
+    assert bits.shape == (n_clusters, n) and nbits.shape == (n,), \
+        (bits.shape, nbits.shape, n)
+    flat = g.reshape(n_clusters, n_clients, n)
+    p32 = jnp.asarray(p, jnp.float32).reshape(n_clusters, n_clients)
+    sig = jnp.asarray(sigma2, jnp.float32).reshape(n_clusters)
+    if impl == "jnp":
+        out = ota_aggregate_client_ref(flat, p32, bits, nbits, sig, h_th,
+                                       noise_std, ota_on, n_clients)
+        return out.reshape(shape)
+    params = jnp.concatenate([
+        sig,
+        p32.reshape(n_clusters * n_clients),
+        jnp.stack([jnp.asarray(h_th, jnp.float32).reshape(()),
+                   jnp.asarray(noise_std, jnp.float32).reshape(()),
+                   jnp.asarray(ota_on, jnp.float32).reshape(())]),
+    ]).reshape(1, n_clusters * (n_clients + 1) + 3)
+    main = n - n % ROW_QUANTUM
+    outs = []
+    if main:
+        rows = main // LANE
+        o = ota_aggregate_client_pallas(
+            jax.lax.slice(flat, (0, 0, 0), (n_clusters, n_clients, main))
+            .astype(jnp.float32).reshape(n_clusters, n_clients, rows, LANE),
+            jax.lax.slice(bits, (0, 0), (n_clusters, main))
+            .reshape(n_clusters, rows, LANE),
+            jax.lax.slice(nbits, (0,), (main,)).reshape(rows, LANE),
+            params, n_clients=n_clients, interpret=interpret)
+        outs.append(o.reshape(main))
+    if n - main:
+        outs.append(ota_aggregate_client_ref(
+            jax.lax.slice(flat, (0, 0, main), (n_clusters, n_clients, n)),
+            p32,
+            jax.lax.slice(bits, (0, main), (n_clusters, n)),
+            jax.lax.slice(nbits, (main,), (n,)),
+            sig, h_th, noise_std, ota_on, n_clients))
+    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+    return out.reshape(shape)
+
+
 def ota_mask_count_apply(x: jax.Array, bits_all: jax.Array, me, sigma2_all,
                          h_th, ota_on, weight,
                          interpret: bool = not _ON_TPU,
@@ -205,16 +277,18 @@ def _ota_aggregate_fused_impl(wg, section_keys, section_lens, sigma2, h_th,
                               noise_std, ota_on, n_clients: int,
                               interpret: bool, bits=None,
                               nbits=None) -> jax.Array:
-    """In-kernel-RNG whole-model aggregation (the sim hot path).
+    """In-kernel-RNG whole-model aggregation (the packed slab path).
 
-    ``section_keys``: (2, 2, 2) uint32 threefry keys — [section][gain|awgn]
-    for the packer's head and tail sections; ``section_lens``: static
-    (head_len, tail_len). Each section runs its own kernel call (disjoint
-    row ranges of the slab, disjoint chunk-quantized streams), so the FGN
-    phase can re-draw just the tail. The interpret-mode stream is
-    reproducible outside the kernel (see repro.core.ota._section_bits);
-    pass the pre-drawn ``bits``/``nbits`` slabs (the identical stream) to
-    hoist the RNG out of a scenario vmap (ScenarioBank's supplied mode).
+    ``section_keys``: (S, 2, 2) uint32 threefry keys — [section][gain|awgn]
+    for each of the packer's sections in layout order (the caller derives
+    the folds from ``ota.packed_section_folds``); ``section_lens``: the
+    matching static lengths. Each section runs its own kernel call
+    (disjoint row ranges of the slab, disjoint chunk-quantized streams),
+    so the FGN phase can re-draw just the ω̃ tail. The interpret-mode
+    stream is reproducible outside the kernel (see
+    repro.core.ota._section_bits); pass the pre-drawn ``bits``/``nbits``
+    slabs (the identical stream) to hoist the RNG out of a scenario vmap
+    (ScenarioBank's supplied mode).
     """
     c, p = wg.shape
     params = _channel_params_block(sigma2, h_th, noise_std, ota_on, c)

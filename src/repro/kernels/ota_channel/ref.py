@@ -62,6 +62,25 @@ def ota_channel_ref(x: jax.Array, bits: jax.Array, sigma2, h_th, ota_on=1.0):
     return out, mask.astype(x.dtype), h
 
 
+def ota_aggregate_client_ref(
+    g: jax.Array,            # (C, N, ...) RAW per-client gradients
+    p: jax.Array,            # (C, N) loss weights
+    bits: jax.Array,         # (C, ...) uint32 gain bits per cluster
+    nbits: jax.Array,        # (...) uint32 AWGN bits
+    sigma2: jax.Array,       # (C,)
+    h_th, noise_std, ota_on,
+    n_clients: int,
+) -> jax.Array:
+    """Client-folded oracle (eqs. 3 + 8-10): fold the per-client weights
+    into the MAC sum — Σ_l M_l ∘ (Σ_n p[l,n]·g[l,n]) — then AWGN and the
+    guarded |M|·N estimate. Same bits/mask/noise laws as
+    ``ota_aggregate_slab_ref``; the weighted tree is never an input."""
+    wg = jnp.einsum("cn,cn...->c...", p.astype(jnp.float32),
+                    g.astype(jnp.float32))
+    return ota_aggregate_slab_ref(wg, bits, nbits, sigma2, h_th, noise_std,
+                                  ota_on, n_clients)
+
+
 def ota_aggregate_slab_ref(
     wg: jax.Array,           # (C, ...) weighted grads, already Σ_i p_i g_i
     bits: jax.Array,         # (C, ...) uint32 gain bits per cluster

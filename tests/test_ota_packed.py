@@ -188,10 +188,14 @@ def test_packed_composes_with_scenario_vmap():
 def test_sim_packed_equals_per_leaf_when_ota_off():
     """End-to-end: with the channel off both sim paths are the exact same
     weighted mean, so one step from identical init must match leaf-for-leaf
-    (the only scenario where the two PRNG schemes cannot differ)."""
+    (the only scenario where the two PRNG schemes cannot differ). The
+    packed path keeps its PS Adam moments as one flat slab
+    (repro.optim.adam.SlabAdamState), so the optimizer states are
+    compared through ``tree_to_slab`` rather than leaf-zipped."""
     import dataclasses
     from repro.common.config import ModelConfig, TrainConfig
     from repro.core.sim import HotaSim
+    from repro.optim.adam import tree_to_slab
     C, N = 2, 2
     model_cfg = ModelConfig(family="mlp")
     from repro.models.model import build_model
@@ -206,9 +210,21 @@ def test_sim_packed_equals_per_leaf_when_ota_off():
         st_ = sim.init(jax.random.PRNGKey(0))
         st_, m = sim.step(st_, x, y, jax.random.PRNGKey(9))
         outs.append((st_, m))
-    for a, b in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[1])):
+    (st_p, m_p), (st_l, m_l) = outs
+    for field in ("omega", "heads", "p", "head_opt", "fgn", "f0", "step"):
+        for a, b in zip(jax.tree.leaves(getattr(st_p, field)),
+                        jax.tree.leaves(getattr(st_l, field))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6, err_msg=field)
+    for a, b in zip(jax.tree.leaves(m_p), jax.tree.leaves(m_l)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-5, atol=1e-6)
+    assert int(st_p.ps_opt.step) == int(st_l.ps_opt.step)
+    for slab, tree in ((st_p.ps_opt.mu, st_l.ps_opt.mu),
+                       (st_p.ps_opt.nu, st_l.ps_opt.nu)):
+        np.testing.assert_allclose(np.asarray(slab),
+                                   np.asarray(tree_to_slab(tree)),
+                                   rtol=1e-6, atol=1e-7)
 
 
 # ---------------------------------------------------------------- PRNG pins
