@@ -242,6 +242,25 @@ def client_folded_rows(n_scenarios: int = 8, iters: int = 3,
                      f"einsum+jnp per-leaf;"
                      f"clientfold_speedup={t_leaf / t_fold:.2f}x"))
 
+        # autotuned layout (DESIGN.md §3.13): the calibration sweep picks
+        # engine x sections x coalescing threshold; when it picks the
+        # per-leaf engine the tuned path IS f_leaf (reuse its time), so
+        # the tuned row is >= 1.0x vs per-leaf by construction and > 1.0x
+        # exactly where a coalesced slab layout genuinely wins
+        from repro.common.layout_tune import packer_for_layout, tune_layout
+        choice = tune_layout(template, C, N, iters=max(1, iters - 1))
+        if choice.engine == "slab":
+            tuned_pk = packer_for_layout(template, choice)
+            f_tuned = jax.jit(
+                lambda k, gg, pp, ch: ota.ota_aggregate_client_folded(
+                    k, gg, pp, ch, N, tuned_pk))
+            t_tuned = _time(f_tuned, key, g, p, chan, iters=iters)
+        else:
+            t_tuned = t_leaf
+        rows.append((f"ota_agg_clientfold_tuned_{label}", t_tuned,
+                     f"layout={choice.describe()};"
+                     f"tuned_speedup={t_leaf / t_tuned:.2f}x_vs_perleaf"))
+
         # banked: vmap over an (S,)-batched ChannelParams bank — shared
         # key/grads/weights (CRN); the key-only stream draw hoists out of
         # the scenario vmap by construction
@@ -267,6 +286,40 @@ def client_folded_rows(n_scenarios: int = 8, iters: int = 3,
         rows.append((f"ota_agg_perleaf_raw_S{n_scenarios}_{label}", tb_leaf,
                      f"clientfold_speedup={tb_leaf / tb_fold:.2f}x"))
         del g
+    return rows
+
+
+def layout_tune_rows(quick: bool = False, iters: int = 2):
+    """The section-layout autotuner's calibration sweep (DESIGN.md
+    §3.13), reported as bench rows: one row per candidate layout
+    (engine x sections x coalescing threshold) per template, plus the
+    chosen LayoutChoice. This is what ``run.py --tune`` emits — the CI
+    smoke runs it quick to pin that the sweep executes end to end."""
+    from repro.common.layout_tune import calibrate_layout
+
+    rows = []
+    key = jax.random.PRNGKey(0)
+    N = 3
+    cases = [
+        ("paperMLP_3.9M", None, 10),
+        ("1M_x32leaves", (1 << 20, 32), 10),   # the adversarial layout
+    ]
+    if quick:
+        cases, iters = cases[:1], 1
+    for label, spec, C in cases:
+        if spec is None:
+            g = _paper_mlp_client_tree(C, N, key)
+        else:
+            g = _client_grad_tree(spec[0], spec[1], C, N, key)
+        template = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape[2:], l.dtype), g)
+        del g
+        choice, report = calibrate_layout(template, C, N, iters=iters)
+        for entry in report:
+            rows.append((f"layout_tune_{label}[{entry['layout']}]",
+                         entry["us"], "calibration candidate"))
+        rows.append((f"layout_tune_{label}_chosen", 0.0,
+                     f"layout={choice.describe()}"))
     return rows
 
 
@@ -372,5 +425,5 @@ def sweep_rows(n_scenarios: int = 8, steps: int = 3, n_clusters: int = 10,
 
 if __name__ == "__main__":
     for name, us, note in (run() + packed_rows() + client_folded_rows()
-                           + sweep_rows()):
+                           + layout_tune_rows() + sweep_rows()):
         print(f"{name},{us:.0f},{note}")

@@ -46,6 +46,11 @@ def main() -> None:
                          "mesh; with --json also writes BENCH_sweep.json")
     ap.add_argument("--sweep-devices", type=int, default=2,
                     help="forced host device count for --sweep (default 2)")
+    ap.add_argument("--tune", action="store_true",
+                    help="section-layout autotuner rows only (the "
+                         "calibration sweep of DESIGN.md §3.13 per bench "
+                         "template); with --json merges into "
+                         "BENCH_kernels.json by row name")
     ap.add_argument("--dist", action="store_true",
                     help="distributed-step rows only (slab-native vs "
                          "per-leaf engines + the 2-D scenario × client "
@@ -69,6 +74,30 @@ def main() -> None:
                 f"{n_dev}").strip()
 
     rows = []
+
+    if args.tune:
+        # --- section-layout autotuner calibration (DESIGN.md §3.13) ------
+        from benchmarks.kernel_bench import layout_tune_rows
+        trows = layout_tune_rows(quick=args.smoke,
+                                 iters=1 if args.smoke else 2)
+        if args.json:
+            # merge into the kernel artifact by row name (same pattern as
+            # the kernel rows below): a tune pass refreshes only its own
+            # rows and leaves the committed kernel rows intact
+            new = {n: {"name": n, "us_per_call": round(us, 1), "derived": d}
+                   for n, us, d in trows}
+            merged = []
+            if os.path.exists(args.json):
+                with open(args.json) as f:
+                    merged = [new.pop(row["name"], row)
+                              for row in json.load(f).get("rows", [])]
+            merged += list(new.values())
+            with open(args.json, "w") as f:
+                json.dump({"rows": merged}, f, indent=1)
+        print("name,us_per_call,derived")
+        for name, us, derived in trows:
+            print(f"{name},{us:.1f},{derived}")
+        return
 
     if args.dist:
         # --- distributed step: slab-native vs per-leaf + 2-D bank --------

@@ -52,19 +52,43 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, metadata: Optional[dict] = N
     return path
 
 
-def restore_checkpoint(ckpt_dir: str, step: int, like_tree, shardings=None):
+def restore_checkpoint(ckpt_dir: str, step: int, like_tree, shardings=None,
+                       expected_layout: Optional[dict] = None):
     """Restore into the structure of ``like_tree`` (shape/dtype-checked).
 
     ``like_tree`` may hold arrays or ShapeDtypeStructs (only shape/dtype
     are read). ``shardings``: optional placement for the restored leaves —
     a single ``Sharding`` applied to every leaf, or a same-structure
     pytree of them (the sweep banks pass their banked layout so a restore
-    lands scenario-split exactly like a fresh ``init``)."""
+    lands scenario-split exactly like a fresh ``init``).
+
+    ``expected_layout``: the restoring run's packed-layout metadata
+    (``LayoutChoice.to_metadata()`` — DESIGN.md §3.13). Section folds,
+    and therefore every channel stream, depend on the layout, so a
+    checkpoint saved under one layout must not silently continue under
+    another: if the manifest pins a ``"layout"`` metadata entry and it
+    differs from ``expected_layout``, the restore raises with both
+    layouts named."""
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
         manifest = msgpack.unpackb(f.read())
     treedef, like_leaves = _leaf_paths(like_tree)
-    assert manifest["n_leaves"] == len(like_leaves), "checkpoint/tree mismatch"
+    if manifest["n_leaves"] != len(like_leaves):
+        raise ValueError(
+            f"checkpoint/tree mismatch restoring {path}: the manifest "
+            f"records {manifest['n_leaves']} leaves but the supplied "
+            f"like_tree has {len(like_leaves)} — the checkpoint was saved "
+            f"from a different model/bank structure.")
+    saved_layout = (manifest.get("metadata") or {}).get("layout")
+    if expected_layout is not None and saved_layout is not None \
+            and dict(saved_layout) != dict(expected_layout):
+        raise ValueError(
+            f"packed-layout mismatch restoring {path}: the checkpoint was "
+            f"saved under layout {dict(saved_layout)} but this run uses "
+            f"layout {dict(expected_layout)}. Section folds — and so every "
+            f"channel stream — depend on the layout (DESIGN.md §3.13); "
+            f"rebuild the run with the checkpoint's layout "
+            f"(repro.common.layout_tune.apply_layout) or start fresh.")
     if shardings is None:
         shard_leaves = None
     elif hasattr(shardings, "device_set"):        # one Sharding for all
@@ -77,7 +101,11 @@ def restore_checkpoint(ckpt_dir: str, step: int, like_tree, shardings=None):
     leaves = []
     for i, like in enumerate(like_leaves):
         arr = np.load(os.path.join(path, f"arr_{i}.npy"))
-        assert list(arr.shape) == list(like.shape), (i, arr.shape, like.shape)
+        if list(arr.shape) != list(like.shape):
+            raise ValueError(
+                f"checkpoint/tree mismatch restoring {path}: leaf {i} was "
+                f"saved with shape {tuple(arr.shape)} but the like_tree "
+                f"expects {tuple(like.shape)}.")
         arr = arr.astype(like.dtype)
         if shard_leaves is not None:
             arr = jax.device_put(arr, shard_leaves[i])

@@ -134,6 +134,17 @@ class FLConfig:
     # Channel keys fold (step, layer, leaf) only, so microbatch-averaged
     # estimates equal one MAC transmission per round (exact Alg. 1).
     ota_mode: str = "scatter"         # "scatter" | "naive"
+    # Packed-slab section layout (DESIGN.md §3.13) — static, like ota_mode:
+    # the Section partition decides the stream folds, so it changes every
+    # channel draw and is pinned in checkpoint manifests. "toplevel" =
+    # one section per layer stack (tail last); "tail" = the legacy
+    # two-section layout. min_section_rows coalesces adjacent sub-
+    # threshold trunk sections (rows of 128 lanes) to kill the chunk-
+    # quantization RNG waste on many-tiny-leaf templates; 0 = uncoalesced
+    # (bit-identical to the pre-autotuner layout). Set both via
+    # repro.common.layout_tune.apply_layout, not by hand.
+    ota_sections: str = "toplevel"    # "toplevel" | "tail"
+    min_section_rows: int = 0         # coalescing threshold (slab rows)
     microbatches: int = 1             # gradient accumulation count
 
     def cluster_sigma2(self, cluster: int) -> float:

@@ -43,8 +43,22 @@ channel (DESIGN.md §3.12) reads raw (C, N, *shape) gradient leaves
 against (*shape,) slots (``check_tree_matches_packer(batch_ndim=2)``);
 the maps themselves are batch-free element ranges.
 
-Packers are cached on (treedef, shapes, dtypes, tail, sections), so
-tracing a step re-uses the offsets computed at the first call.
+Chunk coalescing (``min_section_rows`` — DESIGN.md §3.13): the stream
+spec draws bits in 1024-row chunks (§4), so a template with many tiny
+top-level groups pays a full chunk draw per sub-chunk section — the
+adversarial-layout loss the benchmarks pin. With a nonzero threshold,
+adjacent trunk groups below ``min_section_rows`` rows merge into one
+ROW_QUANTUM-aligned section. Leaf slab offsets are IDENTICAL at every
+threshold (every leaf and every group start is already
+ROW_QUANTUM-aligned, so merging only re-groups — it never moves data);
+what changes is the Section partition and therefore the per-section
+stream folds. ``min_section_rows=0`` is bit-identical to the uncoalesced
+layout (stream-pinned in tests), and the ω̃ tail always stays its own
+last section so eq.-5 consumers keep ``PACKED_TAIL_FOLD``.
+
+Packers are cached on (treedef, shapes, dtypes, tail, sections,
+min_section_rows), so tracing a step re-uses the offsets computed at the
+first call.
 """
 from __future__ import annotations
 
@@ -133,16 +147,35 @@ class TreePacker:
       (repro.core.hota_slab) never materializes the slab, and a
       full-section stream draw is bounded by ONE layer stack.
 
+    ``min_section_rows`` (``sections="toplevel"`` only) coalesces
+    adjacent trunk groups shorter than that many LANE-wide rows into one
+    section, closing each merged section once it reaches the threshold;
+    a trailing under-threshold remainder folds into the previous trunk
+    section, and the ``tail`` group is never merged — it stays its own
+    last section. Leaf offsets are identical at every threshold; only
+    the Section partition (and so the stream folds) changes. ``0``
+    (the default) reproduces the uncoalesced layout bit-exactly.
+
     The template must carry ONE uniform leaf dtype: the slab is a single
     flat buffer and the zero-copy maps alias leaf storage in place, so a
     mixed-dtype tree has no representable layout — cast it first.
     """
 
     def __init__(self, template, tail: Optional[str] = "final",
-                 sections: str = "tail"):
+                 sections: str = "tail", min_section_rows: int = 0):
         if sections not in ("tail", "toplevel"):
             raise ValueError(
                 f"sections must be 'tail' or 'toplevel', got {sections!r}")
+        min_section_rows = int(min_section_rows)
+        if min_section_rows < 0:
+            raise ValueError(
+                f"min_section_rows must be >= 0, got {min_section_rows}")
+        if sections == "tail" and min_section_rows:
+            raise ValueError(
+                "min_section_rows requires sections='toplevel': the legacy "
+                "two-section layout has no trunk groups to coalesce "
+                f"(got min_section_rows={min_section_rows})")
+        self.min_section_rows = min_section_rows
         paths_leaves, treedef = jtu.tree_flatten_with_path(template)
         self.treedef = treedef
         self.tail_name = tail
@@ -203,8 +236,13 @@ class TreePacker:
             if tail is not None and tail in names:   # tail always last
                 names.remove(tail)
                 names.append(tail)
+            # Phase 1: lay out every top-level group exactly as the
+            # uncoalesced layout does. Leaf offsets are therefore
+            # invariant under min_section_rows — every leaf and every
+            # group start is ROW_QUANTUM-aligned, so re-grouping below
+            # never moves data.
             off = 0
-            self.order = []
+            atoms = []   # (name, start, length, leaf_indices, is_tail)
             for name in names:
                 start = off
                 for i in groups[name]:
@@ -214,11 +252,43 @@ class TreePacker:
                     off += _slot(i, off)
                 length = round_up(off - start, ROW_QUANTUM)
                 off = start + length
+                atoms.append(("" if name is None else name, start, length,
+                              tuple(groups[name]),
+                              tail is not None and name == tail))
+            # Phase 2: greedily merge adjacent sub-threshold trunk
+            # groups; a trailing remainder folds into the previous trunk
+            # section; the tail group is never merged (eq.-5 consumers
+            # rely on it keeping its own fold in every layout).
+            threshold = min_section_rows * LANE
+            merged: List[List[Any]] = []   # [names, start, length, leaves]
+            open_grp: Optional[List[Any]] = None
+            for name, start, length, leaf_idx, is_tail in atoms:
+                if is_tail:
+                    continue
+                if open_grp is None:
+                    open_grp = [[name], start, length, list(leaf_idx)]
+                else:
+                    open_grp[0].append(name)
+                    open_grp[2] += length
+                    open_grp[3].extend(leaf_idx)
+                if open_grp[2] >= threshold:
+                    merged.append(open_grp)
+                    open_grp = None
+            if open_grp is not None:
+                if merged:
+                    merged[-1][0].extend(open_grp[0])
+                    merged[-1][2] += open_grp[2]
+                    merged[-1][3].extend(open_grp[3])
+                else:
+                    merged.append(open_grp)
+            merged.extend([[a[0]], a[1], a[2], list(a[3])]
+                          for a in atoms if a[4])
+            self.order = []
+            for sec_names, start, length, leaf_list in merged:
                 self.sections.append(
-                    Section("" if name is None else name,
-                            len(self.sections), start, length,
-                            tuple(groups[name])))
-                self.order.extend(groups[name])
+                    Section("+".join(sec_names), len(self.sections),
+                            start, length, tuple(leaf_list)))
+                self.order.extend(leaf_list)
             self.tail_len = (self.sections[-1].length
                              if tail is not None and tail in names else 0)
             self.head_len = off - self.tail_len
@@ -249,7 +319,11 @@ class TreePacker:
         out: Dict[int, Dict[int, List[LeafRun]]] = {}
         for run in self.leaf_runs():
             per = out.setdefault(run.section, {})
-            j0, j1 = run.offset // chunk, (run.offset + run.size - 1) // chunk
+            j0 = run.offset // chunk
+            # a zero-size run still belongs to the chunk at its offset;
+            # (offset + size - 1) // chunk would underflow past j0 and
+            # silently drop the leaf from the chunk-driven view
+            j1 = (run.offset + run.size - 1) // chunk if run.size else j0
             for j in range(j0, j1 + 1):
                 per.setdefault(j, []).append(run)
         return {s: sorted(d.items()) for s, d in out.items()}
@@ -387,20 +461,23 @@ _PACKER_CACHE: Dict[Any, TreePacker] = {}
 
 
 def packer_for(tree, tail: Optional[str] = "final",
-               sections: str = "tail") -> TreePacker:
+               sections: str = "tail",
+               min_section_rows: int = 0) -> TreePacker:
     """Cached TreePacker for ``tree``'s (treedef, shapes, dtypes, tail,
-    sections).
+    sections, min_section_rows).
 
     ``tree`` may hold arrays, tracers or ShapeDtypeStructs — only the
     static structure is read.
     """
     leaves, treedef = jax.tree.flatten(tree)
     key = (treedef, tuple((tuple(l.shape), jnp.dtype(l.dtype).name)
-                          for l in leaves), tail, sections)
+                          for l in leaves), tail, sections,
+           int(min_section_rows))
     packer = _PACKER_CACHE.get(key)
     if packer is None:
         packer = TreePacker(
             treedef.unflatten([jax.ShapeDtypeStruct(tuple(l.shape), l.dtype)
-                               for l in leaves]), tail, sections=sections)
+                               for l in leaves]), tail, sections=sections,
+            min_section_rows=min_section_rows)
         _PACKER_CACHE[key] = packer
     return packer

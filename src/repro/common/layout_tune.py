@@ -1,0 +1,194 @@
+"""Section-layout autotuner for the packed OTA engines (DESIGN.md §3.13).
+
+The chunk-quantized stream spec (§4) makes section layout a performance
+decision with correctness consequences: every sub-chunk section pays a
+full 131072-entry chunk draw and truncates it, so a template with many
+tiny top-level groups (the `1M_x32leaves` bench case, the paper MLP's
+10 flat leaves) can spend ~4x the RNG of a coalesced layout — while the
+Section partition also decides the stream folds, i.e. every channel
+draw. This module makes the choice once, explicitly, and persistable:
+
+* ``tune_layout(template, C, N)`` runs a one-shot calibration bench per
+  model template — a coalescing-threshold sweep over
+  ``sections="toplevel"`` packers, the legacy two-section layout, and
+  the per-leaf engine — and returns the fastest as a ``LayoutChoice``.
+  Results are cached per (template structure, C, N), so a sweep bank or
+  a restarted trainer never re-times a template it has seen.
+* ``apply_layout(fl, choice)`` writes the choice into ``FLConfig``'s
+  static layout fields (``use_pallas_ota`` / ``ota_sections`` /
+  ``min_section_rows``), which `sim.step_with_channel`, the slab-native
+  distributed step and the sweep banks all consume.
+* ``LayoutChoice.to_metadata()`` is what the checkpoint layer persists:
+  section folds — and therefore all channel streams — depend on the
+  layout, so a restore under a different layout would silently change
+  the channel. ``repro.checkpoint.store.restore_checkpoint`` raises
+  with both layouts named on a mismatch.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import FLConfig
+from repro.common.flatpack import packer_for
+
+# threshold sweep, in slab rows (x128 lanes): 0 = uncoalesced; 1024 rows
+# = one full stream chunk (CHUNK_ROWS), the natural upper useful bound —
+# any larger threshold cannot reduce the per-section chunk waste further
+DEFAULT_THRESHOLDS: Tuple[int, ...] = (0, 64, 256, 1024)
+
+
+class LayoutChoice(NamedTuple):
+    """One tuned packed-layout decision — the unit the manifest pins."""
+    engine: str             # "slab" | "perleaf"
+    sections: str           # "toplevel" | "tail" (legacy two-section)
+    min_section_rows: int   # coalescing threshold (slab rows; 0 = off)
+
+    def to_metadata(self) -> Dict[str, Any]:
+        return {"engine": self.engine, "sections": self.sections,
+                "min_section_rows": int(self.min_section_rows)}
+
+    @classmethod
+    def from_metadata(cls, md: Dict[str, Any]) -> "LayoutChoice":
+        return cls(str(md["engine"]), str(md["sections"]),
+                   int(md["min_section_rows"]))
+
+    def describe(self) -> str:
+        if self.engine == "perleaf":
+            return "perleaf"
+        return (f"slab/sections={self.sections}"
+                f"/min_section_rows={self.min_section_rows}")
+
+
+def layout_of(fl: FLConfig) -> LayoutChoice:
+    """The LayoutChoice an FLConfig currently encodes."""
+    return LayoutChoice("slab" if fl.use_pallas_ota else "perleaf",
+                        fl.ota_sections, fl.min_section_rows)
+
+
+def apply_layout(fl: FLConfig, choice: LayoutChoice) -> FLConfig:
+    """FLConfig with the tuned layout written into its static fields."""
+    import dataclasses
+    return dataclasses.replace(
+        fl, use_pallas_ota=(choice.engine == "slab"),
+        ota_sections=choice.sections,
+        min_section_rows=int(choice.min_section_rows))
+
+
+def packer_for_layout(template, choice: LayoutChoice, tail: str = "final"):
+    """The (cached) TreePacker a slab LayoutChoice denotes."""
+    if choice.engine != "slab":
+        raise ValueError(
+            f"layout {choice.describe()} uses the per-leaf engine — it has "
+            "no packer")
+    return packer_for(template, tail=tail, sections=choice.sections,
+                      min_section_rows=choice.min_section_rows)
+
+
+# ---------------------------------------------------------------------------
+# the calibration bench
+# ---------------------------------------------------------------------------
+
+def _time(fn, *args, iters: int) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _grad_tree(template, n_clusters: int, n_clients: int, key):
+    """Synthetic raw (C, N, *shape) f32 gradient tree on the template —
+    exactly what the sim holds after the local phase."""
+    leaves, treedef = jax.tree.flatten(template)
+    out = [jax.random.normal(jax.random.fold_in(key, i),
+                             (n_clusters, n_clients) + tuple(l.shape),
+                             jnp.float32)
+           for i, l in enumerate(leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def calibrate_layout(template, n_clusters: int, n_clients: int,
+                     thresholds: Tuple[int, ...] = DEFAULT_THRESHOLDS,
+                     iters: int = 3,
+                     include_perleaf: bool = True,
+                     ) -> Tuple[LayoutChoice, List[Dict[str, Any]]]:
+    """Time every candidate layout on this template and return
+    (winner, per-candidate report).
+
+    Candidates: ``sections="toplevel"`` at each coalescing threshold,
+    the legacy two-section layout, and (optionally) the per-leaf jnp
+    engine. All candidates run the SAME math from the same raw
+    (C, N, ...) gradients — they differ only in stream layout and
+    engine, which is the whole point: the choice is free to make.
+    Report entries: {"layout", "us", "choice"}.
+    """
+    from repro.core import ota
+    from repro.core.channel import channel_params
+
+    template = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(tuple(l.shape), jnp.float32),
+        template)
+    key = jax.random.PRNGKey(0)
+    g = _grad_tree(template, n_clusters, n_clients, key)
+    p = jax.random.uniform(jax.random.fold_in(key, 99),
+                           (n_clusters, n_clients), jnp.float32, 0.5, 1.5)
+    chan = channel_params(FLConfig(
+        n_clusters=n_clusters, n_clients=n_clients,
+        sigma2=tuple(0.25 + 0.25 * i for i in range(n_clusters))))
+
+    candidates: List[LayoutChoice] = [
+        LayoutChoice("slab", "toplevel", t) for t in dict.fromkeys(thresholds)
+    ] + [LayoutChoice("slab", "tail", 0)]
+    if include_perleaf:
+        candidates.append(LayoutChoice("perleaf", "toplevel", 0))
+
+    report: List[Dict[str, Any]] = []
+    best: Optional[Tuple[float, LayoutChoice]] = None
+    for choice in candidates:
+        if choice.engine == "slab":
+            packer = packer_for_layout(template, choice)
+            fn = jax.jit(lambda k, gg, pp, ch, pk=packer:
+                         ota.ota_aggregate_client_folded(
+                             k, gg, pp, ch, n_clients, pk))
+        else:
+            fn = jax.jit(lambda k, gg, pp, ch: ota.ota_aggregate_tree(
+                k, jax.tree.map(
+                    lambda l: jnp.einsum("cn,cn...->c...", pp, l), gg),
+                ch, n_clients))
+        us = _time(fn, key, g, p, chan, iters=iters) * 1e6
+        report.append({"layout": choice.describe(), "us": us,
+                       "choice": choice})
+        if best is None or us < best[0]:
+            best = (us, choice)
+    return best[1], report
+
+
+_TUNE_CACHE: Dict[Any, LayoutChoice] = {}
+
+
+def tune_layout(template, n_clusters: int, n_clients: int,
+                thresholds: Tuple[int, ...] = DEFAULT_THRESHOLDS,
+                iters: int = 3,
+                include_perleaf: bool = True) -> LayoutChoice:
+    """Cached one-shot calibration: the fastest LayoutChoice for this
+    template at this (C, N) topology. The cache key is the template's
+    static structure — a sweep bank or restarted trainer re-uses the
+    measurement instead of re-timing."""
+    leaves, treedef = jax.tree.flatten(template)
+    key = (treedef,
+           tuple((tuple(l.shape), jnp.dtype(l.dtype).name) for l in leaves),
+           int(n_clusters), int(n_clients), tuple(thresholds),
+           bool(include_perleaf))
+    choice = _TUNE_CACHE.get(key)
+    if choice is None:
+        choice, _ = calibrate_layout(template, n_clusters, n_clients,
+                                     thresholds=thresholds, iters=iters,
+                                     include_perleaf=include_perleaf)
+        _TUNE_CACHE[key] = choice
+    return choice

@@ -38,8 +38,8 @@ import numpy as np
 from repro.common.config import FLConfig, ModelConfig, TrainConfig
 from repro.common.flatpack import check_tree_matches_packer, packer_for
 from repro.core.channel import ChannelParams
-from repro.kernels.ota_channel.ops import _ON_TPU, _ota_channel_impl
-from repro.kernels.slab import flat_to_slab
+from repro.kernels.ota_channel.ops import _ota_channel_impl
+from repro.kernels.slab import flat_to_slab, on_tpu
 from repro.models.model import Model, lm_loss
 from repro.models.params import logical_axes
 from repro.optim.adam import adam_init, adam_update
@@ -268,7 +268,7 @@ def _packed_mask_apply(x_slab: jax.Array, key: jax.Array, sigma2, h_th,
     bits = jax.random.bits(ckey, x_slab.shape, jnp.uint32)
     out, mask = _ota_channel_impl(
         flat_to_slab(x_slab), flat_to_slab(bits), sigma2, h_th, ota_on,
-        interpret=not _ON_TPU)
+        interpret=not on_tpu())
     p = x_slab.shape[-1]
     return out.reshape(p), mask.reshape(p)
 

@@ -47,9 +47,10 @@ from repro.core.ota import (
     _chunked_stream, packed_section_folds, section_gain_key,
     section_noise_key,
 )
-from repro.kernels.ota_channel.ops import _ON_TPU, ota_mask_count_apply, \
+from repro.kernels.ota_channel.ops import ota_mask_count_apply, \
     ota_mask_weight_apply
 from repro.kernels.ota_channel.ref import bits_to_gaussian, bits_to_mask
+from repro.kernels.slab import on_tpu
 
 CLIENT_AXIS = "client"
 
@@ -85,12 +86,17 @@ def packed_omega_key(base_key: jax.Array) -> jax.Array:
     return jax.random.fold_in(base_key, PACKED_OMEGA_FOLD)
 
 
-def omega_packer(template) -> TreePacker:
-    """The slab-native layout of one omega template: multi-section
-    (per layer-stack trunk sections, ω̃ tail last), all-f32."""
+def omega_packer(template, sections: str = "toplevel",
+                 min_section_rows: int = 0) -> TreePacker:
+    """The slab-native layout of one omega template, all-f32. Defaults
+    to multi-section (per layer-stack trunk sections, ω̃ tail last);
+    ``sections``/``min_section_rows`` come from the tuned LayoutChoice
+    (repro.common.layout_tune) so the engine, the simulator and the
+    checkpoint manifest agree on one stream layout."""
     f32 = jax.tree.map(
         lambda l: jax.ShapeDtypeStruct(tuple(l.shape), jnp.float32), template)
-    return packer_for(f32, tail="final", sections="toplevel")
+    return packer_for(f32, tail="final", sections=sections,
+                      min_section_rows=min_section_rows)
 
 
 # ---------------------------------------------------------------------------
@@ -103,7 +109,9 @@ def make_packed_omega_gather(data_axes: Tuple[str, ...],
                              template, axes_list: List[tuple],
                              n_clusters: Optional[int] = None,
                              interpret: Optional[bool] = None,
-                             count_mode: str = "psum"):
+                             count_mode: str = "psum",
+                             sections: str = "toplevel",
+                             min_section_rows: int = 0):
     """Custom-vjp FSDP gather for the ENTIRE shared model {trunk, final}.
 
     forward : per-leaf all-gather of the FSDP shards -> full tree
@@ -140,8 +148,11 @@ def make_packed_omega_gather(data_axes: Tuple[str, ...],
       hardware (TPU, DESIGN.md §3.10).
     """
     assert count_mode in ("psum", "local"), count_mode
-    interp = (not _ON_TPU) if interpret is None else interpret
-    packer = omega_packer(template)
+    # platform resolved NOW (gather build time, post backend selection),
+    # never at module import — see repro.kernels.slab.on_tpu
+    interp = (not on_tpu()) if interpret is None else interpret
+    packer = omega_packer(template, sections=sections,
+                          min_section_rows=min_section_rows)
     folds = packed_section_folds(packer)
     runs = {run.leaf: run for run in packer.leaf_runs()}
     n_leaves = len(packer.slots)

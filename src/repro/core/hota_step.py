@@ -194,9 +194,14 @@ def make_hota_step_parts(
         omega_axes = [a for a in jax.tree.leaves(
             {"final": logical_axes(model.final_specs()),
              "trunk": logical_axes(model.trunk_specs())}, is_leaf=_is_axes)]
+        # section layout from the static FLConfig fields (normally the
+        # tuned LayoutChoice — repro.common.layout_tune): the Section
+        # partition decides the stream folds of every channel draw
         omega_gather, omega_pk = make_packed_omega_gather(
             data_axes, cluster_axes, n_clients, n_shards, compute_dtype,
-            omega_template, omega_axes, n_clusters=n_total_clusters)
+            omega_template, omega_axes, n_clusters=n_total_clusters,
+            sections=fl.ota_sections,
+            min_section_rows=fl.min_section_rows)
         # local (per-device) slab length: FSDP leaves contribute their
         # shard, replicated leaves their full size — the SlabAdamState
         # moments layout (repro.optim.adam)

@@ -50,10 +50,10 @@ from repro.common.flatpack import TreePacker, check_tree_matches_packer
 from repro.core.channel import ChannelParams
 from repro.kernels.ota_channel.kernel import CHUNK_ROWS
 from repro.kernels.ota_channel.ops import (
-    _ON_TPU, _ota_aggregate_fused_impl, ota_client_fold_apply,
+    _ota_aggregate_fused_impl, ota_client_fold_apply,
 )
 from repro.kernels.ota_channel.ref import bits_to_mask
-from repro.kernels.slab import LANE
+from repro.kernels.slab import LANE, on_tpu
 
 
 # --------------------------------------------------------------------------
@@ -374,7 +374,7 @@ def ota_aggregate_packed(
     ghat = _ota_aggregate_fused_impl(
         wg, section_keys, tuple(sec.length for sec in packer.sections),
         chan.sigma2, chan.h_threshold, chan.noise_std, chan.ota_on,
-        n_clients, interpret=not _ON_TPU, bits=bits, nbits=nbits)
+        n_clients, interpret=not on_tpu(), bits=bits, nbits=nbits)
     return packer.unpack(ghat)
 
 
@@ -427,21 +427,46 @@ def ota_aggregate_client_folded(
         out[run.leaf] = ota_client_fold_apply(
             leaves[run.leaf], p, b, nb, chan.sigma2, chan.h_threshold,
             chan.noise_std, chan.ota_on, n_clients,
-            interpret=not _ON_TPU)
+            interpret=not on_tpu())
     return packer.treedef.unflatten(out)
 
 
 def final_layer_masks_packed(key: jax.Array, chan: ChannelParams,
                              packer: TreePacker):
-    """Masks M^(l) on the last-shared-layer params ω̃ (eq. 5-7) as the
-    tail slice of the packed round draw — bit-identical to the masks
-    ``ota_aggregate_packed`` applies to the same entries."""
+    """Masks M^(l) on the last-shared-layer params ω̃ (eq. 5-7), drawn
+    from the tail section's stream — bit-identical to the masks
+    ``ota_aggregate_packed`` applies to the same entries.
+
+    Consumes the stream per leaf through the SAME ``leaf_runs`` slices
+    the zero-copy engines walk (the tail section is never coalesced, so
+    its fold and runs are layout-stable): each mask leaf is a static
+    slice of the tail draw reshaped in place — the full (C, tail_len)
+    slab is never unpacked. ``bits_to_mask`` is elementwise, so slicing
+    before masking is bit-identical to masking the whole tail.
+    """
+    if packer.tail_name is None or not packer.tail_len:
+        raise ValueError(
+            "final_layer_masks_packed needs a packer with a non-empty "
+            f"tail section (tail={packer.tail_name!r}) — the eq.-5 masks "
+            "are defined on the last-shared-layer params ω̃")
     n_clusters = chan.sigma2.shape[0]
+    tail_sec = next(s for s in packer.sections
+                    if s.name == packer.tail_name)
     bits = _section_bits(key, PACKED_TAIL_FOLD, n_clusters,
-                         packer.tail_len)                       # (C, tail)
+                         tail_sec.length)                       # (C, tail)
     sig = chan.sigma2.reshape(n_clusters, 1)
-    masks = bits_to_mask(bits, sig, chan.h_threshold, chan.ota_on)
-    return packer.unpack_tail(masks)                            # (C, ...) leaves
+    sub_leaves = []
+    for run in packer.leaf_runs():
+        if run.section != tail_sec.index:
+            continue
+        b = jax.lax.slice(bits, (0, run.offset),
+                          (n_clusters, run.offset + run.size))
+        m = bits_to_mask(b, sig, chan.h_threshold, chan.ota_on)
+        sub_leaves.append(
+            m.reshape((n_clusters,) + packer.slots[run.leaf].shape))
+    full = packer.treedef.unflatten(list(range(len(packer.slots))))
+    _, tail_def = jax.tree_util.tree_flatten(full[packer.tail_name])
+    return jax.tree_util.tree_unflatten(tail_def, sub_leaves)
 
 
 def final_layer_masks(key: jax.Array, final_tree, chan: ChannelParams,

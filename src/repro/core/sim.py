@@ -202,8 +202,13 @@ class HotaSim:
         # ω̃ tail) and the channel consumes every RAW (C, N, ·) gradient
         # leaf in place — no client-weighted tree, no (C, P) pack copy.
         # fl.use_pallas_ota is static config — the per-leaf jnp path stays
-        # available as the property-test oracle.
-        packer = (packer_for(state.omega, tail="final", sections="toplevel")
+        # available as the property-test oracle. The section layout
+        # (fl.ota_sections / fl.min_section_rows — normally written by
+        # repro.common.layout_tune.apply_layout) decides the stream
+        # folds, so it is static and checkpoint-pinned (DESIGN.md §3.13).
+        packer = (packer_for(state.omega, tail="final",
+                             sections=fl.ota_sections,
+                             min_section_rows=fl.min_section_rows)
                   if fl.use_pallas_ota else None)
 
         # --- Alg. 2: FGN_Server per cluster -------------------------------

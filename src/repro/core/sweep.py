@@ -112,16 +112,36 @@ class _BankCheckpoint:
     def _state_shardings(self):
         return None          # default placement (single-device banks)
 
+    def _bank_fl(self):
+        """The bank's FLConfig (sim banks hold it on the sim)."""
+        fl = getattr(self, "fl", None)
+        if fl is None and getattr(self, "sim", None) is not None:
+            fl = self.sim.fl
+        return fl
+
+    def _layout_metadata(self):
+        """The bank's packed-layout pin (DESIGN.md §3.13): section folds
+        — and so every channel stream — depend on the layout, so it is
+        saved with, and checked against, every bank checkpoint."""
+        from repro.common.layout_tune import layout_of
+        fl = self._bank_fl()
+        return None if fl is None else layout_of(fl).to_metadata()
+
     def save(self, ckpt_dir: str, step: int, states) -> str:
         from repro.checkpoint.store import save_checkpoint
-        return save_checkpoint(ckpt_dir, step, states,
-                               {"kind": type(self).__name__,
-                                "n_scenarios": self.n_scenarios})
+        md = {"kind": type(self).__name__,
+              "n_scenarios": self.n_scenarios}
+        layout = self._layout_metadata()
+        if layout is not None:
+            md["layout"] = layout
+        return save_checkpoint(ckpt_dir, step, states, md)
 
     def restore(self, ckpt_dir: str, step: int):
         """Restore a state saved by ``save`` into THIS bank's layout —
         shape-checked against the bank's abstract state and re-placed on
-        its shardings, so a restored bank continues bit-identically."""
+        its shardings, so a restored bank continues bit-identically.
+        Raises if the checkpoint pins a different scenario count or a
+        different packed layout (the streams would silently change)."""
         from repro.checkpoint.store import checkpoint_metadata, \
             restore_checkpoint
         s = checkpoint_metadata(ckpt_dir, step).get("n_scenarios")
@@ -131,7 +151,8 @@ class _BankCheckpoint:
                 f"bank but this bank has S={self.n_scenarios} — a bank "
                 f"only restores states with a matching scenario axis")
         return restore_checkpoint(ckpt_dir, step, self._abstract_states(),
-                                  shardings=self._state_shardings())
+                                  shardings=self._state_shardings(),
+                                  expected_layout=self._layout_metadata())
 
 
 class ScenarioBank(_BankCheckpoint):

@@ -15,9 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import flash_attention_ref
-from repro.kernels.slab import LANE, pad_axis
-
-_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+from repro.kernels.slab import LANE, on_tpu, pad_axis
 
 
 @partial(jax.jit, static_argnames=("window", "block_q", "block_kv",
@@ -26,9 +24,14 @@ def flash_attention(
     q: jax.Array, k: jax.Array, v: jax.Array,
     *, pos_q=None, pos_kv=None, window: Optional[int] = None,
     block_q: int = 512, block_kv: int = 512,
-    interpret: bool = not _ON_TPU,
+    interpret: bool = None,
 ) -> jax.Array:
-    """q: (B, Sq, H, D); k, v: (B, Skv, KV, D). Causal self-attention."""
+    """q: (B, Sq, H, D); k, v: (B, Skv, KV, D). Causal self-attention.
+
+    ``interpret=None`` resolves the platform at trace time (compiled on
+    TPU, interpret elsewhere)."""
+    if interpret is None:
+        interpret = not on_tpu()
     b, sq, h, d = q.shape
     qt = pad_axis(jnp.transpose(q, (0, 2, 1, 3)), 3, LANE)
     kt = pad_axis(jnp.transpose(k, (0, 2, 1, 3)), 3, LANE)

@@ -9,14 +9,12 @@ from repro.kernels.masked_gradnorm.kernel import (
     COL_BLOCK, TASK_BLOCK, masked_gradnorm_pallas,
 )
 from repro.kernels.masked_gradnorm.ref import masked_gradnorm_ref
-from repro.kernels.slab import LANE, pad_axis
-
-_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+from repro.kernels.slab import LANE, on_tpu, pad_axis
 
 
 @partial(jax.jit, static_argnames=("interpret", "impl"))
 def masked_gradnorm(g: jax.Array, mask: jax.Array,
-                    interpret: bool = not _ON_TPU,
+                    interpret: bool = None,
                     impl: str = None) -> jax.Array:
     """g: (T, P); mask: (P,) — returns (T,) masked L2 norms (fp32).
 
@@ -25,9 +23,13 @@ def masked_gradnorm(g: jax.Array, mask: jax.Array,
     slower than its own jnp oracle on this CPU (BENCH_kernels.json:
     28258 vs 1009 µs at 8x64k) while computing identical values, so
     off-TPU callers (the simulator's per-cluster eq.-6 norms) take the
-    reference. Tests force ``impl="pallas"`` to validate the kernel."""
+    reference. Tests force ``impl="pallas"`` to validate the kernel.
+    Platform resolves at trace time (``repro.kernels.slab.on_tpu``), not
+    at import — late backend selection dispatches correctly."""
+    if interpret is None:
+        interpret = not on_tpu()
     if impl is None:
-        impl = "pallas" if _ON_TPU else "jnp"
+        impl = "pallas" if on_tpu() else "jnp"
     if impl == "jnp":
         return masked_gradnorm_ref(g, mask)
     t, p = g.shape

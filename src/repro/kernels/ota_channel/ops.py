@@ -29,9 +29,9 @@ from repro.kernels.ota_channel.ref import (
     bits_to_mask, ota_aggregate_client_ref, ota_aggregate_slab_ref,
     ota_channel_ref,
 )
-from repro.kernels.slab import LANE, ROW_QUANTUM, flat_to_slab, pad_to_lanes
-
-_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+from repro.kernels.slab import (
+    LANE, ROW_QUANTUM, flat_to_slab, on_tpu, pad_to_lanes,
+)
 
 
 def _ota_channel_impl(slab, bits, sigma2, h_th, ota_on, interpret: bool):
@@ -47,12 +47,16 @@ def _ota_channel_impl(slab, bits, sigma2, h_th, ota_on, interpret: bool):
 
 @partial(jax.jit, static_argnames=("interpret",))
 def ota_channel(x: jax.Array, key: jax.Array, sigma2, h_th,
-                ota_on=1.0, interpret: bool = not _ON_TPU):
+                ota_on=1.0, interpret: bool = None):
     """Fused channel mask+apply. Returns (masked_x, mask) shaped like x.
 
     All channel knobs (σ², H_th, the ota_on gate) are traced — one
-    compiled kernel serves every scenario.
+    compiled kernel serves every scenario. ``interpret=None`` resolves
+    the platform at trace time (compiled on TPU, interpret elsewhere) —
+    never baked at import, so late backend selection dispatches right.
     """
+    if interpret is None:
+        interpret = not on_tpu()
     slab, n = pad_to_lanes(x)
     bits = jax.random.bits(key, slab.shape, jnp.uint32)
     out, mask = _ota_channel_impl(slab, bits, sigma2, h_th, ota_on,
@@ -64,7 +68,7 @@ def ota_channel(x: jax.Array, key: jax.Array, sigma2, h_th,
 
 def ota_mask_weight_apply(x: jax.Array, bits: jax.Array, sigma2, h_th,
                           ota_on, weight,
-                          interpret: bool = not _ON_TPU,
+                          interpret: bool = None,
                           impl: str = None):
     """Zero-copy fused mask + weighted apply for ONE leaf (DESIGN.md §3.10).
 
@@ -86,8 +90,10 @@ def ota_mask_weight_apply(x: jax.Array, bits: jax.Array, sigma2, h_th,
     the adjacent psums. Tests force ``impl="pallas"`` + interpret to
     validate the kernel itself.
     """
+    if interpret is None:
+        interpret = not on_tpu()
     if impl is None:
-        impl = "pallas" if _ON_TPU else "jnp"
+        impl = "pallas" if on_tpu() else "jnp"
     n = int(x.size)
     assert bits.shape == (n,), (bits.shape, n)
     flat = x.reshape(-1).astype(jnp.float32)
@@ -124,7 +130,7 @@ def ota_mask_weight_apply(x: jax.Array, bits: jax.Array, sigma2, h_th,
 def ota_client_fold_apply(g: jax.Array, p: jax.Array, bits: jax.Array,
                           nbits: jax.Array, sigma2, h_th, noise_std, ota_on,
                           n_clients: int,
-                          interpret: bool = not _ON_TPU,
+                          interpret: bool = None,
                           impl: str = None):
     """Zero-copy client-folded OTA aggregation for ONE leaf (DESIGN.md
     §3.12): ĝ = guard(Σ_l M_l ∘ (Σ_n p[l,n]·g[l,n]) + z), eqs. 3 + 8-10
@@ -146,8 +152,10 @@ def ota_client_fold_apply(g: jax.Array, p: jax.Array, bits: jax.Array,
     weight fold with the masked sum. Tests force ``impl="pallas"`` +
     interpret to validate the kernel itself.
     """
+    if interpret is None:
+        interpret = not on_tpu()
     if impl is None:
-        impl = "pallas" if _ON_TPU else "jnp"
+        impl = "pallas" if on_tpu() else "jnp"
     n_clusters, n_cl = g.shape[:2]
     assert n_cl == n_clients, (g.shape, n_clients)
     shape = g.shape[2:]
@@ -193,7 +201,7 @@ def ota_client_fold_apply(g: jax.Array, p: jax.Array, bits: jax.Array,
 
 def ota_mask_count_apply(x: jax.Array, bits_all: jax.Array, me, sigma2_all,
                          h_th, ota_on, weight,
-                         interpret: bool = not _ON_TPU,
+                         interpret: bool = None,
                          impl: str = None):
     """Slab-native local channel work for ONE leaf (DESIGN.md §3.10):
     returns (M_me ∘ (w·x), Σ_l M_l) shaped like ``x``, both f32.
@@ -210,8 +218,10 @@ def ota_mask_count_apply(x: jax.Array, bits_all: jax.Array, me, sigma2_all,
     identical values — pinned in tests/test_slab_native.py — and fuses
     with the adjacent psums).
     """
+    if interpret is None:
+        interpret = not on_tpu()
     if impl is None:
-        impl = "pallas" if _ON_TPU else "jnp"
+        impl = "pallas" if on_tpu() else "jnp"
     n = int(x.size)
     n_clusters = bits_all.shape[0]
     assert bits_all.shape == (n_clusters, n), (bits_all.shape, n)
@@ -339,14 +349,17 @@ def ota_aggregate(
     sigma2: jax.Array,       # (C,) traced per-cluster variance
     h_th, noise_std, ota_on,
     n_clients: int,
-    interpret: bool = not _ON_TPU,
+    interpret: bool = None,
 ) -> jax.Array:
     """Whole-model OTA aggregation (eqs. 8-10) in one fused kernel pass.
 
     Returns the (P,) PS estimate ĝ. Bit streams are the caller's (the
     packed key schedule lives in ``repro.core.ota``), so the jnp oracle
     ``ota_aggregate_reference`` consumes the identical stream.
+    ``interpret=None`` resolves the platform at trace time.
     """
+    if interpret is None:
+        interpret = not on_tpu()
     return _ota_aggregate_impl(wg, bits, nbits, sigma2, h_th, noise_std,
                                ota_on, n_clients, interpret)
 

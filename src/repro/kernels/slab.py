@@ -17,6 +17,19 @@ SUBLANE = 8           # f32 sublane packing — row-count multiple
 ROW_QUANTUM = LANE * SUBLANE   # smallest lane-aligned flat section (1024)
 
 
+def on_tpu() -> bool:
+    """Whether the default backend is TPU, resolved NOW — not at import.
+
+    Kernel wrappers must call this at trace time (inside the jit'd
+    function or when resolving a ``None`` default), never bake it into a
+    module-level constant: backend selection via ``jax.config`` /
+    ``JAX_PLATFORMS`` after import would otherwise silently pin TPU runs
+    to interpret-mode kernels (the 28x-slow class of bug —
+    BENCH_kernels.json's masked_gradnorm interpret row).
+    """
+    return jax.default_backend() == "tpu"
+
+
 def round_up(n: int, m: int) -> int:
     """Smallest multiple of ``m`` that is >= ``n`` (0 stays 0)."""
     return -(-n // m) * m

@@ -73,12 +73,12 @@ def test_masked_gradnorm_dispatch_off_tpu():
     interpret-mode pallas_call is ~28x slower for identical values —
     BENCH_kernels.json); both impls agree and the override still forces
     the kernel."""
-    from repro.kernels.masked_gradnorm.ops import _ON_TPU
+    from repro.kernels.slab import on_tpu
     g = jax.random.normal(jax.random.PRNGKey(3), (6, 2000))
     m = jax.random.uniform(jax.random.PRNGKey(4), (2000,)) > 0.4
     default = masked_gradnorm(g, m)
     ref = masked_gradnorm_reference(g, m)
-    if not _ON_TPU:   # default == jnp dispatch: bit-identical to the ref
+    if not on_tpu():  # default == jnp dispatch: bit-identical to the ref
         np.testing.assert_array_equal(np.asarray(default), np.asarray(ref))
     forced = masked_gradnorm(g, m, impl="pallas")
     np.testing.assert_allclose(np.asarray(forced), np.asarray(ref),
