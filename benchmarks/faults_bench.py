@@ -1,0 +1,82 @@
+"""Fault-injection benchmark (DESIGN.md §3.14): round throughput vs
+dropout rate on the slab-native sim engine.
+
+Two claims measured:
+
+* the fault path's overhead at zero rates — the participation draw, the
+  |M∩P| estimator generalization and the guard/freeze select ride the
+  same fused round, so enabling the gate should cost a few percent, not
+  a re-formulation;
+* throughput is FLAT in the dropout rate: rates are traced values
+  compared against shared uniforms inside one compiled round, so a
+  faultier channel costs the same wall time (the work is masked, not
+  skipped at the host).
+
+Rows time ``HotaSim.step`` per round (CPU wall; relative numbers are the
+point) for the legacy engine and the faulted engine across dropout
+rates, plus one full-blackout row where every round degrades to the
+identity step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _block(x):
+    jax.block_until_ready(jax.tree.leaves(x)[0])
+
+
+def _time_rounds(sim, state, x, y, faults, rounds):
+    state, m = sim.step(state, x, y, jax.random.PRNGKey(1), faults=faults)
+    _block(state)                       # compile + first round
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        state, m = sim.step(state, x, y, jax.random.PRNGKey(2 + r),
+                            faults=faults)
+    _block(state)
+    per_round = (time.perf_counter() - t0) / rounds
+    return per_round, m
+
+
+def fault_rows(smoke: bool = False):
+    from repro.common.config import FLConfig, ModelConfig, TrainConfig
+    from repro.core.channel import fault_params
+    from repro.core.sim import HotaSim
+    from repro.models.model import build_model
+
+    C, N, B = (2, 2, 4) if smoke else (4, 4, 8)
+    rounds = 3 if smoke else 10
+    model = build_model(ModelConfig(family="mlp"))
+    tcfg = TrainConfig(lr=3e-4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (C, N, B, 256))
+    y = jax.random.randint(jax.random.PRNGKey(2), (C, N, B), 0, 4)
+
+    rows = []
+
+    fl0 = FLConfig(n_clusters=C, n_clients=N, noise_std=0.1)
+    sim0 = HotaSim(model, fl0, tcfg, [4] * C)
+    per, _ = _time_rounds(sim0, sim0.init(jax.random.PRNGKey(0)), x, y,
+                          None, rounds)
+    rows.append(("faults_off_baseline", per * 1e6,
+                 f"rounds_per_s={1.0 / per:.1f}"))
+
+    fl = dataclasses.replace(fl0, faults=True)
+    sim = HotaSim(model, fl, tcfg, [4] * C)
+    st0 = sim.init(jax.random.PRNGKey(0))
+    for rate in (0.0, 0.25, 0.5):
+        fp = fault_params(dataclasses.replace(fl, dropout_rate=rate))
+        per, m = _time_rounds(sim, st0, x, y, fp, rounds)
+        rows.append((f"faults_dropout_{rate:g}", per * 1e6,
+                     f"rounds_per_s={1.0 / per:.1f},"
+                     f"participants={float(m['n_participants']):g},"
+                     f"skipped={float(m['skipped']):g}"))
+    fp = fault_params(dataclasses.replace(fl, blackout_rate=1.0))
+    per, m = _time_rounds(sim, st0, x, y, fp, rounds)
+    rows.append(("faults_blackout_identity", per * 1e6,
+                 f"rounds_per_s={1.0 / per:.1f},"
+                 f"skipped={float(m['skipped']):g}"))
+    return rows

@@ -51,6 +51,10 @@ def main() -> None:
                          "calibration sweep of DESIGN.md §3.13 per bench "
                          "template); with --json merges into "
                          "BENCH_kernels.json by row name")
+    ap.add_argument("--faults", action="store_true",
+                    help="fault-injection rows only (round throughput vs "
+                         "dropout rate on the slab sim engine, DESIGN.md "
+                         "§3.14); with --json writes BENCH_faults.json")
     ap.add_argument("--dist", action="store_true",
                     help="distributed-step rows only (slab-native vs "
                          "per-leaf engines + the 2-D scenario × client "
@@ -96,6 +100,22 @@ def main() -> None:
                 json.dump({"rows": merged}, f, indent=1)
         print("name,us_per_call,derived")
         for name, us, derived in trows:
+            print(f"{name},{us:.1f},{derived}")
+        return
+
+    if args.faults:
+        # --- fault injection: rounds/sec vs dropout rate (§3.14) ---------
+        from benchmarks.faults_bench import fault_rows
+        frows = fault_rows(smoke=args.smoke)
+        if args.json:
+            path = ("BENCH_faults.json" if args.json == "BENCH_kernels.json"
+                    else args.json)
+            with open(path, "w") as f:
+                json.dump({"rows": [
+                    {"name": n, "us_per_call": round(us, 1), "derived": d}
+                    for n, us, d in frows]}, f, indent=1)
+        print("name,us_per_call,derived")
+        for name, us, derived in frows:
             print(f"{name},{us:.1f},{derived}")
         return
 

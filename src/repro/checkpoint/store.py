@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import os
 import re
+import shutil
 from typing import Any, Optional, Tuple
 
 import jax
@@ -34,8 +35,17 @@ def _leaf_paths(tree) -> Tuple[Any, list]:
 
 
 def save_checkpoint(ckpt_dir: str, step: int, tree, metadata: Optional[dict] = None) -> str:
+    """Atomically write ``<dir>/step_<k>``: payloads land in a temp dir
+    (``.tmp-step_<k>``, invisible to ``latest_step``'s name filter), the
+    manifest is written LAST, then one ``os.replace`` publishes the dir.
+    A crash mid-save leaves either the previous complete checkpoint or a
+    manifest-less temp/partial dir — both skipped on restore, so the
+    RoundGuard recovery path (DESIGN.md §3.14) never reads torn state."""
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    os.makedirs(path, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp-step_{step:08d}")
+    if os.path.isdir(tmp):          # stale temp from a crashed save
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
     treedef, leaves = _leaf_paths(tree)
     manifest = {
         "treedef": str(treedef),
@@ -46,9 +56,12 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, metadata: Optional[dict] = N
         "shapes": [list(np.asarray(l).shape) for l in leaves],
     }
     for i, leaf in enumerate(leaves):
-        np.save(os.path.join(path, f"arr_{i}.npy"), np.asarray(leaf))
-    with open(os.path.join(path, "manifest.msgpack"), "wb") as f:
+        np.save(os.path.join(tmp, f"arr_{i}.npy"), np.asarray(leaf))
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
         f.write(msgpack.packb(manifest))
+    if os.path.isdir(path):         # re-save of the same step
+        shutil.rmtree(path)
+    os.replace(tmp, path)
     return path
 
 
@@ -121,11 +134,16 @@ def checkpoint_metadata(ckpt_dir: str, step: int) -> dict:
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """The newest COMPLETE checkpoint step (None when there is none).
+    A dir only counts when its manifest exists — the manifest is written
+    last and the dir published by ``os.replace``, so anything without one
+    is a torn pre-atomic-era partial and must not be restored."""
     if not os.path.isdir(ckpt_dir):
         return None
     steps = []
     for name in os.listdir(ckpt_dir):
         m = re.fullmatch(r"step_(\d+)", name)
-        if m:
+        if m and os.path.isfile(
+                os.path.join(ckpt_dir, name, "manifest.msgpack")):
             steps.append(int(m.group(1)))
     return max(steps) if steps else None

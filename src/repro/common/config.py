@@ -146,6 +146,17 @@ class FLConfig:
     ota_sections: str = "toplevel"    # "toplevel" | "tail"
     min_section_rows: int = 0         # coalescing threshold (slab rows)
     microbatches: int = 1             # gradient accumulation count
+    # Fault injection (DESIGN.md §3.14). ``faults`` is the one static gate:
+    # False keeps the legacy trace bit-exact (no participation draws, no
+    # stale-model state in SimState); True threads the traced FaultParams
+    # knobs below through the round. The rates themselves are traced
+    # (FaultParams) so fault scenarios sweep without retracing.
+    faults: bool = False              # static: enable fault plumbing
+    dropout_rate: float = 0.0         # per-client drop probability
+    blackout_rate: float = 0.0        # per-cluster blackout probability
+    straggler_rate: float = 0.0       # per-client straggler probability
+    staleness_rounds: int = 1         # straggler staleness depth τ (rounds)
+    spike_norm: float = float("inf")  # guard: skip round if ‖ĝ‖ exceeds
 
     def cluster_sigma2(self, cluster: int) -> float:
         if not self.sigma2:

@@ -71,3 +71,40 @@ def stack_channel_params(chans: Sequence[ChannelParams]) -> ChannelParams:
     if not chans:
         raise ValueError("empty scenario list")
     return jax.tree.map(lambda *xs: jnp.stack(xs), *chans)
+
+
+class FaultParams(NamedTuple):
+    """Traced fault-injection knobs — sibling of ``ChannelParams``.
+
+    Per-slot participation draws come from the reserved ``PART_FOLD``
+    stream domain (DESIGN.md §4), so the draw for slot (l, n) depends only
+    on the round key and the slot — resampling the *rates* below never
+    perturbs channel masks, noise, or any other stream (CRN across fault
+    scenarios), and the knobs vmap through the scenario banks exactly like
+    channel knobs. Semantics in DESIGN.md §3.14.
+    """
+    dropout: jax.Array     # () per-client drop probability
+    blackout: jax.Array    # () per-cluster blackout probability
+    straggler: jax.Array   # () per-client straggler probability
+    staleness: jax.Array   # () straggler staleness depth τ (rounds, float)
+    spike_norm: jax.Array  # () skip-round guard threshold on ‖ĝ‖ (inf = off)
+    faults_on: jax.Array   # () 1.0 = inject faults, 0.0 = full participation
+
+
+def fault_params(fl: FLConfig) -> FaultParams:
+    """Materialize the traced fault knobs of a static ``FLConfig``."""
+    return FaultParams(
+        dropout=jnp.asarray(fl.dropout_rate, jnp.float32),
+        blackout=jnp.asarray(fl.blackout_rate, jnp.float32),
+        straggler=jnp.asarray(fl.straggler_rate, jnp.float32),
+        staleness=jnp.asarray(float(fl.staleness_rounds), jnp.float32),
+        spike_norm=jnp.asarray(fl.spike_norm, jnp.float32),
+        faults_on=jnp.asarray(1.0 if fl.faults else 0.0, jnp.float32),
+    )
+
+
+def stack_fault_params(faults: Sequence[FaultParams]) -> FaultParams:
+    """Stack S fault scenarios into one bank with leading (S,) per leaf."""
+    if not faults:
+        raise ValueError("empty fault-scenario list")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *faults)

@@ -88,6 +88,10 @@ class OTACtx(NamedTuple):
     h_th: jax.Array          # threshold H_th
     noise_std: jax.Array     # AWGN std
     ota_on: jax.Array        # 1.0 = fading MAC; 0.0 = error-free baseline
+    # Partial participation (DESIGN.md §3.14). None = full participation
+    # (an empty pytree node — the custom_vjp residual tree stays legal).
+    live: Optional[jax.Array] = None    # (C,) cluster participation flags
+    n_eff: Optional[jax.Array] = None   # () traced effective N of eq. 10
 
 
 def fold_tags(key: jax.Array, klass: str, tags, leaf_idx: int) -> jax.Array:

@@ -211,6 +211,15 @@ def make_packed_omega_gather(data_axes: Tuple[str, ...],
         reg_idx = [i for i in range(n_leaves) if fsdp_axes[i] >= 0]
         rep_idx = [i for i in range(n_leaves) if fsdp_axes[i] < 0]
 
+        # Partial participation (DESIGN.md §3.14): a dead cluster (ctx.live
+        # = 0) contributes neither data nor mask count to the MAC psums —
+        # its local y/mask are zeroed pre-collective (psum mode) or masked
+        # inside the fused count kernel (local mode) — and the traced
+        # N_eff replaces the static N denominator of eq. 10.
+        live_me = None if ctx.live is None else ctx.live[cidx]
+        denom = (jnp.float32(n_clients) if ctx.n_eff is None
+                 else jnp.maximum(ctx.n_eff, 1.0))
+
         if count_mode == "local":
             # TPU-oriented variant: draw EVERY cluster's stream and count
             # |M| locally via the fused kernel — zero mask collectives at
@@ -227,7 +236,8 @@ def make_packed_omega_gather(data_axes: Tuple[str, ...],
                                   (n_cl, run.offset + run.size))
                 o, c = ota_mask_count_apply(
                     leaves[i].astype(jnp.float32), b, cidx, ctx.sigma2,
-                    ctx.h_th, ctx.ota_on, ctx.p_weight, interpret=interp)
+                    ctx.h_th, ctx.ota_on, ctx.p_weight,
+                    live_all=ctx.live, interpret=interp)
                 outs.append(o)
                 cnts.append(c)
             y_reg = [jax.lax.psum_scatter(outs[i], CLIENT_AXIS,
@@ -266,6 +276,8 @@ def make_packed_omega_gather(data_axes: Tuple[str, ...],
                     o, m = ota_mask_weight_apply(
                         x_reg, b, sig_me, ctx.h_th, ctx.ota_on, 1.0,
                         interpret=interp)
+                    if live_me is not None:
+                        o, m = o * live_me, m * live_me
                     y_reg.append(o)
                     mask_reg.append(m)
                 else:
@@ -275,6 +287,8 @@ def make_packed_omega_gather(data_axes: Tuple[str, ...],
                     o, m = ota_mask_weight_apply(
                         g32, b, sig_me, ctx.h_th, ctx.ota_on,
                         ctx.p_weight, interpret=interp)
+                    if live_me is not None:
+                        o, m = o * live_me, m * live_me
                     y_reg.append(jax.lax.psum_scatter(
                         o, CLIENT_AXIS, scatter_dimension=ax, tiled=True))
                     mask_reg.append(_region(m, i))
@@ -286,6 +300,8 @@ def make_packed_omega_gather(data_axes: Tuple[str, ...],
                 o, m = ota_mask_weight_apply(
                     leaves[i].astype(jnp.float32), b, sig_me, ctx.h_th,
                     ctx.ota_on, ctx.p_weight, interpret=interp)
+                if live_me is not None:
+                    o, m = o * live_me, m * live_me
                 rep_out.append(o)
                 rep_mask.append(m)
             if reg_idx:
@@ -334,7 +350,7 @@ def make_packed_omega_gather(data_axes: Tuple[str, ...],
                 z = z * ctx.noise_std * ctx.ota_on
                 ghat = jnp.where(
                     cnt[i] > 0,
-                    (y[i] + z) / (jnp.maximum(cnt[i], 1.0) * n_clients),
+                    (y[i] + z) / (jnp.maximum(cnt[i], 1.0) * denom),
                     0.0)
                 sz = ghat.shape[ax] // n_sub
                 ghat = jax.lax.dynamic_slice_in_dim(ghat, sub_idx * sz, sz,
@@ -346,7 +362,7 @@ def make_packed_omega_gather(data_axes: Tuple[str, ...],
                      * ctx.noise_std * ctx.ota_on)
                 ghat = jnp.where(
                     cnt[i] > 0,
-                    (y[i] + z) / (jnp.maximum(cnt[i], 1.0) * n_clients),
+                    (y[i] + z) / (jnp.maximum(cnt[i], 1.0) * denom),
                     0.0)
             grads.append(ghat)
         return (packer.treedef.unflatten(grads),
@@ -396,11 +412,14 @@ def sectioned_final_norm(g_final, slab_key: jax.Array,
 
 def packed_omega_aggregate_ref(g_tree, slab_key: jax.Array,
                                chan: ChannelParams, n_clients: int,
-                               packer: TreePacker):
+                               packer: TreePacker,
+                               live=None, n_eff=None):
     """Single-process oracle of the slab backward for ONE weighted-grad
     tree with leading (C,) cluster axes on every leaf: same section
     streams, same mask law, same guarded estimate — plain jnp, so the
-    forced-multi-device slab step can be pinned to it on shared keys."""
+    forced-multi-device slab step can be pinned to it on shared keys.
+    ``live``/``n_eff`` mirror the backward's partial-participation flow
+    (DESIGN.md §3.14); None is the full-participation identity."""
     folds = packed_section_folds(packer)
     n_clusters = int(chan.sigma2.shape[0])
     leaves = packer.treedef.flatten_up_to(g_tree)
@@ -411,6 +430,8 @@ def packed_omega_aggregate_ref(g_tree, slab_key: jax.Array,
         for s in packer.sections]
     nbits = [_chunked_stream(section_noise_key(slab_key, folds[s.index]),
                              s.length) for s in packer.sections]
+    denom = (jnp.float32(n_clients) if n_eff is None
+             else jnp.maximum(jnp.asarray(n_eff, jnp.float32), 1.0))
     out = []
     for i in range(len(leaves)):
         run = runs[i]
@@ -418,6 +439,10 @@ def packed_omega_aggregate_ref(g_tree, slab_key: jax.Array,
                           (n_clusters, run.offset + run.size))
         sig = chan.sigma2.reshape((n_clusters,) + (1,))
         masks = bits_to_mask(b, sig, chan.h_threshold, chan.ota_on)
+        if live is not None:
+            masks = jnp.logical_and(
+                masks, jnp.asarray(live, jnp.float32)
+                .reshape(n_clusters, 1) > 0.5)
         wg = leaves[i].astype(jnp.float32).reshape(n_clusters, -1)
         y = jnp.sum(jnp.where(masks, wg, 0.0), axis=0)
         nb = jax.lax.slice(nbits[run.section], (run.offset,),
@@ -425,6 +450,6 @@ def packed_omega_aggregate_ref(g_tree, slab_key: jax.Array,
         z = bits_to_gaussian(nb, 1.0) * chan.noise_std * chan.ota_on
         cnt = jnp.sum(masks.astype(jnp.float32), axis=0)
         ghat = jnp.where(cnt > 0,
-                         (y + z) / (jnp.maximum(cnt, 1.0) * n_clients), 0.0)
+                         (y + z) / (jnp.maximum(cnt, 1.0) * denom), 0.0)
         out.append(ghat.reshape(leaves[i].shape[1:]))
     return packer.treedef.unflatten(out)

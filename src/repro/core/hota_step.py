@@ -61,7 +61,11 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.common.config import FLConfig, TrainConfig
-from repro.core.channel import ChannelParams, channel_params, cluster_channel
+from repro.core import ota
+from repro.core.channel import (
+    ChannelParams, FaultParams, channel_params, cluster_channel,
+    fault_params,
+)
 from repro.core.hota import (
     OTACtx, build_axes_registry, cluster_index, fold_tags,
     full_transmission_mask, make_ota_gather, make_param_hook,
@@ -143,7 +147,7 @@ class StepParts(NamedTuple):
     harness needs to lay the body on its own mesh (the 1-D wrapper below,
     or the 2-D scenario × client ``DistScenarioBank``)."""
     init_fn: Callable
-    step: Callable          # step(state, tokens, labels, key, chan[, fast])
+    step: Callable          # step(state, tokens, labels, key, chan, faults[, fast])
     state_specs: Any        # HotaState of PartitionSpecs (FL axes only)
     batch_spec: Tuple
     metric_spec: Dict
@@ -151,6 +155,8 @@ class StepParts(NamedTuple):
     chan_all: Any           # the factory FLConfig's baked ChannelParams
     n_total_clusters: int
     has_fast: bool          # statically-specialized naive baseline exists
+    faults_spec: Any = None     # FaultParams of P() (replicated knobs)
+    faults_all: Any = None      # the factory FLConfig's baked FaultParams
 
 
 def make_hota_step_parts(
@@ -180,6 +186,13 @@ def make_hota_step_parts(
                              compute_dtype, mode=fl.ota_mode)
     registry = build_axes_registry(model)
     chan_all = channel_params(fl, n_clusters=n_total_clusters)
+    faults_all = fault_params(fl)
+    if fl.faults and not fl.use_pallas_ota:
+        raise ValueError(
+            "fl.faults requires the slab engine (use_pallas_ota=True): the "
+            "per-leaf distributed path has no participation-aware "
+            "aggregation — use the per-leaf SIMULATOR (repro.core.sim) as "
+            "the fault oracle instead (DESIGN.md §3.14)")
 
     head_specs = model.head_specs(n_out)
     final_axes = [a for a in jax.tree.leaves(
@@ -249,6 +262,8 @@ def make_hota_step_parts(
     batch_spec = (P(client_axes), P(client_axes))
     metric_spec = {"loss": P(), "p_mean": P(), "p_min": P(), "p_max": P(),
                    "fgrad": P(), "gnorm_mean": P()}
+    if fl.faults:
+        metric_spec = dict(metric_spec, skipped=P(), n_participants=P())
 
     # ---------------- init ----------------
     def init_fn(key: jax.Array) -> HotaState:
@@ -281,7 +296,7 @@ def make_hota_step_parts(
 
     # ---------------- the sharded step ----------------
     def _step(state: HotaState, tokens, labels, key, chan: ChannelParams,
-              fast: bool = False):
+              faults: FaultParams = None, fast: bool = False):
         TRACE_LOG.append(("slab" if use_slab else "leaf", fl.ota_mode))
         base_key = jax.random.fold_in(key, state.step)
         cidx = cluster_index(cluster_axes)
@@ -290,8 +305,25 @@ def make_hota_step_parts(
         head_opt = AdamState(step=state.head_opt.step,
                              mu=jax.tree.map(lambda a: a[0], state.head_opt.mu),
                              nu=jax.tree.map(lambda a: a[0], state.head_opt.nu))
+        head0, head_opt0 = head, head_opt
         p_i = state.p[0]
         f0_i = state.f0[0]
+
+        # fault injection (DESIGN.md §3.14, static fl.faults gate): every
+        # device draws the SAME (C, N) participation from base_key's
+        # reserved PART_FOLD domain (disjoint from all channel streams —
+        # resampling fault rates is CRN-safe), then reads its own slot.
+        # Stragglers here use the discount-only model (age = τ, no delayed
+        # copy — the sim engine carries the stale-model variant).
+        partc = None
+        if fl.faults:
+            fp = faults_all if faults is None else faults
+            partc = ota.draw_participation(base_key, fp, n_total_clusters,
+                                           n_clients)
+            client_idx = jax.lax.axis_index(CLIENT_AXIS_NAME)
+            part_me = partc.part[cidx, client_idx]
+            stale_me = partc.stale[cidx, client_idx]
+            live_me = partc.live[cidx]
 
         if fast:
             # statically-specialized naive baseline (equal weighting,
@@ -385,9 +417,15 @@ def make_hota_step_parts(
             # sim path. p starts at 1, so for pure-equal runs the
             # passthrough is the old static p≡1 branch.
             fgn_on = chan_c.fgn_on > 0.5
-            p_new = jnp.where(fgn_on, p_fgn, p_i)
-            mu = jnp.where(fgn_on, mu_fgn, state.fgn_mu[0])
-            nu = jnp.where(fgn_on, nu_fgn, state.fgn_nu[0])
+            # under faults a dead cluster's (p, Adam moment) state also
+            # freezes (its IS heard nothing this round); fgn_t stays
+            # device-uniform — it is a single replicated scalar, unlike
+            # the sim's per-cluster FGNState (DESIGN.md §3.14)
+            fgn_upd = (fgn_on if partc is None
+                       else jnp.logical_and(fgn_on, live_me > 0.5))
+            p_new = jnp.where(fgn_upd, p_fgn, p_i)
+            mu = jnp.where(fgn_upd, mu_fgn, state.fgn_mu[0])
+            nu = jnp.where(fgn_upd, nu_fgn, state.fgn_nu[0])
             fgn_t_new = jnp.where(fgn_on, state.fgn_t + 1, state.fgn_t)
             fgrad_val = jnp.where(fgn_on, fgrad_fgn, jnp.zeros(()))
 
@@ -399,9 +437,19 @@ def make_hota_step_parts(
         if use_slab:
             # one custom-vjp gather for the WHOLE model: its backward is
             # the slab-native aggregation (fused w·g·M kernel per leaf in
-            # place + ONE psum set — repro.core.hota_slab)
+            # place + ONE psum set — repro.core.hota_slab). Under faults
+            # the transmit weight folds participation and the FedBuff
+            # staleness discount; live/n_eff generalize the eq.-10 guard.
+            if partc is not None:
+                disc = jnp.where(stale_me > 0.5,
+                                 jax.lax.rsqrt(1.0 + fp.staleness), 1.0)
+                w_tx = jnp.asarray(p_new, jnp.float32) * part_me * disc
+                ctx_live, ctx_n_eff = partc.live, partc.n_eff
+            else:
+                w_tx = jnp.asarray(p_new, jnp.float32)
+                ctx_live = ctx_n_eff = None
             slab_ctx = OTACtx(
-                p_weight=jnp.asarray(p_new, jnp.float32),
+                p_weight=w_tx,
                 key=packed_omega_key(base_key),
                 # FULL (C,) σ² vector: the backward narrows to its own
                 # cluster (ctx.sigma2[cidx]) in the default psum count
@@ -410,7 +458,8 @@ def make_hota_step_parts(
                 sigma2=jnp.asarray(chan.sigma2, jnp.float32),
                 h_th=jnp.asarray(chan_c.h_threshold, jnp.float32),
                 noise_std=jnp.asarray(chan_c.noise_std, jnp.float32),
-                ota_on=jnp.asarray(chan_c.ota_on, jnp.float32))
+                ota_on=jnp.asarray(chan_c.ota_on, jnp.float32),
+                live=ctx_live, n_eff=ctx_n_eff)
 
             def mb_loss(omega, hd, tok_mb, lab_mb):
                 full = omega_gather(omega, slab_ctx)
@@ -475,6 +524,20 @@ def make_hota_step_parts(
         if fl.tau_h == 0:
             head, head_opt = adam_update(g_head, head_opt, head, tcfg.lr)
 
+        if partc is not None:
+            # non-participant clients keep last round's head + moments
+            # (the shared head-Adam step counter stays device-uniform —
+            # unlike the sim's per-slot counters; DESIGN.md §3.14)
+            keep = part_me > 0.5
+            head = jax.tree.map(lambda n, o: jnp.where(keep, n, o),
+                                head, head0)
+            head_opt = AdamState(
+                step=head_opt.step,
+                mu=jax.tree.map(lambda n, o: jnp.where(keep, n, o),
+                                head_opt.mu, head_opt0.mu),
+                nu=jax.tree.map(lambda n, o: jnp.where(keep, n, o),
+                                head_opt.nu, head_opt0.nu))
+
         new_state = HotaState(
             omega=omega, opt=opt,
             heads=jax.tree.map(lambda a: a[None], head),
@@ -492,14 +555,43 @@ def make_hota_step_parts(
             "fgrad": jax.lax.pmean(fgrad_val, client_axes),
             "gnorm_mean": jax.lax.pmean(n_i, client_axes),
         }
+
+        if partc is not None:
+            # round guard (DESIGN.md §3.14): gn2 is the EXACT squared
+            # estimate norm, device-uniform by construction — FSDP leaves
+            # psum their shard sums over the data axes, replicated leaves
+            # are already identical everywhere. spike_norm=inf leaves only
+            # the non-finite check; a tripped guard (or a zero-participant
+            # round) freezes the whole state — bit-exact identity, step
+            # counter aside — via the fgn_on-style jnp.where passthrough.
+            leaves_g = jax.tree.leaves(g_omega)
+            gn2_loc = sum((jnp.sum(l.astype(jnp.float32) ** 2)
+                           for l, ax in zip(leaves_g, omega_fsdp)
+                           if ax >= 0), jnp.zeros((), jnp.float32))
+            gn2_rep = sum((jnp.sum(l.astype(jnp.float32) ** 2)
+                           for l, ax in zip(leaves_g, omega_fsdp)
+                           if ax < 0), jnp.zeros((), jnp.float32))
+            gn2 = jax.lax.psum(gn2_loc, data_axes) + gn2_rep
+            ok = jnp.logical_and(jnp.isfinite(gn2),
+                                 gn2 <= fp.spike_norm * fp.spike_norm)
+            skip = jnp.logical_or(partc.total < 0.5, ~ok)
+            new_state = jax.tree.map(
+                lambda new, old: jnp.where(skip, old, new),
+                new_state, state)
+            new_state = new_state._replace(step=state.step + 1)
+            metrics = dict(metrics, skipped=skip.astype(jnp.float32),
+                           n_participants=partc.total)
         return new_state, metrics
 
     chan_spec = ChannelParams(*([P()] * len(ChannelParams._fields)))
+    faults_spec = FaultParams(*([P()] * len(FaultParams._fields)))
     return StepParts(
         init_fn=init_fn, step=_step, state_specs=state_specs,
         batch_spec=batch_spec, metric_spec=metric_spec, chan_spec=chan_spec,
         chan_all=chan_all, n_total_clusters=n_total_clusters,
-        has_fast=(fl.weighting == "equal" and fl.tau_h == 0))
+        has_fast=(fl.weighting == "equal" and fl.tau_h == 0
+                  and not fl.faults),
+        faults_spec=faults_spec, faults_all=faults_all)
 
 
 def make_hota_train_step(
@@ -513,16 +605,18 @@ def make_hota_train_step(
 ):
     """Returns (init_fn, sharded_step_fn, state_sharding, batch_sharding).
 
-    ``sharded_step_fn(state, tokens, labels, key, chan=None)``: ``chan`` is
-    an optional traced ``ChannelParams`` (σ² of shape (n_total_clusters,))
-    overriding the factory config's knobs for this call — scenario sweeps
-    pass a different ``chan`` per call into ONE compiled step."""
+    ``sharded_step_fn(state, tokens, labels, key, chan=None, faults=None)``:
+    ``chan`` is an optional traced ``ChannelParams`` (σ² of shape
+    (n_total_clusters,)) overriding the factory config's knobs for this
+    call — scenario sweeps pass a different ``chan`` per call into ONE
+    compiled step. ``faults`` likewise overrides the traced fault knobs
+    (consumed only when the static ``fl.faults`` gate is on)."""
     parts = make_hota_step_parts(model, mesh, fl, tcfg, loss_kind=loss_kind,
                                  n_out=n_out)
     manual_axes = set(_mesh_client_axes(mesh))
     state_specs, metric_spec = parts.state_specs, parts.metric_spec
     in_specs = (state_specs, parts.batch_spec[0], parts.batch_spec[1], P(),
-                parts.chan_spec)
+                parts.chan_spec, parts.faults_spec)
     sharded_inner = _shard_map(
         parts.step, mesh=mesh, in_specs=in_specs,
         out_specs=(state_specs, metric_spec), axis_names=manual_axes)
@@ -537,17 +631,20 @@ def make_hota_train_step(
         if parts.has_fast else None)
     n_total_clusters = parts.n_total_clusters
     chan_all = parts.chan_all
+    faults_all = parts.faults_all
 
     def sharded_step(state: HotaState, tokens, labels, key,
-                     chan: Optional[ChannelParams] = None):
+                     chan: Optional[ChannelParams] = None,
+                     faults: Optional[FaultParams] = None):
+        fp = faults_all if faults is None else faults
         if chan is None:
             inner = fast_inner if fast_inner is not None else sharded_inner
-            return inner(state, tokens, labels, key, chan_all)
+            return inner(state, tokens, labels, key, chan_all, fp)
         if chan.sigma2.shape != (n_total_clusters,):
             raise ValueError(
                 f"chan.sigma2 shape {chan.sigma2.shape} != "
                 f"(n_total_clusters,) = ({n_total_clusters},)")
-        return sharded_inner(state, tokens, labels, key, chan)
+        return sharded_inner(state, tokens, labels, key, chan, fp)
 
     return parts.init_fn, sharded_step, state_specs, parts.batch_spec
 

@@ -41,7 +41,7 @@ same reserved range.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +71,14 @@ PACKED_TAIL_FOLD = 0x7FFF0002    # gain bits for the packed tail (ω̃) section
 # reserved value, NOT a bare literal, so no future fold of the step key
 # (data order, head init, ...) can collide with the channel streams.
 SIM_CHAN_FOLD = 0x7FFF0003
+# the participation-draw domain (DESIGN.md §4): every per-slot fault draw
+# — client dropout, cluster blackout, straggler flags — folds off
+# fold_in(round_key, PART_FOLD). The draws depend ONLY on the round key
+# and the slot position, never on the fault rates themselves, so
+# resampling FaultParams perturbs no channel stream (CRN across fault
+# scenarios) and raising a rate only grows the dropped set (monotone
+# coupling u < rate on a shared uniform).
+PART_FOLD = 0x7FFF0004
 # multi-section layouts (DESIGN.md §3.10): trunk section s folds BASE + s;
 # the tail (ω̃) section keeps PACKED_TAIL_FOLD in EVERY layout, so eq.-5
 # consumers re-draw only the ω̃ stream without knowing the trunk split.
@@ -96,6 +104,60 @@ def sim_channel_key(key: jax.Array) -> jax.Array:
     packed section bits, AWGN — folds off this key, in a reserved domain
     disjoint from any other fold of the step key."""
     return jax.random.fold_in(key, SIM_CHAN_FOLD)
+
+
+def participation_key(key: jax.Array) -> jax.Array:
+    """The round's participation-draw key (DESIGN.md §4): every fault
+    draw — dropout, blackout, straggler — folds off this key, in a
+    reserved domain disjoint from every channel stream."""
+    return jax.random.fold_in(key, PART_FOLD)
+
+
+class Participation(NamedTuple):
+    """One round's fault realization (all f32, all traced).
+
+    ``part`` is the P of the |M∩P| estimator: the guarded PS estimate
+    counts only LIVE clusters (``live`` masks the per-cluster eq.-7
+    masks) and divides by ``n_eff`` — the mean participant count over
+    live clusters — instead of the static N. With no faults injected
+    ``part`` is all-ones, ``live`` all-ones and ``n_eff == N`` exactly,
+    so the generalized estimator is bit-identical to eq. 10.
+    """
+    part: jax.Array      # (C, N) 1.0 = client participates this round
+    stale: jax.Array     # (C, N) 1.0 = participates with a stale gradient
+    live: jax.Array      # (C,)   1.0 = cluster has ≥ 1 participant
+    n_live: jax.Array    # ()     live-cluster count
+    total: jax.Array     # ()     total participant count
+    n_eff: jax.Array     # ()     total / max(n_live, 1) — the N of eq. 10
+
+
+def draw_participation(key: jax.Array, faults, n_clusters: int,
+                       n_clients: int) -> Participation:
+    """Per-slot participation draws for one round (DESIGN.md §3.14).
+
+    ``faults`` is a ``repro.core.channel.FaultParams``. Uniforms are
+    drawn once per (kind, slot) under sub-folds of ``participation_key``
+    and compared against the traced rates, so the fault knobs vmap
+    through the scenario banks without retracing and resampling a rate
+    never moves another scenario's draw."""
+    pk = participation_key(key)
+    u_drop = jax.random.uniform(jax.random.fold_in(pk, 0),
+                                (n_clusters, n_clients))
+    u_black = jax.random.uniform(jax.random.fold_in(pk, 1), (n_clusters,))
+    u_strag = jax.random.uniform(jax.random.fold_in(pk, 2),
+                                 (n_clusters, n_clients))
+    on = faults.faults_on >= 0.5
+    drop = jnp.logical_and(on, u_drop < faults.dropout)
+    black = jnp.logical_and(on, u_black < faults.blackout)
+    part = jnp.logical_and(~drop, ~black[:, None]).astype(jnp.float32)
+    stale = part * jnp.logical_and(
+        on, u_strag < faults.straggler).astype(jnp.float32)
+    live = (jnp.sum(part, axis=1) > 0).astype(jnp.float32)
+    n_live = jnp.sum(live)
+    total = jnp.sum(part)
+    n_eff = total / jnp.maximum(n_live, 1.0)
+    return Participation(part=part, stale=stale, live=live, n_live=n_live,
+                         total=total, n_eff=n_eff)
 
 
 def sample_gain(key: jax.Array, shape, sigma2) -> jax.Array:
@@ -151,20 +213,32 @@ def ota_aggregate_leaf(
     n_clients: int,
     gains: Optional[jax.Array] = None,      # (C, ...) — faithful mode
     cluster_grads_scaled: Optional[jax.Array] = None,  # (C,...) β∘g sums
+    live: Optional[jax.Array] = None,       # (C,) participation (§3.14)
+    n_eff: Optional[jax.Array] = None,      # () traced effective N
 ):
     """eqs. (8)-(10) for one pytree leaf.
 
     Fast path: y = Σ_l mask_l * wg_l + z. Faithful path: y = Σ_l mask_l *
     H_l * (β∘g)_l + z (identical up to float assoc.; property-tested).
+
+    Partial participation (DESIGN.md §3.14): ``live`` ANDs into the
+    per-cluster masks — a blacked-out cluster transmits nothing and
+    never reaches the |M| count, even under the ``ota_on`` all-pass gate
+    — and the traced ``n_eff`` replaces the static N in the |M∩P|·N_eff
+    denominator. Both default to the full-participation identity.
     """
+    if live is not None:
+        lv = live.reshape((masks.shape[0],) + (1,) * (masks.ndim - 1))
+        masks = jnp.logical_and(masks, lv > 0.5)
     if gains is not None and cluster_grads_scaled is not None:
         y = jnp.sum(jnp.where(masks, gains * cluster_grads_scaled, 0.0), axis=0)
     else:
         y = jnp.sum(jnp.where(masks, weighted_grads, 0.0), axis=0)
     y = y + noise
     cnt = jnp.sum(masks.astype(jnp.float32), axis=0)
+    denom = n_clients if n_eff is None else jnp.maximum(n_eff, 1.0)
     # |M_k(j)| = 0 -> nothing received but noise; estimator guarded to 0
-    ghat = jnp.where(cnt > 0, y / (jnp.maximum(cnt, 1.0) * n_clients), 0.0)
+    ghat = jnp.where(cnt > 0, y / (jnp.maximum(cnt, 1.0) * denom), 0.0)
     return ghat
 
 
@@ -173,12 +247,15 @@ def ota_aggregate_tree(
     weighted_grads,              # pytree with leading (C, ...) leaves
     chan: ChannelParams,         # traced knobs; chan.sigma2 is (C,)
     n_clients: int,
+    live: Optional[jax.Array] = None,   # (C,) cluster participation
+    n_eff: Optional[jax.Array] = None,  # () traced effective N
 ):
     """Sim-path OTA aggregation over a pytree of per-cluster weighted grads.
 
     The ``ota_on`` gate is traced (no Python branch): off forces every mask
     all-pass and zeroes the AWGN, so one jit serves fading and error-free
-    scenarios alike.
+    scenarios alike. ``live``/``n_eff`` inject partial participation
+    (DESIGN.md §3.14); None keeps the full-participation trace bit-exact.
     """
     leaves, treedef = jax.tree.flatten(weighted_grads)
     n_clusters = leaves[0].shape[0]
@@ -194,7 +271,8 @@ def ota_aggregate_tree(
                                chan.ota_on < 0.5)
         noise = (jax.random.normal(noise_key(ks), wg.shape[1:])
                  * chan.noise_std * chan.ota_on)
-        out.append(ota_aggregate_leaf(wg, masks, noise, n_clients))
+        out.append(ota_aggregate_leaf(wg, masks, noise, n_clients,
+                                      live=live, n_eff=n_eff))
     return jax.tree.unflatten(treedef, out)
 
 
@@ -386,6 +464,8 @@ def ota_aggregate_client_folded(
     n_clients: int,
     packer: TreePacker,
     bits_mode: str = "fused",    # accepted for API symmetry (see below)
+    live: Optional[jax.Array] = None,   # (C,) cluster participation (§3.14)
+    n_eff: Optional[jax.Array] = None,  # () traced effective N
 ):
     """Slab-native sim-path OTA aggregation (DESIGN.md §3.12): fold the
     client-weight einsum INTO the channel and consume every gradient
@@ -427,6 +507,7 @@ def ota_aggregate_client_folded(
         out[run.leaf] = ota_client_fold_apply(
             leaves[run.leaf], p, b, nb, chan.sigma2, chan.h_threshold,
             chan.noise_std, chan.ota_on, n_clients,
+            live=live, n_eff=n_eff,
             interpret=not on_tpu())
     return packer.treedef.unflatten(out)
 

@@ -37,7 +37,9 @@ import jax.numpy as jnp
 from repro.common.config import FLConfig, TrainConfig
 from repro.common.flatpack import packer_for
 from repro.core import ota
-from repro.core.channel import ChannelParams, channel_params
+from repro.core.channel import (
+    ChannelParams, FaultParams, channel_params, fault_params,
+)
 from repro.core.fedgradnorm import FGNState, fgn_init, fgn_update_gated
 from repro.kernels.masked_gradnorm.ops import masked_gradnorm
 from repro.models.model import Model
@@ -56,6 +58,10 @@ class SimState(NamedTuple):
     fgn: FGNState               # stacked per cluster: leaves (C, N)
     f0: jax.Array               # (C, N) initial losses (for F̃)
     step: jax.Array
+    # Fault-injection state (DESIGN.md §3.14) — present only when
+    # fl.faults (None = empty pytree node, legacy states unchanged):
+    omega_stale: Any = None     # delayed shared-model copy stragglers use
+    stale_age: Any = None       # () rounds since omega_stale was refreshed
 
 
 def masked_cls_loss(logits: jax.Array, labels: jax.Array,
@@ -79,6 +85,9 @@ class HotaSim:
         # runtime channel/weighting knobs live in a traced pytree so scenario
         # sweeps (repro.core.sweep) can batch them; this is the default row.
         self.chan = channel_params(fl)
+        # fault knobs are the same pattern (traced, bankable); fl.faults is
+        # the one static gate that decides whether they are consumed at all
+        self.faults = fault_params(fl)
 
     # ------------------------------------------------------------------
     def init(self, key: jax.Array) -> SimState:
@@ -108,7 +117,10 @@ class HotaSim:
             omega=omega, heads=heads, p=p, ps_opt=ps_opt,
             head_opt=head_opt, fgn=fgn,
             f0=jnp.ones((fl.n_clusters, fl.n_clients), jnp.float32),
-            step=jnp.zeros((), jnp.int32))
+            step=jnp.zeros((), jnp.int32),
+            omega_stale=(jax.tree.map(jnp.array, omega) if fl.faults
+                         else None),
+            stale_age=(jnp.zeros((), jnp.float32) if fl.faults else None))
 
     # ------------------------------------------------------------------
     def _client_update(self, omega, head, head_opt, x, y, n_valid):
@@ -166,34 +178,78 @@ class HotaSim:
 
     # ------------------------------------------------------------------
     def step(self, state: SimState, xb, yb, key,
-             chan: ChannelParams = None):
+             chan: ChannelParams = None, faults: FaultParams = None):
         """One Alg.-1 round. xb: (C,N,B,d) float32; yb: (C,N,B) int32.
 
         ``chan`` overrides the channel/weighting knobs at trace time
         (defaults to this sim's ``FLConfig``); the sweep engine vmaps
-        ``step_with_channel`` over a bank of them."""
+        ``step_with_channel`` over a bank of them. ``faults`` likewise
+        overrides the traced fault knobs (consumed only when the static
+        ``fl.faults`` gate is on)."""
         return self._step(state, xb, yb, key,
-                          self.chan if chan is None else chan)
+                          self.chan if chan is None else chan,
+                          self.faults if faults is None else faults)
 
     @partial(jax.jit, static_argnums=0)
-    def _step(self, state, xb, yb, key, chan):
-        return self.step_with_channel(state, xb, yb, key, chan)
+    def _step(self, state, xb, yb, key, chan, faults):
+        return self.step_with_channel(state, xb, yb, key, chan,
+                                      faults=faults)
 
     def step_with_channel(self, state: SimState, xb, yb, key,
-                          chan: ChannelParams, ota_bits_mode: str = "fused"):
+                          chan: ChannelParams, ota_bits_mode: str = "fused",
+                          faults: FaultParams = None):
         """Un-jitted step body with explicit traced ChannelParams — the
         vmap target of ``repro.core.sweep.ScenarioBank`` and, per device,
         of ``ShardedScenarioBank``'s scenario-sharded shard_map (DESIGN.md
         §3.8). Both pass ``ota_bits_mode="supplied"`` so the packed
         channel draw — a function of the shared key only — hoists out of
         the scenario vmap and is never re-drawn per scenario or per
-        shard; same stream, same results as the fused default."""
+        shard; same stream, same results as the fused default.
+
+        Fault injection (DESIGN.md §3.14, static ``fl.faults`` gate):
+        participation is drawn from the round key's reserved PART_FOLD
+        domain — disjoint from every channel stream, so resampling fault
+        rates is CRN-safe. Stragglers compute against the delayed
+        ``omega_stale`` copy and transmit with the FedBuff-style
+        1/√(1+age) discount; non-participant head slots and dead-cluster
+        FGN state freeze; blackouts mask the MAC and the traced N_eff
+        replaces N in eq. 10; a zero-participant or guard-tripped round
+        degrades to a bit-exact identity step (step counter aside)."""
         fl, tcfg = self.fl, self.tcfg
-        upd = jax.vmap(jax.vmap(self._client_update,
-                                in_axes=(None, 0, 0, 0, 0, 0)),
-                       in_axes=(None, 0, 0, 0, 0, None))
-        heads, head_opt, g, F = upd(state.omega, state.heads, state.head_opt,
-                                    xb, yb, self.n_classes)
+        partc = None
+        if fl.faults:
+            fp = self.faults if faults is None else faults
+            partc = ota.draw_participation(key, fp, fl.n_clusters,
+                                           fl.n_clients)
+
+            def client_upd(om, om_stale, stale_flag, head, hopt, x, y, nv):
+                om_eff = jax.tree.map(
+                    lambda f, s: jnp.where(stale_flag > 0.5, s, f),
+                    om, om_stale)
+                return self._client_update(om_eff, head, hopt, x, y, nv)
+
+            upd = jax.vmap(jax.vmap(client_upd,
+                                    in_axes=(None, None, 0, 0, 0, 0, 0, 0)),
+                           in_axes=(None, None, 0, 0, 0, 0, 0, None))
+            heads, head_opt, g, F = upd(
+                state.omega, state.omega_stale, partc.stale, state.heads,
+                state.head_opt, xb, yb, self.n_classes)
+            # non-participant slots keep last round's head + optimizer
+            pm = partc.part
+
+            def sel_slot(new, old):
+                m = pm.reshape(pm.shape + (1,) * (new.ndim - 2))
+                return jnp.where(m > 0.5, new, old)
+
+            heads = jax.tree.map(sel_slot, heads, state.heads)
+            head_opt = jax.tree.map(sel_slot, head_opt, state.head_opt)
+        else:
+            upd = jax.vmap(jax.vmap(self._client_update,
+                                    in_axes=(None, 0, 0, 0, 0, 0)),
+                           in_axes=(None, 0, 0, 0, 0, None))
+            heads, head_opt, g, F = upd(state.omega, state.heads,
+                                        state.head_opt, xb, yb,
+                                        self.n_classes)
         # g leaves: (C, N, ...); F: (C, N)
 
         chan_key = ota.sim_channel_key(key)   # reserved fold (DESIGN.md §4)
@@ -224,34 +280,82 @@ class HotaSim:
         norms = self._masked_final_norms(g["final"], final_masks)   # (C, N)
 
         # weighting gate is traced (chan.fgn_on): "equal" scenarios take the
-        # same trace and just select the passthrough
-        p_new, fgn_state, fval = jax.vmap(
-            lambda pc, nc, rc, st: fgn_update_gated(
-                pc, nc, rc, st, fl, chan.fgn_on)
-        )(state.p, norms, ratios, state.fgn)
+        # same trace and just select the passthrough; under faults a dead
+        # cluster's gate also drops, freezing its (p, FGN) state in place
+        if partc is not None:
+            p_new, fgn_state, fval = jax.vmap(
+                lambda pc, nc, rc, st, on: fgn_update_gated(
+                    pc, nc, rc, st, fl, on)
+            )(state.p, norms, ratios, state.fgn, chan.fgn_on * partc.live)
+        else:
+            p_new, fgn_state, fval = jax.vmap(
+                lambda pc, nc, rc, st: fgn_update_gated(
+                    pc, nc, rc, st, fl, chan.fgn_on)
+            )(state.p, norms, ratios, state.fgn)
 
         # --- eqs. (3), (8)-(10): weighted transmission + OTA --------------
+        # under faults the transmit weights fold participation and the
+        # FedBuff staleness discount into the (C, N) matrix the channel
+        # already carries; live/n_eff generalize the eq.-10 guard
+        if partc is not None:
+            disc = jnp.where(partc.stale > 0.5,
+                             jax.lax.rsqrt(1.0 + state.stale_age), 1.0)
+            w_tx = p_new * partc.part * disc
+            live, n_eff = partc.live, partc.n_eff
+        else:
+            w_tx, live, n_eff = p_new, None, None
         if packer is not None:
             # client-folded: Σ_n p[l,n]·g[l,n] folds into the masked MAC
             # sum leaf by leaf — the einsum'd weighted tree never exists
             ghat = ota.ota_aggregate_client_folded(
-                chan_key, g, p_new, chan, fl.n_clients, packer,
-                bits_mode=ota_bits_mode)
+                chan_key, g, w_tx, chan, fl.n_clients, packer,
+                bits_mode=ota_bits_mode, live=live, n_eff=n_eff)
             # slab-view PS update: moments stay one flat slab, params
             # unpack exactly once (the model-apply boundary)
             omega, ps_opt = slab_adam_update(ghat, state.ps_opt,
                                              state.omega, tcfg.lr)
         else:
             weighted = jax.tree.map(
-                lambda gl: jnp.einsum("cn,cn...->c...", p_new, gl), g)
+                lambda gl: jnp.einsum("cn,cn...->c...", w_tx, gl), g)
             ghat = ota.ota_aggregate_tree(chan_key, weighted, chan,
-                                          fl.n_clients)
+                                          fl.n_clients, live=live,
+                                          n_eff=n_eff)
             # --- PS update (line 20) ---------------------------------------
             omega, ps_opt = adam_update(ghat, state.ps_opt, state.omega,
                                         tcfg.lr)
 
         metrics = {"loss": F, "p": p_new, "fgrad": fval,
                    "grad_norms": norms}
-        return SimState(omega=omega, heads=heads, p=p_new, ps_opt=ps_opt,
-                        head_opt=head_opt, fgn=fgn_state, f0=f0,
-                        step=state.step + 1), metrics
+        if partc is None:
+            return SimState(omega=omega, heads=heads, p=p_new,
+                            ps_opt=ps_opt, head_opt=head_opt, fgn=fgn_state,
+                            f0=f0, step=state.step + 1), metrics
+
+        # --- round guard + degradation (DESIGN.md §3.14) ------------------
+        # gn2 is the exact squared estimate norm; spike_norm=inf leaves
+        # only the non-finite check (inf² = inf makes the ≤ vacuous)
+        gn2 = sum(jnp.sum(l.astype(jnp.float32) ** 2)
+                  for l in jax.tree.leaves(ghat))
+        ok = jnp.logical_and(jnp.isfinite(gn2),
+                             gn2 <= fp.spike_norm * fp.spike_norm)
+        skip = jnp.logical_or(partc.total < 0.5, ~ok)
+        # stale-model bookkeeping: refresh the delayed copy every
+        # fp.staleness rounds (age in [0, τ))
+        refresh = (state.stale_age + 1.0) >= fp.staleness
+        omega_stale = jax.tree.map(
+            lambda new, old: jnp.where(refresh, new, old),
+            omega, state.omega_stale)
+        stale_age = jnp.where(refresh, 0.0, state.stale_age + 1.0)
+        new_state = SimState(omega=omega, heads=heads, p=p_new,
+                             ps_opt=ps_opt, head_opt=head_opt,
+                             fgn=fgn_state, f0=f0, step=state.step,
+                             omega_stale=omega_stale, stale_age=stale_age)
+        # skipped round = bit-exact identity (params, Adam moments, FGN
+        # state, stale copy all frozen — like the fgn_on passthrough);
+        # only the step counter advances
+        new_state = jax.tree.map(
+            lambda new, old: jnp.where(skip, old, new), new_state, state)
+        new_state = new_state._replace(step=state.step + 1)
+        metrics = dict(metrics, skipped=skip.astype(jnp.float32),
+                       n_participants=partc.total)
+        return new_state, metrics

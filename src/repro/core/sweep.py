@@ -60,19 +60,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.config import FLConfig
-from repro.core.channel import ChannelParams, channel_params, \
-    stack_channel_params
+from repro.core.channel import ChannelParams, FaultParams, channel_params, \
+    fault_params, stack_channel_params, stack_fault_params
 from repro.core.sim import HotaSim, SimState
 from repro.sharding.mesh_utils import SCENARIO_AXIS, bank_sharding, \
     replicated_sharding, scenario_axis_size, scenario_banked_spec, \
     scenario_banked_tree, shard_map_compat
 
 # the ONLY FLConfig fields a scenario may vary — everything else is baked
-# into the trace (topology, local steps, FGN hyper-params, ota_mode, ...)
+# into the trace (topology, local steps, FGN hyper-params, ota_mode, ...).
+# Fault knobs (DESIGN.md §3.14) are traced VALUES like the channel knobs,
+# but ``faults`` itself is the static gate and must match the base config.
+_FAULT_FIELDS = ("dropout_rate", "blackout_rate", "straggler_rate",
+                 "staleness_rounds", "spike_norm")
 TRACED_FIELDS = frozenset(
-    {"sigma2", "h_threshold", "noise_std", "ota", "weighting"})
+    {"sigma2", "h_threshold", "noise_std", "ota", "weighting",
+     *_FAULT_FIELDS})
 
-Scenario = Union[FLConfig, ChannelParams, Dict[str, Any]]
+Scenario = Union[FLConfig, ChannelParams, FaultParams, Dict[str, Any]]
 
 
 def _as_channel_params(sc: Scenario, base: FLConfig) -> ChannelParams:
@@ -82,6 +87,8 @@ def _as_channel_params(sc: Scenario, base: FLConfig) -> ChannelParams:
                 f"scenario sigma2 shape {sc.sigma2.shape} != "
                 f"(n_clusters,) = ({base.n_clusters},)")
         return sc
+    if isinstance(sc, FaultParams):
+        return channel_params(base)      # fault-only scenario: base channel
     if isinstance(sc, dict):
         sc = dataclasses.replace(base, **sc)
     if not isinstance(sc, FLConfig):
@@ -99,6 +106,31 @@ def _as_channel_params(sc: Scenario, base: FLConfig) -> ChannelParams:
                 f"{sorted(TRACED_FIELDS)} may vary within a ScenarioBank — "
                 f"build a second bank for static changes")
     return channel_params(sc)
+
+
+def _as_fault_params(sc: Scenario, base: FLConfig) -> FaultParams:
+    """The scenario's FaultParams (DESIGN.md §3.14). Channel-only
+    scenarios inherit the base config's fault knobs; static-field
+    validation already happened in ``_as_channel_params``."""
+    if isinstance(sc, FaultParams):
+        if not base.faults:
+            raise ValueError(
+                "FaultParams scenario in a bank whose base config has "
+                "faults=False — the fault gate is static (it changes the "
+                "trace), so build the bank from a faults=True base")
+        return sc
+    if isinstance(sc, ChannelParams):
+        return fault_params(base)
+    if isinstance(sc, dict):
+        sc = dataclasses.replace(base, **sc)
+    if not base.faults:
+        for f in _FAULT_FIELDS:
+            if getattr(sc, f) != getattr(base, f):
+                raise ValueError(
+                    f"scenario varies fault knob {f!r} but the bank's base "
+                    f"config has faults=False — the knob would be silently "
+                    f"inert; build the bank from a faults=True base")
+    return fault_params(sc)
 
 
 class _BankCheckpoint:
@@ -171,6 +203,11 @@ class ScenarioBank(_BankCheckpoint):
         self.sim = sim
         self.chan_bank = stack_channel_params(
             [_as_channel_params(sc, sim.fl) for sc in scenarios])
+        # fault knobs bank exactly like channel knobs (DESIGN.md §3.14);
+        # with faults=False the bank is inert (the legacy trace never
+        # reads it) but keeps the step arity uniform
+        self.fault_bank = stack_fault_params(
+            [_as_fault_params(sc, sim.fl) for sc in scenarios])
         self.n_scenarios = int(self.chan_bank.ota_on.shape[0])
 
     # ------------------------------------------------------------------
@@ -187,22 +224,29 @@ class ScenarioBank(_BankCheckpoint):
         """One Alg.-1 round for every scenario at once. ``xb``/``yb``/``key``
         are UNBATCHED and shared across scenarios (common random numbers);
         states and the returned metrics carry the leading (S,) axis."""
-        return self._step(states, xb, yb, key, self.chan_bank)
+        return self._step(states, xb, yb, key, self.chan_bank,
+                          self.fault_bank)
 
-    def _vmapped_step(self, states, xb, yb, key, chan_bank):
+    def _vmapped_step(self, states, xb, yb, key, chan_bank, fault_bank):
         # supplied bits mode: the OTA stream draw is a function of the
         # shared key only, so it hoists out of the scenario vmap — one
         # draw per round, not per scenario. The client-folded sim path
         # (DESIGN.md §3.12) draws key-only in either mode; the flag is
         # kept so the per-slab kernel path composes identically.
-        step = partial(self.sim.step_with_channel,
-                       ota_bits_mode="supplied")
-        return jax.vmap(step, in_axes=(0, None, None, None, 0))(
-            states, xb, yb, key, chan_bank)
+        # The participation draw (PART_FOLD) likewise depends only on
+        # the shared key — scenarios vary the fault RATES the shared
+        # uniforms are compared against, so participation is monotone-
+        # coupled across the bank (CRN for fault sweeps).
+        def step(st, x, y, k, ch, fp):
+            return self.sim.step_with_channel(
+                st, x, y, k, ch, ota_bits_mode="supplied", faults=fp)
+        return jax.vmap(step, in_axes=(0, None, None, None, 0, 0))(
+            states, xb, yb, key, chan_bank, fault_bank)
 
     @partial(jax.jit, static_argnums=0)
-    def _step(self, states, xb, yb, key, chan_bank):
-        return self._vmapped_step(states, xb, yb, key, chan_bank)
+    def _step(self, states, xb, yb, key, chan_bank, fault_bank):
+        return self._vmapped_step(states, xb, yb, key, chan_bank,
+                                  fault_bank)
 
     # ------------------------------------------------------------------
     def run(self, states: SimState, batches: Iterable[Tuple[Any, Any]],
@@ -266,6 +310,7 @@ class ShardedScenarioBank(ScenarioBank):
         self._banked = bank_sharding(mesh)
         self._shared = replicated_sharding(mesh)
         self.chan_bank = jax.device_put(self.chan_bank, self._banked)
+        self.fault_bank = jax.device_put(self.fault_bank, self._banked)
 
     # ------------------------------------------------------------------
     def init(self, key: jax.Array) -> SimState:
@@ -284,19 +329,20 @@ class ShardedScenarioBank(ScenarioBank):
         xb = jax.device_put(jnp.asarray(xb), self._shared)
         yb = jax.device_put(jnp.asarray(yb), self._shared)
         key = jax.device_put(key, self._shared)
-        return self._step(states, xb, yb, key, self.chan_bank)
+        return self._step(states, xb, yb, key, self.chan_bank,
+                          self.fault_bank)
 
     @partial(jax.jit, static_argnums=0)
-    def _step(self, states, xb, yb, key, chan_bank):
+    def _step(self, states, xb, yb, key, chan_bank, fault_bank):
         from jax.sharding import PartitionSpec as P
         banked, shared = P(SCENARIO_AXIS), P()
         f = shard_map_compat(
             self._vmapped_step,
             mesh=self.mesh,
-            in_specs=(banked, shared, shared, shared, banked),
+            in_specs=(banked, shared, shared, shared, banked, banked),
             out_specs=(banked, banked),
             axis_names={SCENARIO_AXIS})
-        return f(states, xb, yb, key, chan_bank)
+        return f(states, xb, yb, key, chan_bank, fault_bank)
 
     # ------------------------------------------------------------------
     def _state_shardings(self):
@@ -350,6 +396,8 @@ class DistScenarioBank(_BankCheckpoint):
         self._parts = parts
         self.chan_bank = stack_channel_params(
             [_as_channel_params(sc, fl) for sc in scenarios])
+        self.fault_bank = stack_fault_params(
+            [_as_fault_params(sc, fl) for sc in scenarios])
         self.n_scenarios = int(self.chan_bank.ota_on.shape[0])
         n_rows = scenario_axis_size(mesh)
         if self.n_scenarios % n_rows:
@@ -361,23 +409,28 @@ class DistScenarioBank(_BankCheckpoint):
         self._state_banked = scenario_banked_tree(parts.state_specs)
         self._metric_banked = scenario_banked_tree(parts.metric_spec)
         chan_banked = scenario_banked_tree(parts.chan_spec)
+        faults_banked = scenario_banked_tree(parts.faults_spec)
 
-        def body(states, tokens, labels, key, chan_bank):
+        def body(states, tokens, labels, key, chan_bank, fault_bank):
             # local scenario slice: vmap the single-scenario round body;
             # its client/cluster collectives batch over the vmap axis
-            return jax.vmap(parts.step, in_axes=(0, None, None, None, 0))(
-                states, tokens, labels, key, chan_bank)
+            return jax.vmap(parts.step,
+                            in_axes=(0, None, None, None, 0, 0))(
+                states, tokens, labels, key, chan_bank, fault_bank)
 
         self._inner = shard_map_compat(
             body, mesh=mesh,
             in_specs=(self._state_banked, parts.batch_spec[0],
-                      parts.batch_spec[1], P(), chan_banked),
+                      parts.batch_spec[1], P(), chan_banked, faults_banked),
             out_specs=(self._state_banked, self._metric_banked),
             axis_names=set(_mesh_client_axes(mesh)) | {SCENARIO_AXIS})
         self._jstep = jax.jit(self._inner)
         self.chan_bank = jax.tree.map(
             lambda a: jax.device_put(
                 a, NamedSharding(mesh, P(SCENARIO_AXIS))), self.chan_bank)
+        self.fault_bank = jax.tree.map(
+            lambda a: jax.device_put(
+                a, NamedSharding(mesh, P(SCENARIO_AXIS))), self.fault_bank)
 
     # ------------------------------------------------------------------
     def _init_states(self, key: jax.Array):
@@ -413,7 +466,8 @@ class DistScenarioBank(_BankCheckpoint):
             jnp.asarray(labels),
             NamedSharding(self.mesh, self._parts.batch_spec[1]))
         key = jax.device_put(key, NamedSharding(self.mesh, P()))
-        return self._jstep(states, tokens, labels, key, self.chan_bank)
+        return self._jstep(states, tokens, labels, key, self.chan_bank,
+                           self.fault_bank)
 
     # ------------------------------------------------------------------
     def scenario_state(self, states, s: int):

@@ -177,7 +177,9 @@ def _ota_mask_count_kernel(x_ref, bits_ref, params_ref, out_ref, cnt_ref,
     counter-based per-cluster bit streams, compute in ONE pass
     out = M_me ∘ (w·x) (this device's masked weighted gradient) and
     cnt = Σ_l M_l (the |M| count — every cluster's mask is a pure
-    function of the streams, so the count needs NO collective)."""
+    function of the streams, so the count needs NO collective). The
+    per-cluster ``live`` flags (DESIGN.md §3.14) AND into the masks
+    after the ``ota_on`` all-pass gate; all-ones = bit-exact legacy."""
     c = n_clusters
     h_th = params_ref[0, c]
     ota_on = params_ref[0, c + 1]
@@ -188,8 +190,11 @@ def _ota_mask_count_kernel(x_ref, bits_ref, params_ref, out_ref, cnt_ref,
     out = jnp.zeros_like(x)
     cnt = jnp.zeros_like(x)
     for l in range(n_clusters):              # static unrolled cluster loop
-        mask = _bits_mask(bits_ref[l],
-                          _pass_probability(params_ref[0, l], h_th), off)
+        live_l = params_ref[0, c + 4 + l]
+        mask = jnp.logical_and(
+            _bits_mask(bits_ref[l],
+                       _pass_probability(params_ref[0, l], h_th), off),
+            live_l >= 0.5)
         cnt = cnt + mask.astype(jnp.float32)
         mine = jnp.logical_and(mask, me == jnp.float32(l))
         out = out + jnp.where(mine, w * x, 0.0)
@@ -200,7 +205,7 @@ def _ota_mask_count_kernel(x_ref, bits_ref, params_ref, out_ref, cnt_ref,
 def ota_mask_count_pallas(
     x: jax.Array,            # (rows, 128) slab
     bits: jax.Array,         # (C, rows, 128) uint32 — per-cluster streams
-    params: jax.Array,       # (1, C+4): [σ²_0..σ²_{C-1}, H_th, ota_on, w, me]
+    params: jax.Array,       # (1, 2C+4): [σ²_·, H_th, ota_on, w, me, live_·]
     *,
     block_rows: int = DEFAULT_BLOCK_ROWS,
     interpret: bool = False,
@@ -208,6 +213,7 @@ def ota_mask_count_pallas(
     """Fused M_me∘(w·x) + Σ_l M_l. Returns (out, cnt) as f32 slabs."""
     n_clusters, rows, lane = bits.shape
     assert lane == LANE and x.shape == (rows, LANE), (bits.shape, x.shape)
+    assert params.shape == (1, 2 * n_clusters + 4), params.shape
     br = _pick_block_rows(rows, n_clusters + 3, block_rows, interpret)
     grid = (rows // br,)
 
@@ -219,7 +225,7 @@ def ota_mask_count_pallas(
         in_specs=[
             pl.BlockSpec((br, LANE), lambda i: (i, 0)),
             pl.BlockSpec((n_clusters, br, LANE), lambda i: (0, i, 0)),
-            pl.BlockSpec((1, n_clusters + 4), lambda i: (0, 0)),
+            pl.BlockSpec((1, 2 * n_clusters + 4), lambda i: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((br, LANE), lambda i: (i, 0)),
@@ -240,11 +246,17 @@ def _ota_aggregate_client_kernel(x_ref, bits_ref, nbits_ref, params_ref,
     Σ_l M_l ∘ (Σ_n p[l,n]·x[l,n]) IN BLOCK from the raw (C, N, ·) gradient
     slab and the (C, N) loss-weight matrix — eqs. 3 + 8-10 in one pass;
     neither the client-weighted tree nor a (C, P) pack copy exists. The
-    weight matrix rides the params block after the per-cluster σ²."""
+    weight matrix rides the params block after the per-cluster σ²; the
+    per-cluster ``live`` flags and the traced N_eff denominator
+    (DESIGN.md §3.14) ride after the scalars — live ANDs into the masks
+    AFTER the ``ota_on`` all-pass gate, and live=ones/n_eff=N is the
+    bit-exact full-participation identity."""
     c, n = n_clusters, n_clients
-    h_th = params_ref[0, c + c * n]
-    noise_std = params_ref[0, c + c * n + 1]
-    ota_on = params_ref[0, c + c * n + 2]
+    base = c + c * n
+    h_th = params_ref[0, base]
+    noise_std = params_ref[0, base + 1]
+    ota_on = params_ref[0, base + 2]
+    n_eff = params_ref[0, base + 3 + c]
     off = ota_on < 0.5                       # traced error-free gate
 
     acc = jnp.zeros_like(out_ref[...], jnp.float32)
@@ -254,22 +266,26 @@ def _ota_aggregate_client_kernel(x_ref, bits_ref, nbits_ref, params_ref,
         for i in range(n_clients):           # eq. 3: Σ_n p[l,n]·g[l,n]
             wg = wg + params_ref[0, c + l * n + i] * (
                 x_ref[l, i].astype(jnp.float32))
-        mask = _bits_mask(bits_ref[l],
-                          _pass_probability(params_ref[0, l], h_th), off)
+        live_l = params_ref[0, base + 3 + l]
+        mask = jnp.logical_and(
+            _bits_mask(bits_ref[l],
+                       _pass_probability(params_ref[0, l], h_th), off),
+            live_l >= 0.5)
         acc = acc + jnp.where(mask, wg, 0.0)
         cnt = cnt + mask.astype(jnp.float32)
 
     z = _box_muller(nbits_ref[...], 1.0) * noise_std * ota_on
     y = acc + z
-    out_ref[...] = jnp.where(cnt > 0,
-                             y / (jnp.maximum(cnt, 1.0) * n_clients), 0.0)
+    out_ref[...] = jnp.where(
+        cnt > 0, y / (jnp.maximum(cnt, 1.0) * jnp.maximum(n_eff, 1.0)), 0.0)
 
 
 def ota_aggregate_client_pallas(
     x: jax.Array,            # (C, N, rows, 128) f32 — RAW per-client grads
     bits: jax.Array,         # (C, rows, 128) uint32 — gain bits per cluster
     nbits: jax.Array,        # (rows, 128) uint32 — AWGN bits
-    params: jax.Array,       # (1, C·(N+1)+3): [σ²_·, p_··, H_th, z_std, ota_on]
+    params: jax.Array,       # (1, C·(N+2)+4):
+                             #   [σ²_·, p_··, H_th, z_std, ota_on, live_·, N_eff]
     *,
     n_clients: int,
     block_rows: int = DEFAULT_BLOCK_ROWS,
@@ -285,6 +301,7 @@ def ota_aggregate_client_pallas(
     assert lane == LANE and n_cl == n_clients, (x.shape, n_clients)
     assert bits.shape == (n_clusters, rows, LANE), (bits.shape, x.shape)
     assert nbits.shape == (rows, LANE), nbits.shape
+    assert params.shape == (1, n_clusters * (n_clients + 2) + 4), params.shape
     # C·N grad blocks + C bits blocks + noise + out resident at once
     br = _pick_block_rows(rows, n_clusters * (n_clients + 1) + 2,
                           block_rows, interpret)
@@ -300,7 +317,7 @@ def ota_aggregate_client_pallas(
                          lambda i: (0, 0, i, 0)),
             pl.BlockSpec((n_clusters, br, LANE), lambda i: (0, i, 0)),
             pl.BlockSpec((br, LANE), lambda i: (i, 0)),
-            pl.BlockSpec((1, n_clusters * (n_clients + 1) + 3),
+            pl.BlockSpec((1, n_clusters * (n_clients + 2) + 4),
                          lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((br, LANE), lambda i: (i, 0)),

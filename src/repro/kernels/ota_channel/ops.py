@@ -130,6 +130,7 @@ def ota_mask_weight_apply(x: jax.Array, bits: jax.Array, sigma2, h_th,
 def ota_client_fold_apply(g: jax.Array, p: jax.Array, bits: jax.Array,
                           nbits: jax.Array, sigma2, h_th, noise_std, ota_on,
                           n_clients: int,
+                          live=None, n_eff=None,
                           interpret: bool = None,
                           impl: str = None):
     """Zero-copy client-folded OTA aggregation for ONE leaf (DESIGN.md
@@ -151,6 +152,12 @@ def ota_client_fold_apply(g: jax.Array, p: jax.Array, bits: jax.Array,
     values (pinned in tests/test_client_folded.py) AND lets XLA fuse the
     weight fold with the masked sum. Tests force ``impl="pallas"`` +
     interpret to validate the kernel itself.
+
+    ``live`` (C,) / ``n_eff`` () inject partial participation
+    (DESIGN.md §3.14): live ANDs into the cluster masks after the
+    ``ota_on`` all-pass gate, n_eff replaces the static N denominator.
+    None keeps the full-participation math bit-exact (the kernel is fed
+    the identity values live=ones, n_eff=N).
     """
     if interpret is None:
         interpret = not on_tpu()
@@ -167,15 +174,23 @@ def ota_client_fold_apply(g: jax.Array, p: jax.Array, bits: jax.Array,
     sig = jnp.asarray(sigma2, jnp.float32).reshape(n_clusters)
     if impl == "jnp":
         out = ota_aggregate_client_ref(flat, p32, bits, nbits, sig, h_th,
-                                       noise_std, ota_on, n_clients)
+                                       noise_std, ota_on, n_clients,
+                                       live=live, n_eff=n_eff)
         return out.reshape(shape)
+    live_v = (jnp.ones((n_clusters,), jnp.float32) if live is None
+              else jnp.asarray(live, jnp.float32).reshape(n_clusters))
+    n_eff_v = (jnp.float32(n_clients) if n_eff is None
+               else jnp.maximum(jnp.asarray(n_eff, jnp.float32), 1.0)
+               .reshape(()))
     params = jnp.concatenate([
         sig,
         p32.reshape(n_clusters * n_clients),
         jnp.stack([jnp.asarray(h_th, jnp.float32).reshape(()),
                    jnp.asarray(noise_std, jnp.float32).reshape(()),
                    jnp.asarray(ota_on, jnp.float32).reshape(())]),
-    ]).reshape(1, n_clusters * (n_clients + 1) + 3)
+        live_v,
+        n_eff_v.reshape(1),
+    ]).reshape(1, n_clusters * (n_clients + 2) + 4)
     main = n - n % ROW_QUANTUM
     outs = []
     if main:
@@ -194,13 +209,15 @@ def ota_client_fold_apply(g: jax.Array, p: jax.Array, bits: jax.Array,
             p32,
             jax.lax.slice(bits, (0, main), (n_clusters, n)),
             jax.lax.slice(nbits, (main,), (n,)),
-            sig, h_th, noise_std, ota_on, n_clients))
+            sig, h_th, noise_std, ota_on, n_clients,
+            live=live, n_eff=n_eff))
     out = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
     return out.reshape(shape)
 
 
 def ota_mask_count_apply(x: jax.Array, bits_all: jax.Array, me, sigma2_all,
                          h_th, ota_on, weight,
+                         live_all=None,
                          interpret: bool = None,
                          impl: str = None):
     """Slab-native local channel work for ONE leaf (DESIGN.md §3.10):
@@ -217,6 +234,10 @@ def ota_mask_count_apply(x: jax.Array, bits_all: jax.Array, me, sigma2_all,
     pallas_call is pure dispatch overhead while the jnp form computes
     identical values — pinned in tests/test_slab_native.py — and fuses
     with the adjacent psums).
+
+    ``live_all`` (C,) injects cluster participation (DESIGN.md §3.14):
+    dead clusters drop out of BOTH the |M| count and ``me``'s own mask,
+    after the ``ota_on`` all-pass gate. None = all live (bit-exact).
     """
     if interpret is None:
         interpret = not on_tpu()
@@ -230,18 +251,24 @@ def ota_mask_count_apply(x: jax.Array, bits_all: jax.Array, me, sigma2_all,
     sig = jnp.asarray(sigma2_all, jnp.float32).reshape(n_clusters, 1)
     if impl == "jnp":
         masks = bits_to_mask(bits_all, sig, h_th, ota_on)   # (C, n)
+        if live_all is not None:
+            lv = jnp.asarray(live_all, jnp.float32).reshape(n_clusters, 1)
+            masks = jnp.logical_and(masks, lv > 0.5)
         cnt = jnp.sum(masks.astype(jnp.float32), axis=0)
         mine = jnp.take(masks, me, axis=0)
         out = jnp.where(mine, w * flat, 0.0)
         return out.reshape(x.shape), cnt.reshape(x.shape)
+    live_v = (jnp.ones((n_clusters,), jnp.float32) if live_all is None
+              else jnp.asarray(live_all, jnp.float32).reshape(n_clusters))
     main = n - n % ROW_QUANTUM
     params = jnp.concatenate([
         sig.reshape(n_clusters),
         jnp.stack([jnp.asarray(h_th, jnp.float32).reshape(()),
                    jnp.asarray(ota_on, jnp.float32).reshape(()),
                    w.reshape(()),
-                   jnp.asarray(me, jnp.float32).reshape(())])
-    ]).reshape(1, n_clusters + 4)
+                   jnp.asarray(me, jnp.float32).reshape(())]),
+        live_v,
+    ]).reshape(1, 2 * n_clusters + 4)
     outs, cnts = [], []
     if main:
         o, c = ota_mask_count_pallas(
@@ -254,6 +281,9 @@ def ota_mask_count_apply(x: jax.Array, bits_all: jax.Array, me, sigma2_all,
     if n - main:
         b_rem = jax.lax.slice(bits_all, (0, main), (n_clusters, n))
         masks = bits_to_mask(b_rem, sig, h_th, ota_on)
+        if live_all is not None:
+            lv = jnp.asarray(live_all, jnp.float32).reshape(n_clusters, 1)
+            masks = jnp.logical_and(masks, lv > 0.5)
         cnts.append(jnp.sum(masks.astype(jnp.float32), axis=0))
         mine = jnp.take(masks, me, axis=0)
         outs.append(jnp.where(

@@ -70,6 +70,8 @@ def ota_aggregate_client_ref(
     sigma2: jax.Array,       # (C,)
     h_th, noise_std, ota_on,
     n_clients: int,
+    live=None,               # (C,) cluster participation (DESIGN.md §3.14)
+    n_eff=None,              # () traced effective N
 ) -> jax.Array:
     """Client-folded oracle (eqs. 3 + 8-10): fold the per-client weights
     into the MAC sum — Σ_l M_l ∘ (Σ_n p[l,n]·g[l,n]) — then AWGN and the
@@ -78,7 +80,7 @@ def ota_aggregate_client_ref(
     wg = jnp.einsum("cn,cn...->c...", p.astype(jnp.float32),
                     g.astype(jnp.float32))
     return ota_aggregate_slab_ref(wg, bits, nbits, sigma2, h_th, noise_std,
-                                  ota_on, n_clients)
+                                  ota_on, n_clients, live=live, n_eff=n_eff)
 
 
 def ota_aggregate_slab_ref(
@@ -88,19 +90,30 @@ def ota_aggregate_slab_ref(
     sigma2: jax.Array,       # (C,)
     h_th, noise_std, ota_on,
     n_clients: int,
+    live=None,               # (C,) cluster participation (DESIGN.md §3.14)
+    n_eff=None,              # () traced effective N
 ) -> jax.Array:
     """eqs. (8)-(10) on flat slabs, per-cluster where+sum in plain jnp.
 
     The packed kernel's oracle: same bits, same inverse-CDF mask rule
     (``bits_to_mask``), same Box-Muller AWGN, same |M|·N guard — but
-    per-cluster masks materialize as full (C, ...) arrays.
+    per-cluster masks materialize as full (C, ...) arrays. A non-None
+    ``live`` ANDs cluster participation into the masks AFTER the
+    ``ota_on`` all-pass gate (blackout removes a cluster even in the
+    error-free baseline); ``n_eff`` replaces the static N denominator.
     """
     c = wg.shape[0]
     sig = jnp.asarray(sigma2, jnp.float32).reshape((c,) + (1,) * (wg.ndim - 1))
     masks = bits_to_mask(bits, sig, h_th, ota_on)
+    if live is not None:
+        lv = jnp.asarray(live, jnp.float32).reshape(
+            (c,) + (1,) * (wg.ndim - 1))
+        masks = jnp.logical_and(masks, lv > 0.5)
     y = jnp.sum(jnp.where(masks, wg.astype(jnp.float32), 0.0), axis=0)
     z = bits_to_gaussian(nbits, 1.0) * noise_std * jnp.asarray(
         ota_on, jnp.float32)
     y = y + z
     cnt = jnp.sum(masks.astype(jnp.float32), axis=0)
-    return jnp.where(cnt > 0, y / (jnp.maximum(cnt, 1.0) * n_clients), 0.0)
+    denom = (jnp.float32(n_clients) if n_eff is None
+             else jnp.maximum(jnp.asarray(n_eff, jnp.float32), 1.0))
+    return jnp.where(cnt > 0, y / (jnp.maximum(cnt, 1.0) * denom), 0.0)

@@ -24,11 +24,56 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import save_checkpoint
+from repro.checkpoint.store import latest_step, restore_checkpoint
 from repro.common.config import FLConfig, TrainConfig
 from repro.configs import ALIASES, get_smoke_config
 from repro.core.hota_step import make_hota_train_step
 from repro.data.lm import synthetic_lm_batches
 from repro.models.model import build_model
+
+
+class RoundGuard:
+    """Host-side divergence recovery (DESIGN.md §3.14).
+
+    The traced guard inside the step already degrades a non-finite or
+    grad-spike round to a bit-exact skip (state frozen, ``skipped``
+    metric set). This class watches that metric across rounds: after
+    ``patience`` CONSECUTIVE skipped rounds it restores the full train
+    state from the newest complete checkpoint — the traced skip handles
+    transients, the guard handles a wedged run (e.g. a persistently
+    tripping spike threshold on corrupted optimizer state). Any clean
+    round resets the streak.
+    """
+
+    def __init__(self, ckpt_dir: str, abstract_state, shardings=None,
+                 patience: int = 3):
+        if patience < 1:
+            raise ValueError(f"patience must be >= 1, got {patience}")
+        self.ckpt_dir = ckpt_dir
+        self.abstract_state = abstract_state
+        self.shardings = shardings
+        self.patience = patience
+        self.streak = 0
+        self.n_restores = 0
+
+    def observe(self, skipped, state):
+        """Feed one round's ``skipped`` metric; returns
+        ``(state, restored)`` where ``state`` is the checkpoint-restored
+        train state when the streak hit ``patience`` (and a complete
+        checkpoint exists), else the state passed in, untouched."""
+        if float(skipped) < 0.5:
+            self.streak = 0
+            return state, False
+        self.streak += 1
+        if self.streak < self.patience:
+            return state, False
+        self.streak = 0
+        step = None if not self.ckpt_dir else latest_step(self.ckpt_dir)
+        if step is None:          # nothing to restore from: keep going
+            return state, False   # (the traced skip still froze the state)
+        self.n_restores += 1
+        return restore_checkpoint(self.ckpt_dir, step, self.abstract_state,
+                                  shardings=self.shardings), True
 
 
 def main():
@@ -45,7 +90,26 @@ def main():
     ap.add_argument("--no-ota", action="store_true")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="save the FULL train state every K rounds "
+                         "(0 = only the final omega snapshot)")
     ap.add_argument("--seed", type=int, default=0)
+    # fault injection (DESIGN.md §3.14) — traced knobs, one static gate
+    ap.add_argument("--faults", action="store_true",
+                    help="enable the fault-injection round path")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="per-client dropout rate")
+    ap.add_argument("--blackout", type=float, default=0.0,
+                    help="per-cluster blackout rate")
+    ap.add_argument("--straggler", type=float, default=0.0,
+                    help="per-client straggler rate")
+    ap.add_argument("--staleness", type=int, default=1,
+                    help="straggler staleness depth in rounds")
+    ap.add_argument("--spike-norm", type=float, default=float("inf"),
+                    help="skip a round whose aggregate grad norm exceeds this")
+    ap.add_argument("--guard-patience", type=int, default=3,
+                    help="consecutive skipped rounds before the RoundGuard "
+                         "restores from the latest checkpoint")
     args = ap.parse_args()
 
     shape = tuple(int(x) for x in args.mesh.split(","))
@@ -60,7 +124,12 @@ def main():
     model = build_model(cfg)
     fl = FLConfig(n_clusters=shape[0], n_clients=shape[1],
                   weighting=args.weighting, ota=not args.no_ota,
-                  ota_mode=args.ota_mode, noise_std=0.1)
+                  ota_mode=args.ota_mode, noise_std=0.1,
+                  faults=args.faults, dropout_rate=args.dropout,
+                  blackout_rate=args.blackout,
+                  straggler_rate=args.straggler,
+                  staleness_rounds=args.staleness,
+                  spike_norm=args.spike_norm)
     tcfg = TrainConfig(lr=args.lr)
 
     init_fn, step_fn, state_specs, batch_spec = make_hota_train_step(
@@ -69,6 +138,16 @@ def main():
     state = jax.tree.map(
         lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
         state, state_specs, is_leaf=lambda x: isinstance(x, P))
+
+    guard = None
+    if args.faults and args.ckpt_dir:
+        state_shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), state_specs,
+            is_leaf=lambda x: isinstance(x, P))
+        guard = RoundGuard(args.ckpt_dir,
+                           jax.eval_shape(init_fn, jax.random.PRNGKey(0)),
+                           shardings=state_shardings,
+                           patience=args.guard_patience)
 
     n_clients_total = shape[0] * shape[1]
     batches = synthetic_lm_batches(
@@ -82,10 +161,25 @@ def main():
         toks = jax.device_put(jnp.asarray(toks), NamedSharding(mesh, batch_spec[0]))
         labs = jax.device_put(jnp.asarray(labs), NamedSharding(mesh, batch_spec[1]))
         state, m = jstep(state, toks, labs, jax.random.PRNGKey(args.seed + 1))
+        if guard is not None:
+            state, restored = guard.observe(m["skipped"], state)
+            if restored:
+                print(f"step {step:4d} RoundGuard: {args.guard_patience} "
+                      f"consecutive skipped rounds — restored from "
+                      f"checkpoint step {latest_step(args.ckpt_dir)}",
+                      flush=True)
+        if args.ckpt_dir and args.ckpt_every \
+                and (step + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, int(state.step),
+                            jax.tree.map(np.asarray, state),
+                            {"arch": args.arch, "kind": "full_state"})
         if step % 10 == 0 or step == args.steps - 1:
+            faulty = (f" part {float(m['n_participants']):.0f}"
+                      f" skip {float(m['skipped']):.0f}"
+                      if args.faults else "")
             print(f"step {step:4d} loss {float(m['loss']):.4f} "
                   f"p [{float(m['p_min']):.3f},{float(m['p_max']):.3f}] "
-                  f"fgrad {float(m['fgrad']):.4f} "
+                  f"fgrad {float(m['fgrad']):.4f}{faulty} "
                   f"({(time.time()-t0)/(step+1):.2f}s/step)", flush=True)
     if args.ckpt_dir:
         path = save_checkpoint(args.ckpt_dir, args.steps,

@@ -1,0 +1,145 @@
+"""Subprocess program: fault injection on the distributed slab engine
+(DESIGN.md §3.14). Forced 4-device (2 clusters × 2 clients) mesh; a
+second phase rebuilds a (2-scenario × 1×2) mesh for the fault bank.
+
+Pins:
+
+1. zero-rate faults reproduce the legacy (faults=False) trajectory to
+   float tolerance (the fault trace adds the guard psum + freeze select,
+   so XLA refuses bit-exactness — the skip path, which is the §3.14
+   contract, IS bit-exact, see pin 2);
+2. total blackout ⇒ every round skipped and the whole HotaState — omega,
+   slab Adam moments, FGN state, per-client head state — is bit-exactly
+   frozen; only the step counter advances;
+3. sweeping FaultParams VALUES through the compiled step never re-traces;
+4. DistScenarioBank threads a fault bank: per-scenario skipped/participant
+   metrics on the 2-D (scenario × client) mesh.
+
+Run: python dist_faults.py   (sets its own XLA_FLAGS)
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+import repro.core.hota_step as hota_step
+from repro.common.config import FLConfig, ModelConfig, TrainConfig
+from repro.core.channel import fault_params
+from repro.core.hota_step import make_hota_train_step
+from repro.models.model import build_model
+
+C, N, B, D = 2, 2, 4, 256
+MAXC = 8
+
+model = build_model(ModelConfig(family="mlp", compute_dtype="float32"))
+tcfg = TrainConfig(lr=1e-3)
+devs = np.array(jax.devices()).reshape(C, N)
+mesh = Mesh(devs, ("cluster", "client"))
+
+key = jax.random.PRNGKey(0)
+x = jax.random.normal(jax.random.fold_in(key, 1), (C * N * B, D))
+y = jax.random.randint(jax.random.fold_in(key, 2), (C * N * B,), 0, MAXC)
+
+base = dict(n_clusters=C, n_clients=N, weighting="fedgradnorm",
+            noise_std=0.1, tau_h=1, use_pallas_ota=True)
+
+
+def make(fl):
+    init_fn, step_fn, state_specs, batch_spec = make_hota_train_step(
+        model, mesh, fl, tcfg, loss_kind="cls", n_out=MAXC)
+    state = init_fn(jax.random.PRNGKey(123))
+    state = jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+        state, state_specs, is_leaf=lambda z: isinstance(z, P))
+    xb = jax.device_put(x, NamedSharding(mesh, batch_spec[0]))
+    yb = jax.device_put(y, NamedSharding(mesh, batch_spec[1]))
+    return jax.jit(step_fn), state, xb, yb
+
+
+def drive(jstep, state, xb, yb, faults=None, n_steps=2):
+    ms = []
+    for s in range(n_steps):
+        if faults is None:
+            state, m = jstep(state, xb, yb, jax.random.PRNGKey(7 + s))
+        else:
+            state, m = jstep(state, xb, yb, jax.random.PRNGKey(7 + s),
+                             None, faults)
+        ms.append(m)
+    # drain before the caller launches another chain: concurrent in-flight
+    # executables with rendezvous collectives can exhaust the forced-CPU
+    # device thread pool and deadlock (see dist_scenario_bank.py)
+    jax.block_until_ready(state)
+    return state, ms
+
+
+# --- 1. zero-rate fault path ≈ legacy trajectory ----------------------------
+jstep_l, st_l, xb, yb = make(FLConfig(**base))
+st_legacy, ms_legacy = drive(jstep_l, st_l, xb, yb)
+fl_f = FLConfig(faults=True, **base)
+jstep_f, st_f, xb, yb = make(fl_f)
+st_zero, ms_zero = drive(jstep_f, st_f, xb, yb)
+for (ka, a), (_, b) in zip(
+        jax.tree_util.tree_flatten_with_path(st_legacy)[0],
+        jax.tree_util.tree_flatten_with_path(st_zero)[0]):
+    np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-7,
+        err_msg=f"zero-rate faults diverged at {jax.tree_util.keystr(ka)}")
+assert float(ms_zero[-1]["skipped"]) == 0.0, ms_zero[-1]
+assert float(ms_zero[-1]["n_participants"]) == C * N, ms_zero[-1]
+print("zero-rate parity OK")
+
+# --- 2. total blackout: bit-exact identity round ----------------------------
+fp_black = fault_params(FLConfig(faults=True, blackout_rate=1.0, **base))
+st_black, ms_black = drive(jstep_f, st_f, xb, yb, faults=fp_black)
+assert all(float(m["skipped"]) == 1.0 for m in ms_black), ms_black
+assert float(ms_black[-1]["n_participants"]) == 0.0, ms_black[-1]
+for (ka, a), (_, b) in zip(
+        jax.tree_util.tree_flatten_with_path(st_f)[0],
+        jax.tree_util.tree_flatten_with_path(st_black)[0]):
+    path = jax.tree_util.keystr(ka)
+    if "step" in path:
+        continue
+    np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b),
+        err_msg=f"blackout round mutated state at {path}")
+assert int(st_black.step) == int(st_f.step) + 2
+print("blackout identity OK")
+
+# --- 3. fault VALUES never re-trace -----------------------------------------
+fp_part = fault_params(FLConfig(faults=True, dropout_rate=0.5,
+                                straggler_rate=0.5, **base))
+n0 = len(hota_step.TRACE_LOG)
+st_cur = st_f
+for i, fp in enumerate([fp_part, fp_black, fault_params(fl_f)]):
+    st_cur, _ = jstep_f(st_cur, xb, yb, jax.random.PRNGKey(20 + i),
+                        None, fp)
+assert len(hota_step.TRACE_LOG) == n0, (n0, len(hota_step.TRACE_LOG))
+jax.block_until_ready(st_cur)      # drain before the 2-D-mesh bank phase
+print("fault no-retrace OK")
+
+# --- 4. DistScenarioBank fault bank on the 2-D mesh -------------------------
+from repro.core.sweep import DistScenarioBank
+from repro.launch.mesh import make_dist_scenario_mesh
+
+mesh2 = make_dist_scenario_mesh(1, 2)        # 2 scenario rows × (1 × 2)
+fl_d = FLConfig(n_clusters=1, n_clients=2, faults=True, noise_std=0.1,
+                weighting="fedgradnorm", tau_h=1)
+bank = DistScenarioBank(model, fl_d, tcfg,
+                        [dict(dropout_rate=0.0), dict(blackout_rate=1.0)],
+                        mesh2, loss_kind="cls", n_out=MAXC)
+states = bank.init(jax.random.PRNGKey(0))
+tok = jax.random.normal(jax.random.PRNGKey(1), (2 * B, D))
+lab = jax.random.randint(jax.random.PRNGKey(2), (2 * B,), 0, MAXC)
+for r in range(2):
+    states, dm = bank.step(states, tok, lab, jax.random.PRNGKey(3 + r))
+assert dm["skipped"].shape == (2,), dm["skipped"].shape
+assert float(dm["skipped"][0]) == 0.0 and float(dm["skipped"][1]) == 1.0, \
+    np.asarray(dm["skipped"])
+assert float(dm["n_participants"][0]) == 2.0, np.asarray(dm["n_participants"])
+print("dist fault bank OK")
+
+print("DIST_FAULTS_OK")

@@ -58,6 +58,11 @@ def drive(bank, states, t0, t1, collect=False):
     for t in range(t0, t1):
         states, m = bank.step(states, xs[t], ys[t], keys[t])
         ms.append(m)
+    # drain before the next drive: banks on different meshes share host
+    # devices, and two in-flight executables with rendezvous collectives
+    # can interleave their launches in different orders per device —
+    # a deadlock on the forced-CPU backend, not a correctness property
+    jax.block_until_ready(states)
     return (states, ms) if collect else states
 
 
@@ -110,6 +115,9 @@ for s, sc in enumerate(scenarios):
         xb = jax.device_put(xs[t], NamedSharding(fl_mesh, batch_spec[0]))
         yb = jax.device_put(ys[t], NamedSharding(fl_mesh, batch_spec[1]))
         state, _ = jstep(state, xb, yb, keys[t], chan_s)
+    # drain the oracle chain before scenario_state's cross-shard gathers
+    # launch — same in-flight-collectives hazard as drive() above
+    jax.block_until_ready(state)
     states_close(bank2.scenario_state(st2, s), state,
                  f"bank scenario {s} vs 1-D oracle", atol=1e-5)
 

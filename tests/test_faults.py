@@ -1,0 +1,439 @@
+"""Fault injection + graceful degradation (DESIGN.md §3.14).
+
+Covers the PART_FOLD reserved stream domain (§4), the |M∩P| estimator's
+bit-exact no-fault identity, zero-participant / guard-tripped rounds
+degrading to identity steps in both sim engines, CRN and monotone
+coupling of the participation draws, fault-knob no-retrace, the
+RoundGuard checkpoint recovery loop, and the atomic checkpoint save.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import FLConfig, ModelConfig, TrainConfig
+from repro.core import ota
+from repro.core.channel import FaultParams, fault_params, stack_fault_params
+
+C, N = 2, 2
+
+
+def _key_data(k):
+    return tuple(np.asarray(jax.random.key_data(k)).tolist()
+                 if hasattr(jax.random, "key_data")
+                 else np.asarray(k).tolist())
+
+
+def _mk_sim(fl):
+    from repro.core.sim import HotaSim
+    from repro.models.model import build_model
+    model = build_model(ModelConfig(family="mlp"))
+    return HotaSim(model, fl, TrainConfig(lr=3e-4), [4, 4])
+
+
+def _batch(key=None):
+    if key is None:
+        return jnp.zeros((C, N, 4, 256)), jnp.zeros((C, N, 4), jnp.int32)
+    x = jax.random.normal(jax.random.fold_in(key, 0), (C, N, 4, 256))
+    y = jax.random.randint(jax.random.fold_in(key, 1), (C, N, 4), 0, 4)
+    return x, y
+
+
+def _leaves_except_step(state):
+    return [(jax.tree_util.keystr(kp), l) for kp, l in
+            jax.tree_util.tree_flatten_with_path(state)[0]
+            if "step" not in jax.tree_util.keystr(kp)]
+
+
+# ======================================================== PART_FOLD (§4)
+
+def test_part_fold_reserved_and_disjoint():
+    """PART_FOLD is a pinned reserved fold domain, disjoint from every
+    channel stream fold — resampling participation can never perturb the
+    gain/noise streams (CRN across fault scenarios)."""
+    from repro.core.hota_slab import PACKED_OMEGA_FOLD
+    assert ota.PART_FOLD == 0x7FFF0004
+    k = jax.random.PRNGKey(3)
+    pk = ota.participation_key(k)
+    assert _key_data(pk) == _key_data(jax.random.fold_in(k, ota.PART_FOLD))
+    reserved = {ota.NOISE_FOLD, ota.PACKED_HEAD_FOLD, ota.PACKED_TAIL_FOLD,
+                ota.PACKED_SECTION_FOLD_BASE, ota.SIM_CHAN_FOLD,
+                ota.PART_FOLD, PACKED_OMEGA_FOLD}
+    assert len(reserved) == 7                    # all domains distinct
+    for fold in sorted(reserved - {ota.PART_FOLD}) + [0, 1, 17, 999]:
+        assert _key_data(jax.random.fold_in(k, fold)) != _key_data(pk)
+    # section folds BASE+s can never reach PART_FOLD for any real layout
+    assert not (ota.PACKED_SECTION_FOLD_BASE <= ota.PART_FOLD
+                < ota.PACKED_SECTION_FOLD_BASE + 0xF0)
+
+
+def test_sim_step_draws_participation_from_reserved_fold(monkeypatch):
+    """Behavioral pin: a faulted sim round calls ota.participation_key
+    on the round key exactly once; a fault-free round never does."""
+    calls = []
+    orig = ota.participation_key
+
+    def spy(k):
+        calls.append(k)
+        return orig(k)
+
+    monkeypatch.setattr(ota, "participation_key", spy)
+    x, y = _batch()
+    sim = _mk_sim(FLConfig(n_clusters=C, n_clients=N, faults=True))
+    sim.step(sim.init(jax.random.PRNGKey(0)), x, y, jax.random.PRNGKey(9))
+    assert len(calls) == 1
+    calls.clear()
+    sim0 = _mk_sim(FLConfig(n_clusters=C, n_clients=N))
+    sim0.step(sim0.init(jax.random.PRNGKey(0)), x, y, jax.random.PRNGKey(9))
+    assert len(calls) == 0
+
+
+# ========================================== participation draw semantics
+
+def test_draw_participation_no_fault_identity():
+    fp = fault_params(FLConfig(n_clusters=C, n_clients=N, faults=True))
+    p = ota.draw_participation(jax.random.PRNGKey(0), fp, C, N)
+    np.testing.assert_array_equal(np.asarray(p.part), np.ones((C, N)))
+    np.testing.assert_array_equal(np.asarray(p.stale), np.zeros((C, N)))
+    np.testing.assert_array_equal(np.asarray(p.live), np.ones((C,)))
+    assert float(p.n_eff) == N and float(p.total) == C * N
+
+
+def test_draw_participation_gate_off_ignores_rates():
+    """faults_on < 0.5 (the faults=False baked FaultParams) makes every
+    rate inert — full participation no matter the knob values."""
+    fp = fault_params(FLConfig(n_clusters=C, n_clients=N))._replace(
+        dropout=jnp.float32(1.0), blackout=jnp.float32(1.0))
+    p = ota.draw_participation(jax.random.PRNGKey(0), fp, C, N)
+    np.testing.assert_array_equal(np.asarray(p.part), np.ones((C, N)))
+
+
+def test_draw_participation_monotone_coupling():
+    """Same key, rising dropout rate: the participant set only shrinks
+    (the draws are shared uniforms compared against the rate), so fault
+    sweeps are monotone-coupled — variance-reduced like the CRN channel
+    sweeps."""
+    key = jax.random.PRNGKey(7)
+    base = FLConfig(n_clusters=4, n_clients=8, faults=True)
+    prev = None
+    for rate in (0.0, 0.3, 0.6, 0.9, 1.0):
+        fp = fault_params(dataclasses.replace(base, dropout_rate=rate))
+        part = np.asarray(ota.draw_participation(key, fp, 4, 8).part)
+        if prev is not None:
+            assert np.all(part <= prev), (rate, part, prev)
+        prev = part
+    assert prev.sum() == 0                       # rate 1.0: nobody left
+
+
+def test_participation_resampling_preserves_channel_streams():
+    """CRN: the channel key and participation key live in disjoint fold
+    domains of the SAME round key, so changing fault rates moves the
+    participation draw but not one bit of the gain/noise streams."""
+    key = jax.random.PRNGKey(11)
+    ck = ota.sim_channel_key(key)
+    assert _key_data(ck) != _key_data(ota.participation_key(key))
+    fl = FLConfig(n_clusters=C, n_clients=N, faults=True)
+    fp_a = fault_params(fl)
+    fp_b = fault_params(dataclasses.replace(fl, dropout_rate=0.7,
+                                            blackout_rate=0.3))
+    pa = ota.draw_participation(key, fp_a, C, N)
+    pb = ota.draw_participation(key, fp_b, C, N)
+    assert not np.array_equal(np.asarray(pa.part), np.asarray(pb.part))
+    # the underlying uniforms are rate-independent: rate 0 vs rate 1
+    # draw the SAME uniforms (verified via the monotone coupling above),
+    # and the channel key is untouched by construction
+    assert _key_data(ota.sim_channel_key(key)) == _key_data(ck)
+
+
+def _grad_tree(key, scale=1.0):
+    ks = [jax.random.fold_in(key, i) for i in range(4)]
+    return {"final": {"w": jax.random.normal(ks[0], (C, N, 40, 8)) * scale,
+                      "b": jax.random.normal(ks[1], (C, N, 8)) * scale},
+            "trunk": {"fc0": {
+                "w": jax.random.normal(ks[2], (C, N, 30, 50)) * scale,
+                "b": jax.random.normal(ks[3], (C, N, 50)) * scale}}}
+
+
+def _packer(tree):
+    from repro.common.flatpack import packer_for
+    template = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape[2:], l.dtype), tree)
+    return packer_for(template, tail="final", sections="toplevel")
+
+
+def test_all_blocked_and_all_dropped_is_zero():
+    """Every cluster dead (live = 0) ⇒ the |M∩P| estimate is exactly 0
+    in both the per-leaf estimator and the client-folded kernel."""
+    from repro.core.channel import channel_params
+    key = jax.random.PRNGKey(0)
+    g = _grad_tree(key)
+    chan = channel_params(FLConfig(n_clusters=C, n_clients=N,
+                                   noise_std=0.1))
+    live0, n_eff0 = jnp.zeros((C,)), jnp.float32(0.0)
+    wg = jax.tree.map(lambda l: jnp.sum(l, axis=1), g)   # (C, ...) sums
+    out = ota.ota_aggregate_tree(key, wg, chan, N, live=live0,
+                                 n_eff=n_eff0)
+    for leaf in jax.tree.leaves(out):
+        np.testing.assert_array_equal(np.asarray(leaf),
+                                      np.zeros_like(np.asarray(leaf)))
+    got = ota.ota_aggregate_client_folded(key, g, jnp.ones((C, N)), chan,
+                                          N, _packer(g), live=live0,
+                                          n_eff=n_eff0)
+    for leaf in jax.tree.leaves(got):
+        np.testing.assert_array_equal(np.asarray(leaf),
+                                      np.zeros_like(np.asarray(leaf)))
+
+
+def test_estimator_full_participation_bit_exact():
+    """live=1, n_eff=N is bit-identical to the legacy eq.-10 estimator —
+    the generalization costs nothing when no fault fires."""
+    from repro.core.channel import channel_params
+    key = jax.random.PRNGKey(5)
+    g = _grad_tree(key)
+    chan = channel_params(FLConfig(n_clusters=C, n_clients=N,
+                                   noise_std=0.2, h_threshold=0.1))
+    p_w = jax.random.uniform(jax.random.fold_in(key, 2), (C, N), None,
+                             0.5, 1.5)
+    packer = _packer(g)
+    legacy = ota.ota_aggregate_client_folded(key, g, p_w, chan, N, packer)
+    general = ota.ota_aggregate_client_folded(
+        key, g, p_w, chan, N, packer, live=jnp.ones((C,)),
+        n_eff=jnp.float32(N))
+    for a, b in zip(jax.tree.leaves(legacy), jax.tree.leaves(general)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ============================================ degradation: identity step
+
+@pytest.mark.parametrize("use_pallas_ota", [False, True],
+                         ids=["per-leaf", "slab"])
+def test_zero_participant_round_is_identity(use_pallas_ota):
+    """Total blackout ⇒ the round is a bit-exact identity step in BOTH
+    sim engines: params, Adam moments, FGN state all frozen; only the
+    step counter advances (mirrors the fgn_on gate-off contract)."""
+    fl = FLConfig(n_clusters=C, n_clients=N, faults=True, noise_std=0.1,
+                  use_pallas_ota=use_pallas_ota)
+    sim = _mk_sim(fl)
+    st0 = sim.init(jax.random.PRNGKey(0))
+    x, y = _batch(jax.random.PRNGKey(1))
+    fp = fault_params(dataclasses.replace(fl, blackout_rate=1.0))
+    st, m = sim.step(st0, x, y, jax.random.PRNGKey(2), faults=fp)
+    assert float(m["skipped"]) == 1.0
+    assert float(m["n_participants"]) == 0.0
+    for (pa, a), (_, b) in zip(_leaves_except_step(st0),
+                               _leaves_except_step(st)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"blackout mutated {pa}")
+    assert int(st.step) == int(st0.step) + 1
+
+
+@pytest.mark.parametrize("use_pallas_ota", [False, True],
+                         ids=["per-leaf", "slab"])
+def test_guard_tripped_round_is_identity(use_pallas_ota):
+    """spike_norm=0 trips the divergence guard on any non-zero gradient:
+    full participation, yet the round degrades to the same bit-exact
+    identity step."""
+    fl = FLConfig(n_clusters=C, n_clients=N, faults=True,
+                  use_pallas_ota=use_pallas_ota, spike_norm=0.0)
+    sim = _mk_sim(fl)
+    st0 = sim.init(jax.random.PRNGKey(0))
+    x, y = _batch(jax.random.PRNGKey(1))
+    st, m = sim.step(st0, x, y, jax.random.PRNGKey(2))
+    assert float(m["skipped"]) == 1.0
+    assert float(m["n_participants"]) == C * N   # the guard, not faults
+    for (pa, a), (_, b) in zip(_leaves_except_step(st0),
+                               _leaves_except_step(st)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"guard trip mutated {pa}")
+
+
+def test_zero_rate_faults_matches_legacy():
+    """The fault path at zero rates reproduces the legacy (faults=False)
+    trajectory: mathematically identical (live=1, n_eff=N, discount=1 is
+    the eq.-10 estimator, and the kernel layer IS bit-exact — see
+    test_estimator_full_participation_bit_exact), to float tolerance
+    end-to-end because the fault trace adds the guard-sum + freeze
+    select, which changes XLA's fusion choices at the ulp level."""
+    x, y = _batch(jax.random.PRNGKey(1))
+    fl0 = FLConfig(n_clusters=C, n_clients=N, noise_std=0.1)
+    fl1 = dataclasses.replace(fl0, faults=True)
+    sims = [_mk_sim(fl0), _mk_sim(fl1)]
+    states = [s.init(jax.random.PRNGKey(0)) for s in sims]
+    for r in range(2):
+        states = [s.step(st, x, y, jax.random.PRNGKey(2 + r))[0]
+                  for s, st in zip(sims, states)]
+    legacy = {p: l for p, l in _leaves_except_step(states[0])}
+    faulted = {p: l for p, l in _leaves_except_step(states[1])}
+    for p, l in legacy.items():
+        np.testing.assert_allclose(
+            np.asarray(l), np.asarray(faulted[p]), rtol=1e-5, atol=1e-7,
+            err_msg=f"zero-rate fault path diverged at {p}")
+
+
+def test_fault_knob_values_never_retrace():
+    """FaultParams are traced knobs: sweeping VALUES through one jitted
+    sim step re-traces nothing (the §3.11 contract, extended to §3.14)."""
+    fl = FLConfig(n_clusters=C, n_clients=N, faults=True)
+    sim = _mk_sim(fl)
+    st = sim.init(jax.random.PRNGKey(0))
+    x, y = _batch()
+    traces = []
+
+    @jax.jit
+    def step(st, x, y, k, fp):
+        traces.append(1)
+        return sim.step_with_channel(st, x, y, k, sim.chan, faults=fp)
+
+    fps = [fault_params(dataclasses.replace(fl, dropout_rate=r,
+                                            spike_norm=s))
+           for r, s in ((0.0, float("inf")), (0.5, 10.0), (1.0, 0.0))]
+    for i, fp in enumerate(fps):
+        st2, _ = step(st, x, y, jax.random.PRNGKey(i), fp)
+    assert len(traces) == 1, f"fault values re-traced: {len(traces)} traces"
+
+
+# ======================================================== scenario banks
+
+def test_fault_scenario_bank_sweeps_in_one_trace():
+    from repro.core.sweep import ScenarioBank
+    fl = FLConfig(n_clusters=C, n_clients=N, faults=True)
+    sim = _mk_sim(fl)
+    bank = ScenarioBank(sim, [dict(dropout_rate=0.0),
+                              dict(blackout_rate=1.0),
+                              fault_params(dataclasses.replace(
+                                  fl, straggler_rate=1.0))])
+    states = bank.init(jax.random.PRNGKey(0))
+    x, y = _batch(jax.random.PRNGKey(1))
+    states, m = bank.step(states, x, y, jax.random.PRNGKey(2))
+    assert m["skipped"].shape == (3,)
+    assert float(m["skipped"][0]) == 0.0
+    assert float(m["skipped"][1]) == 1.0         # blackout: all skipped
+    assert float(m["n_participants"][0]) == C * N
+
+
+def test_fault_knob_rejected_on_gateless_bank():
+    """A scenario varying a fault knob over a faults=False base would be
+    silently inert — the bank refuses to build it."""
+    from repro.core.sweep import ScenarioBank
+    sim = _mk_sim(FLConfig(n_clusters=C, n_clients=N))
+    with pytest.raises(ValueError, match="faults=True"):
+        ScenarioBank(sim, [dict(dropout_rate=0.5)])
+    with pytest.raises(ValueError, match="faults=True"):
+        ScenarioBank(sim, [fault_params(
+            FLConfig(n_clusters=C, n_clients=N, faults=True))])
+
+
+def test_stack_fault_params_banks_like_channel_params():
+    fl = FLConfig(n_clusters=C, n_clients=N, faults=True)
+    bank = stack_fault_params([
+        fault_params(dataclasses.replace(fl, dropout_rate=r))
+        for r in (0.0, 0.25, 0.5)])
+    assert bank.dropout.shape == (3,)
+    np.testing.assert_allclose(np.asarray(bank.dropout),
+                               [0.0, 0.25, 0.5])
+    assert isinstance(bank, FaultParams)
+
+
+# ========================================= RoundGuard checkpoint recovery
+
+def test_round_guard_restores_after_patience(tmp_path):
+    """Integration: a wedged run (spike guard trips every round) is
+    rolled back to the latest checkpoint after K consecutive skips."""
+    from repro.checkpoint.store import save_checkpoint
+    from repro.launch.train import RoundGuard
+    fl = FLConfig(n_clusters=C, n_clients=N, faults=True, spike_norm=0.0)
+    sim = _mk_sim(fl)
+    st0 = sim.init(jax.random.PRNGKey(0))
+    x, y = _batch(jax.random.PRNGKey(1))
+    ckpt = str(tmp_path / "ck")
+    save_checkpoint(ckpt, 0, jax.tree.map(np.asarray, st0))
+    guard = RoundGuard(ckpt, jax.eval_shape(sim.init,
+                                            jax.random.PRNGKey(0)),
+                       patience=3)
+    st = st0
+    restores = []
+    for r in range(4):
+        st, m = sim.step(st, x, y, jax.random.PRNGKey(2 + r))
+        assert float(m["skipped"]) == 1.0
+        st, restored = guard.observe(m["skipped"], st)
+        restores.append(restored)
+    assert restores == [False, False, True, False]
+    assert guard.n_restores == 1
+    # st is the state AFTER one more skipped round on the restored
+    # checkpoint copy: compare against st0 advanced by one identity step
+    st_ref, _ = sim.step(st0, x, y, jax.random.PRNGKey(2 + 3))
+    for (pa, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(st_ref)[0],
+            jax.tree_util.tree_flatten_with_path(st)[0]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"post-restore at {pa}")
+
+
+def test_round_guard_clean_round_resets_streak(tmp_path):
+    from repro.launch.train import RoundGuard
+    guard = RoundGuard(str(tmp_path / "none"), {"a": np.zeros(2)},
+                       patience=2)
+    s = {"a": np.ones(2)}
+    for skipped in (1.0, 0.0, 1.0):
+        out, restored = guard.observe(skipped, s)
+        assert out is s and not restored
+    assert guard.streak == 1
+    # no checkpoint on disk: hitting patience keeps the live state
+    out, restored = guard.observe(1.0, s)
+    assert out is s and not restored and guard.streak == 0
+
+
+# ============================================== atomic checkpoint saves
+
+def test_checkpoint_save_is_atomic_under_crash(tmp_path, monkeypatch):
+    """A crash mid-save must leave no dir that latest_step/restore would
+    pick up — the manifest lands last inside a temp dir and one
+    os.replace publishes it."""
+    import repro.checkpoint.store as store
+    d = str(tmp_path / "ck")
+    tree = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    store.save_checkpoint(d, 1, tree)
+    assert store.latest_step(d) == 1
+
+    real_packb = store.msgpack.packb
+
+    def boom(*a, **kw):
+        raise RuntimeError("simulated crash before manifest write")
+
+    monkeypatch.setattr(store.msgpack, "packb", boom)
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        store.save_checkpoint(d, 2, {"w": tree["w"] * 2})
+    # torn save: arr files exist in the temp dir, but no step_2 dir and
+    # latest_step still reports the last COMPLETE checkpoint
+    assert not os.path.isdir(os.path.join(d, "step_00000002"))
+    assert store.latest_step(d) == 1
+    restored = store.restore_checkpoint(d, 1, tree)
+    np.testing.assert_array_equal(restored["w"], tree["w"])
+
+    monkeypatch.setattr(store.msgpack, "packb", real_packb)
+    store.save_checkpoint(d, 2, {"w": tree["w"] * 2})   # reuses temp dir
+    assert store.latest_step(d) == 2
+    got = store.restore_checkpoint(d, 2, tree)
+    np.testing.assert_array_equal(got["w"], tree["w"] * 2)
+
+
+def test_latest_step_skips_manifestless_dirs(tmp_path):
+    import repro.checkpoint.store as store
+    d = str(tmp_path / "ck")
+    store.save_checkpoint(d, 3, {"w": np.zeros(2, np.float32)})
+    os.makedirs(os.path.join(d, "step_00000009"))    # torn pre-atomic dir
+    assert store.latest_step(d) == 3
+
+
+# ================================================= dist engine (slow)
+
+@pytest.mark.slow
+def test_dist_faults():
+    """Subprocess (8 host devices): zero-rate parity, blackout identity,
+    fault no-retrace, and the fault scenario bank on the dist engine."""
+    from tests.test_dist import _run
+    out = _run("dist_faults.py")
+    assert "DIST_FAULTS_OK" in out
