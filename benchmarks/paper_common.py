@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.config import FLConfig
+from repro.common.config import FLConfig, ModelConfig
 from repro.core.paper_setup import paper_mlp_setup
 from repro.core.sweep import ScenarioBank, ShardedScenarioBank
 from repro.data.radcom import TASKS
@@ -77,6 +77,7 @@ def run_sweep(
     force: bool = False,
     log_every: int = 50,
     sharded: Optional[bool] = None,
+    tune: bool = True,
 ) -> Dict[str, Dict]:
     """Run ALL experiments as one compiled ScenarioBank sweep.
 
@@ -86,6 +87,10 @@ def run_sweep(
     exactly what the old sequential runner did one scenario at a time.
     Results are cached per scenario under RESULTS_DIR. ``sharded`` picks
     the bank flavor (None = auto by device count and S — see make_bank).
+    ``tune`` runs the section-layout autotuner (DESIGN.md §3.13) on the
+    paper MLP template before the sweep compiles; its calibration is
+    persisted (keyed by template hash), so only the first sweep on a
+    machine pays for it.
     """
     os.makedirs(RESULTS_DIR, exist_ok=True)
     paths = {n: os.path.join(RESULTS_DIR, n + ".json") for n in experiments}
@@ -97,6 +102,16 @@ def run_sweep(
         return out
 
     base_fl = FLConfig(n_clusters=n_clusters, n_clients=n_clients)
+    if tune:
+        from repro.common.layout_tune import layout_of, tuned_fl
+        from repro.models.model import build_model
+        from repro.models.params import abstract_params
+
+        mlp = build_model(ModelConfig(family="mlp"))
+        template = {"final": abstract_params(mlp.final_specs()),
+                    "trunk": abstract_params(mlp.trunk_specs())}
+        base_fl = tuned_fl(base_fl, template)
+        print(f"  layout: {layout_of(base_fl).describe()}", flush=True)
     sim, batcher = paper_mlp_setup(base_fl, batch=batch, seed=seed)
     names = list(experiments)
     specs = [dict(experiments[n]) for n in names]

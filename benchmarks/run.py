@@ -55,6 +55,11 @@ def main() -> None:
                     help="fault-injection rows only (round throughput vs "
                          "dropout rate on the slab sim engine, DESIGN.md "
                          "§3.14); with --json writes BENCH_faults.json")
+    ap.add_argument("--sample", action="store_true",
+                    help="client-sampling rows only (round throughput vs "
+                         "population size at fixed C*N, plus the streaming "
+                         "aggregator, DESIGN.md §3.15); with --json writes "
+                         "BENCH_sample.json")
     ap.add_argument("--dist", action="store_true",
                     help="distributed-step rows only (slab-native vs "
                          "per-leaf engines + the 2-D scenario × client "
@@ -116,6 +121,22 @@ def main() -> None:
                     for n, us, d in frows]}, f, indent=1)
         print("name,us_per_call,derived")
         for name, us, derived in frows:
+            print(f"{name},{us:.1f},{derived}")
+        return
+
+    if args.sample:
+        # --- client sampling: rounds/sec vs population size (§3.15) ------
+        from benchmarks.sample_bench import sample_rows
+        srows = sample_rows(smoke=args.smoke)
+        if args.json:
+            path = ("BENCH_sample.json" if args.json == "BENCH_kernels.json"
+                    else args.json)
+            with open(path, "w") as f:
+                json.dump({"rows": [
+                    {"name": n, "us_per_call": round(us, 1), "derived": d}
+                    for n, us, d in srows]}, f, indent=1)
+        print("name,us_per_call,derived")
+        for name, us, derived in srows:
             print(f"{name},{us:.1f},{derived}")
         return
 

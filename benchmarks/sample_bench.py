@@ -1,0 +1,80 @@
+"""Client-sampling benchmark (DESIGN.md §3.15): round throughput vs
+population size at fixed C·N.
+
+Two claims measured:
+
+* rounds/sec is FLAT in the population size: a round's compute is the
+  C·N slot view regardless of how many clients the ``ClientBank`` holds
+  — the only population-dependent work is the gather/scatter, which is
+  O(bank bytes) memory traffic, tiny next to the round itself;
+* the streaming aggregator trades the all-C channel materialization for
+  a scan at small-C-comparable wall time — the win is peak memory (the
+  HLO pin in tests/test_sampling.py), not speed, so the row documents
+  the cost of turning it on.
+
+Rows time jitted rounds (CPU wall; relative numbers are the point) for
+the plain sim baseline, ``SampledHotaSim`` across populations, and the
+``ota_streaming=True`` sim engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+
+
+def _block(x):
+    jax.block_until_ready(jax.tree.leaves(x)[0])
+
+
+def _time_rounds(step, state, x, y, rounds):
+    state, m = step(state, x, y, jax.random.PRNGKey(1))
+    _block(state)                       # compile + first round
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        state, m = step(state, x, y, jax.random.PRNGKey(2 + r))
+    _block(state)
+    per_round = (time.perf_counter() - t0) / rounds
+    return per_round, m
+
+
+def sample_rows(smoke: bool = False):
+    from repro.common.config import FLConfig, ModelConfig, TrainConfig
+    from repro.core.sampling import SampledHotaSim
+    from repro.core.sim import HotaSim
+    from repro.models.model import build_model
+
+    C, N, B = (2, 2, 4) if smoke else (4, 3, 8)
+    rounds = 3 if smoke else 10
+    populations = (1, 8, 64) if smoke else (1, 16, 256)
+    model = build_model(ModelConfig(family="mlp"))
+    tcfg = TrainConfig(lr=3e-4)
+    fl = FLConfig(n_clusters=C, n_clients=N, noise_std=0.1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (C, N, B, 256))
+    y = jax.random.randint(jax.random.PRNGKey(2), (C, N, B), 0, 4)
+
+    rows = []
+
+    sim0 = HotaSim(model, fl, tcfg, [4] * N)
+    per0, _ = _time_rounds(sim0.step, sim0.init(jax.random.PRNGKey(0)),
+                           x, y, rounds)
+    rows.append(("sample_off_baseline", per0 * 1e6,
+                 f"rounds_per_s={1.0 / per0:.1f}"))
+
+    for m_pop in populations:
+        samp = SampledHotaSim(model, fl, tcfg, [4] * N, population=m_pop)
+        per, _ = _time_rounds(samp.step, samp.init(jax.random.PRNGKey(0)),
+                              x, y, rounds)
+        rows.append((f"sample_population_{m_pop * C * N}", per * 1e6,
+                     f"rounds_per_s={1.0 / per:.1f},"
+                     f"vs_baseline={per / per0:.2f}x"))
+
+    fl_s = dataclasses.replace(fl, ota_streaming=True)
+    sim_s = HotaSim(model, fl_s, tcfg, [4] * N)
+    per, _ = _time_rounds(sim_s.step, sim_s.init(jax.random.PRNGKey(0)),
+                          x, y, rounds)
+    rows.append(("sample_streaming_agg", per * 1e6,
+                 f"rounds_per_s={1.0 / per:.1f},"
+                 f"vs_baseline={per / per0:.2f}x"))
+    return rows

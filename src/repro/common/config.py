@@ -145,6 +145,14 @@ class FLConfig:
     # repro.common.layout_tune.apply_layout, not by hand.
     ota_sections: str = "toplevel"    # "toplevel" | "tail"
     min_section_rows: int = 0         # coalescing threshold (slab rows)
+    # Streaming aggregation (DESIGN.md §3.15) — static, sim engine only:
+    # fold arriving cluster contributions into the slab running sum one
+    # cluster at a time (lax.scan over repro.core.ota.ota_stream_fold)
+    # instead of drawing every cluster's streams at once. Same streams,
+    # same math (equal up to float associativity — the cross-cluster
+    # reduction order changes); peak aggregation memory drops from
+    # (C × section) to one cluster's contribution + the running sum.
+    ota_streaming: bool = False
     microbatches: int = 1             # gradient accumulation count
     # Fault injection (DESIGN.md §3.14). ``faults`` is the one static gate:
     # False keeps the legacy trace bit-exact (no participation draws, no

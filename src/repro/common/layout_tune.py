@@ -26,6 +26,10 @@ draw. This module makes the choice once, explicitly, and persistable:
 """
 from __future__ import annotations
 
+import hashlib
+import json
+import os
+import tempfile
 import time
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
@@ -171,24 +175,115 @@ def calibrate_layout(template, n_clusters: int, n_clients: int,
 
 _TUNE_CACHE: Dict[Any, LayoutChoice] = {}
 
+# default on-disk calibration cache (override with REPRO_LAYOUT_CACHE;
+# "" disables persistence entirely)
+DEFAULT_CACHE_PATH = os.path.join(
+    os.path.expanduser("~"), ".cache", "repro", "layout_tune.json")
+
+
+def template_hash(template, n_clusters: int, n_clients: int,
+                  thresholds: Tuple[int, ...] = DEFAULT_THRESHOLDS,
+                  include_perleaf: bool = True) -> str:
+    """Stable digest of everything a calibration result depends on: the
+    template's tree structure + leaf shapes/dtypes, the (C, N) topology
+    and the candidate set. This is the persisted cache key — NOT the
+    leaf values, which the synthetic calibration gradients ignore."""
+    leaves, treedef = jax.tree.flatten(template)
+    desc = repr((str(treedef),
+                 tuple((tuple(l.shape), jnp.dtype(l.dtype).name)
+                       for l in leaves),
+                 int(n_clusters), int(n_clients), tuple(thresholds),
+                 bool(include_perleaf)))
+    return hashlib.sha256(desc.encode()).hexdigest()[:16]
+
+
+def _load_disk_cache(path: str) -> Dict[str, Any]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def _store_disk_cache(path: str, entries: Dict[str, Any]) -> None:
+    """Atomic read-merge-write (tmp + rename), so concurrent tuners —
+    parallel bench shards, a sweep next to a trainer — never tear the
+    file; last writer wins per key, which is fine for measurements."""
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        merged = dict(_load_disk_cache(path), **entries)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                                   prefix=".layout_tune.")
+        with os.fdopen(fd, "w") as f:
+            json.dump(merged, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass                       # persistence is best-effort only
+
 
 def tune_layout(template, n_clusters: int, n_clients: int,
                 thresholds: Tuple[int, ...] = DEFAULT_THRESHOLDS,
                 iters: int = 3,
-                include_perleaf: bool = True) -> LayoutChoice:
+                include_perleaf: bool = True,
+                cache_path: Optional[str] = None) -> LayoutChoice:
     """Cached one-shot calibration: the fastest LayoutChoice for this
     template at this (C, N) topology. The cache key is the template's
     static structure — a sweep bank or restarted trainer re-uses the
-    measurement instead of re-timing."""
+    measurement instead of re-timing.
+
+    Results also persist on disk keyed by ``template_hash`` (JSON at
+    ``cache_path``, default ``DEFAULT_CACHE_PATH`` / the
+    ``REPRO_LAYOUT_CACHE`` env var; empty string disables), so the
+    calibration survives process restarts — the default-on wiring in
+    ``launch/train.py`` and the benchmark sweeps costs one bench per
+    template per MACHINE, not per run."""
     leaves, treedef = jax.tree.flatten(template)
     key = (treedef,
            tuple((tuple(l.shape), jnp.dtype(l.dtype).name) for l in leaves),
            int(n_clusters), int(n_clients), tuple(thresholds),
            bool(include_perleaf))
     choice = _TUNE_CACHE.get(key)
-    if choice is None:
-        choice, _ = calibrate_layout(template, n_clusters, n_clients,
-                                     thresholds=thresholds, iters=iters,
-                                     include_perleaf=include_perleaf)
-        _TUNE_CACHE[key] = choice
+    if choice is not None:
+        return choice
+    if cache_path is None:
+        cache_path = os.environ.get("REPRO_LAYOUT_CACHE",
+                                    DEFAULT_CACHE_PATH)
+    h = template_hash(template, n_clusters, n_clients, thresholds,
+                      include_perleaf)
+    if cache_path:
+        entry = _load_disk_cache(cache_path).get(h)
+        if entry is not None:
+            try:
+                choice = LayoutChoice.from_metadata(entry)
+            except (KeyError, TypeError, ValueError):
+                choice = None      # stale/foreign entry: re-measure
+        if choice is not None:
+            _TUNE_CACHE[key] = choice
+            return choice
+    choice, _ = calibrate_layout(template, n_clusters, n_clients,
+                                 thresholds=thresholds, iters=iters,
+                                 include_perleaf=include_perleaf)
+    _TUNE_CACHE[key] = choice
+    if cache_path:
+        _store_disk_cache(cache_path, {h: choice.to_metadata()})
     return choice
+
+
+def tuned_fl(fl: FLConfig, template, iters: int = 3,
+             include_perleaf: Optional[bool] = None,
+             cache_path: Optional[str] = None) -> FLConfig:
+    """``fl`` with the tuned layout for ``template`` written into its
+    static fields — the one-line default-on entry point the launchers
+    use. Checkpoint manifests pin the resulting layout (layout_of), so
+    a restore under a cache miss that tunes differently fails loudly
+    instead of silently re-keying the streams.
+
+    ``include_perleaf`` defaults to ``not fl.faults``: the fault path
+    exists only in the slab engines (DESIGN.md §3.14), so a faulted
+    config never tunes onto the per-leaf candidate."""
+    if include_perleaf is None:
+        include_perleaf = not fl.faults
+    choice = tune_layout(template, fl.n_clusters, fl.n_clients,
+                         iters=iters, include_perleaf=include_perleaf,
+                         cache_path=cache_path)
+    return apply_layout(fl, choice)

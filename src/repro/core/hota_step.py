@@ -140,6 +140,12 @@ class HotaState(NamedTuple):
     fgn_t: jax.Array    # scalar
     f0: jax.Array       # (n_total_clients,)
     step: jax.Array
+    # Stale-model state (DESIGN.md §3.15) — present only when fl.faults
+    # (None = empty pytree node, legacy states and specs unchanged).
+    # Trailing position matters: flatten order keeps the legacy prefix,
+    # so fault-free states round-trip checkpoints bit-identically.
+    omega_stale: Any = None   # delayed FSDP-sharded copy stragglers use
+    stale_age: Any = None     # () rounds since omega_stale was refreshed
 
 
 class StepParts(NamedTuple):
@@ -258,7 +264,10 @@ def make_hota_step_parts(
         heads=heads_manual,
         head_opt=AdamState(step=P(), mu=heads_manual, nu=heads_manual),
         p=scalar_clients, fgn_mu=scalar_clients, fgn_nu=scalar_clients,
-        fgn_t=P(), f0=scalar_clients, step=P())
+        fgn_t=P(), f0=scalar_clients, step=P(),
+        # the stale copy shards exactly like omega (same FSDP layout)
+        omega_stale=(omega_manual if fl.faults else None),
+        stale_age=(P() if fl.faults else None))
     batch_spec = (P(client_axes), P(client_axes))
     metric_spec = {"loss": P(), "p_mean": P(), "p_min": P(), "p_max": P(),
                    "fgrad": P(), "gnorm_mean": P()}
@@ -292,7 +301,10 @@ def make_hota_step_parts(
             p=jnp.ones((n_total_clients,), jnp.float32),
             fgn_mu=zc, fgn_nu=zc, fgn_t=jnp.zeros((), jnp.int32),
             f0=jnp.ones((n_total_clients,), jnp.float32),
-            step=jnp.zeros((), jnp.int32))
+            step=jnp.zeros((), jnp.int32),
+            omega_stale=(jax.tree.map(jnp.array, omega) if fl.faults
+                         else None),
+            stale_age=(jnp.zeros((), jnp.float32) if fl.faults else None))
 
     # ---------------- the sharded step ----------------
     def _step(state: HotaState, tokens, labels, key, chan: ChannelParams,
@@ -313,9 +325,13 @@ def make_hota_step_parts(
         # device draws the SAME (C, N) participation from base_key's
         # reserved PART_FOLD domain (disjoint from all channel streams —
         # resampling fault rates is CRN-safe), then reads its own slot.
-        # Stragglers here use the discount-only model (age = τ, no delayed
-        # copy — the sim engine carries the stale-model variant).
+        # Stragglers carry the stale-model variant (DESIGN.md §3.15):
+        # the whole client round — features, head steps, FGN inputs and
+        # the phase-C loss — evaluates against the delayed ``omega_stale``
+        # copy, and the transmit weight takes the FedBuff 1/√(1+age)
+        # discount from the carried age, exactly like the sim engine.
         partc = None
+        stale_full = None
         if fl.faults:
             fp = faults_all if faults is None else faults
             partc = ota.draw_participation(base_key, fp, n_total_clusters,
@@ -344,6 +360,18 @@ def make_hota_step_parts(
                 # backprop through the channel, so no custom vjp here
                 omega_full0 = plain_gather_full(state.omega, omega_fsdp,
                                                 data_axes, compute_dtype)
+                if partc is not None:
+                    # stale-model variant (§3.15): gather the delayed
+                    # copy too and let each straggler's device see IT for
+                    # the whole round — the dist analogue of the sim's
+                    # per-client om_eff select. The gathers stay device-
+                    # uniform; only the scalar select differs per client.
+                    stale_full = plain_gather_full(
+                        state.omega_stale, omega_fsdp, data_axes,
+                        compute_dtype)
+                    omega_full0 = jax.tree.map(
+                        lambda f, s: jnp.where(stale_me > 0.5, s, f),
+                        omega_full0, stale_full)
                 hidden, _, _ = model.trunk_apply(omega_full0["trunk"],
                                                  tokens, mode="train")
                 final_full = omega_full0["final"]
@@ -441,8 +469,11 @@ def make_hota_step_parts(
             # the transmit weight folds participation and the FedBuff
             # staleness discount; live/n_eff generalize the eq.-10 guard.
             if partc is not None:
+                # FedBuff discount from the CARRIED age (how long ago the
+                # stale copy was refreshed), not the static τ — a copy
+                # refreshed last round is barely discounted
                 disc = jnp.where(stale_me > 0.5,
-                                 jax.lax.rsqrt(1.0 + fp.staleness), 1.0)
+                                 jax.lax.rsqrt(1.0 + state.stale_age), 1.0)
                 w_tx = jnp.asarray(p_new, jnp.float32) * part_me * disc
                 ctx_live, ctx_n_eff = partc.live, partc.n_eff
             else:
@@ -463,6 +494,20 @@ def make_hota_step_parts(
 
             def mb_loss(omega, hd, tok_mb, lab_mb):
                 full = omega_gather(omega, slab_ctx)
+                if stale_full is not None:
+                    # straight-through stale select (§3.15): a straggler
+                    # evaluates the loss at the DELAYED params while the
+                    # gradient still flows through the custom-vjp OTA
+                    # gather. stop(sel) + fr - stop(fr) is exactly sel in
+                    # value (fr - fr ≡ 0, no dtype promotion, no
+                    # precision loss) and exactly d/dfr = 1 in gradient —
+                    # the FedBuff delayed gradient, masked / weighted /
+                    # discounted by the same kernel path as a fresh one.
+                    def st_sel(fr, st):
+                        sel = jnp.where(stale_me > 0.5, st, fr)
+                        return (jax.lax.stop_gradient(sel) + fr
+                                - jax.lax.stop_gradient(fr))
+                    full = jax.tree.map(st_sel, full, stale_full)
                 h, aux, _ = model.trunk_apply(full["trunk"], tok_mb,
                                               mode="train")
                 feats = model.final_apply(full["final"], h)
@@ -575,6 +620,16 @@ def make_hota_step_parts(
             ok = jnp.logical_and(jnp.isfinite(gn2),
                                  gn2 <= fp.spike_norm * fp.spike_norm)
             skip = jnp.logical_or(partc.total < 0.5, ~ok)
+            # stale-model bookkeeping (mirrors the sim): refresh the
+            # delayed FSDP-sharded copy every fp.staleness rounds (age in
+            # [0, τ)); the skip freeze below covers these fields too, so
+            # a skipped round leaves copy + age untouched
+            refresh = (state.stale_age + 1.0) >= fp.staleness
+            new_state = new_state._replace(
+                omega_stale=jax.tree.map(
+                    lambda new, old: jnp.where(refresh, new, old),
+                    omega, state.omega_stale),
+                stale_age=jnp.where(refresh, 0.0, state.stale_age + 1.0))
             new_state = jax.tree.map(
                 lambda new, old: jnp.where(skip, old, new),
                 new_state, state)

@@ -41,7 +41,7 @@ same reserved range.
 """
 from __future__ import annotations
 
-from typing import List, NamedTuple, Optional, Tuple
+from typing import Any, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,9 +50,9 @@ from repro.common.flatpack import TreePacker, check_tree_matches_packer
 from repro.core.channel import ChannelParams
 from repro.kernels.ota_channel.kernel import CHUNK_ROWS
 from repro.kernels.ota_channel.ops import (
-    _ota_aggregate_fused_impl, ota_client_fold_apply,
+    _ota_aggregate_fused_impl, ota_client_fold_apply, ota_stream_fold_apply,
 )
-from repro.kernels.ota_channel.ref import bits_to_mask
+from repro.kernels.ota_channel.ref import bits_to_gaussian, bits_to_mask
 from repro.kernels.slab import LANE, on_tpu
 
 
@@ -79,6 +79,14 @@ SIM_CHAN_FOLD = 0x7FFF0003
 # scenarios) and raising a rate only grows the dropped set (monotone
 # coupling u < rate on a shared uniform).
 PART_FOLD = 0x7FFF0004
+# the client-sampling domain (DESIGN.md §4): the per-round client-id
+# draw — which population member fills each (cluster, slot) position —
+# folds off fold_in(round_key, SAMPLE_FOLD). Channel and participation
+# streams key off the SLOT position, never the drawn ids, so resampling
+# the population (or growing it) perturbs no mask, no noise and no fault
+# draw: CRN survives resampling byte-for-byte (the position-determinism
+# rule; pinned in tests/test_sampling.py).
+SAMPLE_FOLD = 0x7FFF0005
 # multi-section layouts (DESIGN.md §3.10): trunk section s folds BASE + s;
 # the tail (ω̃) section keeps PACKED_TAIL_FOLD in EVERY layout, so eq.-5
 # consumers re-draw only the ω̃ stream without knowing the trunk split.
@@ -111,6 +119,30 @@ def participation_key(key: jax.Array) -> jax.Array:
     draw — dropout, blackout, straggler — folds off this key, in a
     reserved domain disjoint from every channel stream."""
     return jax.random.fold_in(key, PART_FOLD)
+
+
+def sample_key(key: jax.Array) -> jax.Array:
+    """The round's client-sample key (DESIGN.md §4): the id draw that
+    fills each (cluster, slot) position from its subpopulation folds off
+    this key, in a reserved domain disjoint from every channel and
+    participation stream — so resampling moves no mask, noise or fault
+    draw (position determinism)."""
+    return jax.random.fold_in(key, SAMPLE_FOLD)
+
+
+def draw_client_sample(key: jax.Array, n_clusters: int, n_clients: int,
+                       population: int) -> jax.Array:
+    """(C, N) int32 ids in [0, population): which member of each
+    (cluster, slot) subpopulation participates this round (DESIGN.md
+    §3.15). One uniform id per slot — O(C·N) work regardless of the
+    population size, so rounds/sec stays flat as the population grows
+    (BENCH_sample.json). Slots draw from DISJOINT subpopulations (a
+    slot is a task), so two slots can never select the same client and
+    the post-round scatter back into the ``ClientBank`` is
+    conflict-free. Ids are a pure function of (round key, slot) — host
+    callers can recompute them without threading state."""
+    return jax.random.randint(sample_key(key), (n_clusters, n_clients),
+                              0, population, jnp.int32)
 
 
 class Participation(NamedTuple):
@@ -510,6 +542,133 @@ def ota_aggregate_client_folded(
             live=live, n_eff=n_eff,
             interpret=not on_tpu())
     return packer.treedef.unflatten(out)
+
+
+class OTAStreamAcc(NamedTuple):
+    """Running state of the streaming aggregator (DESIGN.md §3.15): the
+    masked MAC sum and the |M∩P| pass count, one leaf-shaped f32 array
+    each — NO cluster axis. Peak memory of a streaming round is one
+    cluster's contribution plus this accumulator (HLO-pinned in
+    tests/test_sampling.py)."""
+    y: Any       # pytree, leaf-shaped f32: Σ_{folded l} M_l ∘ (Σ_n p g)
+    cnt: Any     # pytree, leaf-shaped f32: Σ_{folded l} M_l
+
+
+def ota_stream_init(packer: TreePacker) -> OTAStreamAcc:
+    """Zeroed accumulator matching ``packer``'s tree."""
+    def zeros():
+        return packer.treedef.unflatten(
+            [jnp.zeros(packer.slots[i].shape, jnp.float32)
+             for i in range(len(packer.slots))])
+    return OTAStreamAcc(y=zeros(), cnt=zeros())
+
+
+def ota_stream_fold(
+    key: jax.Array,
+    acc: OTAStreamAcc,
+    grads_c,                     # pytree with leading (N, ...) leaves
+    p_c: jax.Array,              # (N,) this cluster's loss weights
+    chan: ChannelParams,
+    cluster: jax.Array | int,    # traced cluster index
+    packer: TreePacker,
+    live_c=None,                 # () this cluster's participation flag
+) -> OTAStreamAcc:
+    """Fold ONE cluster's contribution into the running sum (DESIGN.md
+    §3.15): draw only cluster ``cluster``'s per-section streams
+    (``stream_range_bits`` under ``section_gain_key`` — byte-identical
+    to the slice ``ota_aggregate_client_folded`` applies at the same
+    positions, because partial chunks truncate), fold the client weights
+    into the masked apply, and accumulate the masked sum + pass count.
+    The cluster index is traced, so a ``lax.scan``/``fori_loop`` over
+    arriving clusters compiles to ONE fold body — no (C, ·) stream or
+    mask buffer ever exists."""
+    folds = packed_section_folds(packer)
+    sig_c = jnp.asarray(chan.sigma2, jnp.float32)[cluster]
+    leaves = packer.treedef.flatten_up_to(grads_c)
+    y = packer.treedef.flatten_up_to(acc.y)
+    cnt = packer.treedef.flatten_up_to(acc.cnt)
+    for run in packer.leaf_runs():
+        gkey = section_gain_key(key, folds[run.section], cluster)
+        b = stream_range_bits(gkey, run.offset, run.size)
+        dy, dc = ota_stream_fold_apply(
+            leaves[run.leaf], p_c, b, sig_c, chan.h_threshold,
+            chan.ota_on, live_c=live_c, interpret=not on_tpu())
+        y[run.leaf] = y[run.leaf] + dy
+        cnt[run.leaf] = cnt[run.leaf] + dc
+    return OTAStreamAcc(y=packer.treedef.unflatten(y),
+                        cnt=packer.treedef.unflatten(cnt))
+
+
+def ota_stream_finalize(
+    key: jax.Array,
+    acc: OTAStreamAcc,
+    chan: ChannelParams,
+    n_clients: int,
+    packer: TreePacker,
+    n_eff=None,                  # () traced effective N (§3.14)
+):
+    """Close a streaming round: add the AWGN (the same per-section noise
+    streams ``section_noise_streams`` draws, sliced per leaf) and apply
+    the guarded |M∩P|·N_eff estimate (eq. 10). Returns the ĝ pytree."""
+    folds = packed_section_folds(packer)
+    y = packer.treedef.flatten_up_to(acc.y)
+    cnt = packer.treedef.flatten_up_to(acc.cnt)
+    denom = (jnp.float32(n_clients) if n_eff is None
+             else jnp.maximum(jnp.asarray(n_eff, jnp.float32), 1.0))
+    out = [None] * len(y)
+    for run in packer.leaf_runs():
+        nkey = section_noise_key(key, folds[run.section])
+        nb = stream_range_bits(nkey, run.offset, run.size)
+        z = (bits_to_gaussian(nb, 1.0) * chan.noise_std
+             * jnp.asarray(chan.ota_on, jnp.float32))
+        yl = y[run.leaf].reshape(-1) + z
+        cl = cnt[run.leaf].reshape(-1)
+        g = jnp.where(cl > 0, yl / (jnp.maximum(cl, 1.0) * denom), 0.0)
+        out[run.leaf] = g.reshape(y[run.leaf].shape)
+    return packer.treedef.unflatten(out)
+
+
+def ota_aggregate_streaming(
+    key: jax.Array,
+    grads,                       # pytree with leading (C, N, ...) leaves
+    p: jax.Array,                # (C, N) loss weights
+    chan: ChannelParams,         # traced knobs; chan.sigma2 is (C,)
+    n_clients: int,
+    packer: TreePacker,
+    bits_mode: str = "fused",    # accepted for API symmetry (key-only draw)
+    live: Optional[jax.Array] = None,   # (C,) cluster participation
+    n_eff: Optional[jax.Array] = None,  # () traced effective N
+):
+    """Streaming OTA aggregation (DESIGN.md §3.15): same math and same
+    streams as ``ota_aggregate_client_folded`` — eqs. 3 + 8-10 with the
+    traced ``ota_on`` gate, partial participation included — but the
+    cluster axis is a ``lax.scan`` over ``ota_stream_fold``, so peak
+    memory holds ONE cluster's masked contribution plus the running
+    accumulator instead of every cluster's stream and mask at once
+    (HLO-pinned: no (C, section)-sized buffer compiles). This is the
+    aggregation shape for rounds whose cluster contributions ARRIVE one
+    at a time (million-client sampling, ROADMAP); the equivalence to the
+    all-at-once path is property-tested."""
+    if bits_mode not in ("fused", "supplied"):
+        raise ValueError(bits_mode)
+    check_tree_matches_packer(packer, grads,
+                              "gradient pytree (streaming OTA)",
+                              batch_ndim=2)
+    n_clusters = int(chan.sigma2.shape[0])
+    live_v = (jnp.ones((n_clusters,), jnp.float32) if live is None
+              else jnp.asarray(live, jnp.float32).reshape(n_clusters))
+
+    def body(acc, xs):
+        c, g_c, p_c, lv_c = xs
+        return ota_stream_fold(key, acc, g_c, p_c, chan, c, packer,
+                               live_c=lv_c), None
+
+    acc, _ = jax.lax.scan(
+        body, ota_stream_init(packer),
+        (jnp.arange(n_clusters), grads,
+         jnp.asarray(p, jnp.float32), live_v))
+    return ota_stream_finalize(key, acc, chan, n_clients, packer,
+                               n_eff=n_eff)
 
 
 def final_layer_masks_packed(key: jax.Array, chan: ChannelParams,

@@ -1,0 +1,203 @@
+"""Per-round client sampling from a population bank (DESIGN.md §3.15).
+
+The paper's HFL premise only pays off at population scale: a real round
+draws a few hundred participants from millions of enrolled clients, not
+all C·N synchronously. This module makes that a TRACED knob on top of the
+existing simulator:
+
+* ``ClientBank`` holds the per-client persistent state — personalized
+  heads, their Adam moments, and the FGN loss baseline f0 — for a
+  population of M candidates per (cluster, slot) position, leaves
+  (C, N, M, ...). A slot is a task (the data stream and class count are
+  keyed by slot position), so slot n's subpopulation is the M clients of
+  cluster l working task n. Population size is C·N·M ≫ C·N.
+* ``SampledHotaSim`` wraps ``HotaSim``: each round draws one id per slot
+  from the reserved SAMPLE_FOLD stream domain
+  (``repro.core.ota.draw_client_sample``), GATHERS the sampled clients'
+  state into the (C, N) slot view (the same traced-gather trick
+  ``ScenarioBank`` uses for scenario knobs), runs the unmodified inner
+  round, and SCATTERS the slot results back into the bank. Subpopulations
+  are disjoint, so the scatter is conflict-free and deterministic.
+
+Position determinism (the §4 rule): every channel and participation
+stream keys off the SLOT position and a reserved fold — never off the
+drawn ids — so resampling, or growing the population, perturbs no mask,
+no AWGN draw and no fault draw: channel streams are byte-identical
+across resamples (pinned in tests/test_sampling.py). Per-round cost is
+O(C·N) gather/scatter rows regardless of M, so rounds/sec stays flat in
+the population size (BENCH_sample.json).
+
+``SampledHotaSim`` duck-types ``HotaSim``'s bank interface (``fl``,
+``chan``, ``faults``, ``init``, ``step_with_channel``), so the sweep
+engines (``repro.core.sweep.ScenarioBank`` and the sharded flavor)
+compose with sampling unchanged — a scenario bank over a sampled sim is
+one jit, CRN included, with the sample draw hoisted out of the scenario
+vmap exactly like the channel streams (key-only draw).
+
+FGN semantics under sampling: the FedGradNorm state and loss weights p
+live at SLOT (task) level — FGN balances tasks, not individual clients —
+while f0 is per CLIENT (each client's own F̃ baseline). A never-sampled
+client's f0 is the -1 sentinel; its first sampled round latches F (see
+``HotaSim.step_with_channel``).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import FLConfig, TrainConfig
+from repro.core import ota
+from repro.core.channel import ChannelParams, FaultParams
+from repro.core.sim import HotaSim, SimState
+from repro.models.model import Model
+from repro.models.params import init_params
+from repro.optim.adam import adam_init
+
+
+class ClientBank(NamedTuple):
+    """Per-client persistent state for the whole population. Leaves carry
+    a leading (C, N, M) prefix: cluster × slot(task) × subpopulation."""
+    heads: Any          # (C, N, M, ...) personalized heads
+    head_opt: Any       # (C, N, M, ...) their Adam states
+    f0: jax.Array       # (C, N, M) first-seen loss baseline; -1 = unseen
+
+
+class SampledSimState(NamedTuple):
+    """Carried state of a sampled sim: the inner (C, N) slot-view
+    ``SimState`` (shared model, optimizer, FGN/task state, plus the slot
+    copies of last round's participants) and the population bank."""
+    sim: SimState
+    bank: ClientBank
+
+
+def init_client_bank(model: Model, fl: FLConfig, population: int,
+                     max_classes: int, key: jax.Array) -> ClientBank:
+    """Fresh population: every client gets its own head init (per-member
+    keys), zeroed Adam moments, and the -1 unseen-f0 sentinel."""
+    head_specs = model.head_specs(max_classes)
+    c, n, m = fl.n_clusters, fl.n_clients, population
+    keys = jax.random.split(key, c * n * m).reshape(c, n, m, -1)
+    heads = jax.vmap(jax.vmap(jax.vmap(
+        lambda kc: init_params(head_specs, kc))))(keys)
+    head_opt = jax.vmap(jax.vmap(jax.vmap(adam_init)))(heads)
+    return ClientBank(heads=heads, head_opt=head_opt,
+                      f0=-jnp.ones((c, n, m), jnp.float32))
+
+
+def gather_clients(bank: ClientBank, ids: jax.Array):
+    """(heads, head_opt, f0) slot views for the drawn ids: leaf
+    (C, N, M, ...) → (C, N, ...) by a traced take along the population
+    axis — O(C·N) rows moved however large M is."""
+
+    def take(leaf):
+        idx = ids.reshape(ids.shape + (1,) * (leaf.ndim - 2))
+        return jnp.take_along_axis(leaf, idx, axis=2).squeeze(2)
+
+    return (jax.tree.map(take, bank.heads),
+            jax.tree.map(take, bank.head_opt),
+            take(bank.f0))
+
+
+def scatter_clients(bank: ClientBank, ids: jax.Array, heads, head_opt,
+                    f0: jax.Array) -> ClientBank:
+    """Write the slot results back at the drawn ids. Each (cluster,
+    slot) owns a disjoint subpopulation and draws exactly one id, so no
+    two slots ever address the same bank entry — the scatter is
+    deterministic by construction (no duplicate-index tie-break)."""
+    c, n = ids.shape
+    cg = jnp.arange(c)[:, None]
+    ng = jnp.arange(n)[None, :]
+
+    def put(leaf, val):
+        return leaf.at[cg, ng, ids].set(val)
+
+    return ClientBank(heads=jax.tree.map(put, bank.heads, heads),
+                      head_opt=jax.tree.map(put, bank.head_opt, head_opt),
+                      f0=put(bank.f0, f0))
+
+
+class SampledHotaSim:
+    """A ``HotaSim`` whose per-round participants are sampled from a
+    ``ClientBank`` population (DESIGN.md §3.15).
+
+    Same constructor as ``HotaSim`` plus ``population`` (M, the
+    subpopulation size per slot). The inner round body is the unmodified
+    ``HotaSim.step_with_channel`` — faults, staleness, skip rounds, the
+    streaming aggregator and the scenario banks all compose: sampling is
+    a gather/scatter shell around the slot view."""
+
+    def __init__(self, model: Model, fl: FLConfig, tcfg: TrainConfig,
+                 n_classes_per_client, population: int,
+                 max_classes: int = None):
+        if population < 1:
+            raise ValueError(f"population must be ≥ 1, got {population}")
+        self.sim = HotaSim(model, fl, tcfg, n_classes_per_client,
+                           max_classes=max_classes)
+        self.population = int(population)
+        self.model = model
+        self.tcfg = tcfg
+
+    # bank interface (duck-typed by the sweep engines)
+    @property
+    def fl(self) -> FLConfig:
+        return self.sim.fl
+
+    @property
+    def chan(self) -> ChannelParams:
+        return self.sim.chan
+
+    @property
+    def faults(self) -> FaultParams:
+        return self.sim.faults
+
+    # ------------------------------------------------------------------
+    def init(self, key: jax.Array) -> SampledSimState:
+        inner = self.sim.init(key)
+        bank = init_client_bank(self.model, self.fl, self.population,
+                                self.sim.max_classes,
+                                jax.random.fold_in(key, 11))
+        return SampledSimState(sim=inner, bank=bank)
+
+    # ------------------------------------------------------------------
+    def step(self, state: SampledSimState, xb, yb, key,
+             chan: ChannelParams = None, faults: FaultParams = None):
+        """One sampled round (jit'd). Same contract as ``HotaSim.step``;
+        metrics gain ``sample_ids`` — the (C, N) draw, a pure function
+        of the round key (hosts can recompute it without state)."""
+        return self._step(state, xb, yb, key,
+                          self.chan if chan is None else chan,
+                          self.faults if faults is None else faults)
+
+    @partial(jax.jit, static_argnums=0)
+    def _step(self, state, xb, yb, key, chan, faults):
+        return self.step_with_channel(state, xb, yb, key, chan,
+                                      faults=faults)
+
+    def step_with_channel(self, state: SampledSimState, xb, yb, key,
+                          chan: ChannelParams,
+                          ota_bits_mode: str = "fused",
+                          faults: FaultParams = None):
+        """Un-jitted sampled round — the vmap target of the sweep
+        engines, like the inner sim's method of the same name.
+
+        draw ids → gather slot view → inner round → scatter back. The
+        inner round sees a (C, N) ``SimState`` whose heads/head_opt/f0
+        are the sampled clients' own state; everything the round does to
+        a non-participating or frozen slot (fault path) round-trips
+        through the scatter unchanged, so skip rounds stay bit-exact
+        identities on the bank too."""
+        ids = ota.draw_client_sample(key, self.fl.n_clusters,
+                                     self.fl.n_clients, self.population)
+        heads, head_opt, f0 = gather_clients(state.bank, ids)
+        slot_state = state.sim._replace(heads=heads, head_opt=head_opt,
+                                        f0=f0)
+        new_sim, metrics = self.sim.step_with_channel(
+            slot_state, xb, yb, key, chan, ota_bits_mode=ota_bits_mode,
+            faults=faults)
+        bank = scatter_clients(state.bank, ids, new_sim.heads,
+                               new_sim.head_opt, new_sim.f0)
+        metrics = dict(metrics, sample_ids=ids)
+        return SampledSimState(sim=new_sim, bank=bank), metrics

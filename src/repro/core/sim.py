@@ -268,7 +268,14 @@ class HotaSim:
                   if fl.use_pallas_ota else None)
 
         # --- Alg. 2: FGN_Server per cluster -------------------------------
-        f0 = jnp.where(state.step == 0, F, state.f0)
+        # f0 latches each slot's FIRST observed loss (the F̃ baseline).
+        # Besides step 0, a NEGATIVE f0 marks a never-seen slot — the
+        # sampling layer (DESIGN.md §3.15) initializes its population
+        # bank to -1 so a client first drawn at round k latches F at k.
+        # Legacy states never hold a negative f0 (CE losses are ≥ 0 and
+        # init is ones), so the extra clause is trace-only for them.
+        f0 = jnp.where(jnp.logical_or(state.step == 0, state.f0 < 0.0),
+                       F, state.f0)
         ratios = F / jnp.maximum(f0, 1e-12)
 
         if packer is not None:   # tail section of the round's stream draw
@@ -306,8 +313,13 @@ class HotaSim:
             w_tx, live, n_eff = p_new, None, None
         if packer is not None:
             # client-folded: Σ_n p[l,n]·g[l,n] folds into the masked MAC
-            # sum leaf by leaf — the einsum'd weighted tree never exists
-            ghat = ota.ota_aggregate_client_folded(
+            # sum leaf by leaf — the einsum'd weighted tree never exists.
+            # fl.ota_streaming (static, DESIGN.md §3.15) swaps in the
+            # scan-over-clusters fold: identical streams, one cluster's
+            # contribution resident at a time instead of all C.
+            agg = (ota.ota_aggregate_streaming if fl.ota_streaming
+                   else ota.ota_aggregate_client_folded)
+            ghat = agg(
                 chan_key, g, w_tx, chan, fl.n_clients, packer,
                 bits_mode=ota_bits_mode, live=live, n_eff=n_eff)
             # slab-view PS update: moments stay one flat slab, params

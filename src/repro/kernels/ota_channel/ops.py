@@ -27,7 +27,7 @@ from repro.kernels.ota_channel.kernel import (
 )
 from repro.kernels.ota_channel.ref import (
     bits_to_mask, ota_aggregate_client_ref, ota_aggregate_slab_ref,
-    ota_channel_ref,
+    ota_channel_ref, ota_stream_fold_ref,
 )
 from repro.kernels.slab import (
     LANE, ROW_QUANTUM, flat_to_slab, on_tpu, pad_to_lanes,
@@ -213,6 +213,50 @@ def ota_client_fold_apply(g: jax.Array, p: jax.Array, bits: jax.Array,
             live=live, n_eff=n_eff))
     out = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
     return out.reshape(shape)
+
+
+def ota_stream_fold_apply(g: jax.Array, p_c: jax.Array, bits: jax.Array,
+                          sigma2_c, h_th, ota_on,
+                          live_c=None,
+                          interpret: bool = None,
+                          impl: str = None):
+    """Zero-copy streaming fold for ONE (leaf, cluster) pair (DESIGN.md
+    §3.15): returns (M ∘ (Σ_n p[n]·g[n]), M) shaped like ``g[0]``, both
+    f32 — the per-cluster term the streaming aggregator adds into its
+    running sum. ``bits`` is this cluster's pre-sliced section stream
+    (``stream_range_bits``), so the values are byte-identical to what
+    the all-at-once client-folded path applies at the same positions.
+
+    ``impl``: "pallas" | "jnp". Default: "pallas" on TPU, "jnp"
+    elsewhere (same dispatch rationale as ``ota_client_fold_apply``).
+    The pallas branch folds the (N,) weights with one einsum and runs
+    the fused ``ota_mask_weight_pallas`` MAC kernel on the result — the
+    same mask+apply loop the distributed per-leaf path uses — then
+    scales both outputs by ``live_c`` (a {0,1} flag, so multiplying
+    equals ANDing it into the mask)."""
+    if interpret is None:
+        interpret = not on_tpu()
+    if impl is None:
+        impl = "pallas" if on_tpu() else "jnp"
+    n_cl = g.shape[0]
+    shape = g.shape[1:]
+    n = int(g.size) // n_cl
+    assert bits.shape == (n,), (bits.shape, n)
+    flat = g.reshape(n_cl, n).astype(jnp.float32)
+    p32 = jnp.asarray(p_c, jnp.float32).reshape(n_cl)
+    if impl == "jnp":
+        y, cnt = ota_stream_fold_ref(flat, p32, bits, sigma2_c, h_th,
+                                     ota_on, live_c=live_c)
+        return y.reshape(shape), cnt.reshape(shape)
+    wg = jnp.einsum("n,np->p", p32, flat)
+    out, mask = ota_mask_weight_apply(wg, bits, sigma2_c, h_th, ota_on,
+                                      1.0, interpret=interpret,
+                                      impl="pallas")
+    if live_c is not None:
+        lv = jnp.asarray(live_c, jnp.float32).reshape(())
+        lv = (lv > 0.5).astype(jnp.float32)
+        out, mask = out * lv, mask * lv
+    return out.reshape(shape), mask.reshape(shape)
 
 
 def ota_mask_count_apply(x: jax.Array, bits_all: jax.Array, me, sigma2_all,

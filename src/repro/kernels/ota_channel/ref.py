@@ -83,6 +83,29 @@ def ota_aggregate_client_ref(
                                   ota_on, n_clients, live=live, n_eff=n_eff)
 
 
+def ota_stream_fold_ref(
+    g: jax.Array,            # (N, ...) ONE cluster's raw client gradients
+    p_c: jax.Array,          # (N,) this cluster's loss weights
+    bits: jax.Array,         # (...) uint32 gain bits, this cluster's stream
+    sigma2_c, h_th, ota_on,
+    live_c=None,             # () cluster participation flag (§3.14)
+):
+    """One cluster's streaming-fold contribution (DESIGN.md §3.15):
+    (M_l ∘ Σ_n p[n]·g[n], M_l) — the per-cluster term of the eq.-8 MAC
+    sum plus its |M| count, BEFORE any cross-cluster reduction. The
+    streaming aggregator accumulates these one arriving cluster at a
+    time; folding all C and adding the AWGN + eq.-10 guard reproduces
+    ``ota_aggregate_client_ref`` exactly (same weight fold, same mask
+    law, same term order). ``live_c`` ANDs into the mask after the
+    ``ota_on`` all-pass gate, like ``live`` does in the slab oracle."""
+    wg = jnp.einsum("n,n...->...", p_c.astype(jnp.float32),
+                    g.astype(jnp.float32))
+    m = bits_to_mask(bits.reshape(wg.shape), sigma2_c, h_th, ota_on)
+    if live_c is not None:
+        m = jnp.logical_and(m, jnp.asarray(live_c, jnp.float32) > 0.5)
+    return jnp.where(m, wg, 0.0), m.astype(jnp.float32)
+
+
 def ota_aggregate_slab_ref(
     wg: jax.Array,           # (C, ...) weighted grads, already Σ_i p_i g_i
     bits: jax.Array,         # (C, ...) uint32 gain bits per cluster

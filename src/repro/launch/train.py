@@ -110,6 +110,16 @@ def main():
     ap.add_argument("--guard-patience", type=int, default=3,
                     help="consecutive skipped rounds before the RoundGuard "
                          "restores from the latest checkpoint")
+    # section-layout autotuner (DESIGN.md §3.13) — default ON: a one-shot
+    # calibration bench per template, persisted across runs
+    ap.add_argument("--no-tune-layout", action="store_true",
+                    help="skip the layout autotuner and keep FLConfig's "
+                         "default packed layout")
+    ap.add_argument("--layout-cache", default=None,
+                    help="path of the persisted calibration cache "
+                         "(default ~/.cache/repro/layout_tune.json or "
+                         "$REPRO_LAYOUT_CACHE; pass '' to disable "
+                         "persistence)")
     args = ap.parse_args()
 
     shape = tuple(int(x) for x in args.mesh.split(","))
@@ -131,6 +141,17 @@ def main():
                   staleness_rounds=args.staleness,
                   spike_norm=args.spike_norm)
     tcfg = TrainConfig(lr=args.lr)
+
+    if not args.no_tune_layout:
+        # tuned section layout, default on: the same {final, trunk}
+        # template the step builds its packer from, so the tuned folds
+        # are exactly the streams the run draws (checkpoint-pinned)
+        from repro.common.layout_tune import layout_of, tuned_fl
+        from repro.models.params import abstract_params
+        template = {"final": abstract_params(model.final_specs()),
+                    "trunk": abstract_params(model.trunk_specs())}
+        fl = tuned_fl(fl, template, cache_path=args.layout_cache)
+        print(f"layout: {layout_of(fl).describe()}", flush=True)
 
     init_fn, step_fn, state_specs, batch_spec = make_hota_train_step(
         model, mesh, fl, tcfg, loss_kind="lm")

@@ -19,6 +19,10 @@ import pytest
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
+# keep tests hermetic: never read or write the user's persisted layout
+# calibration cache (layout_tune.py honors "" as "persistence off")
+os.environ.setdefault("REPRO_LAYOUT_CACHE", "")
+
 
 # ---------------------------------------------------------------------------
 # hypothesis shim (fixed-seed fallback for @given)

@@ -213,6 +213,37 @@ def test_tune_layout_cache_and_apply_roundtrip():
             packer_for_layout(template, c1)
 
 
+def test_tune_layout_disk_cache_roundtrip(tmp_path):
+    """The persisted calibration cache (keyed by template hash) answers a
+    cold-process tune without re-timing: seed the file with a sentinel
+    choice no measurement would pick, clear the in-memory cache, and the
+    sentinel must come back verbatim. A stale/corrupt entry re-measures
+    instead of crashing."""
+    import repro.common.layout_tune as lt
+
+    template = _template()
+    path = str(tmp_path / "layout_tune.json")
+    h = lt.template_hash(template, C, N)
+    sentinel = LayoutChoice("slab", "tail", 0)
+    lt._store_disk_cache(path, {h: sentinel.to_metadata()})
+    lt._TUNE_CACHE.clear()
+    try:
+        got = tune_layout(template, C, N, iters=1, cache_path=path)
+        assert got == sentinel
+        # memory cache now holds it too — second call never touches disk
+        assert tune_layout(template, C, N, iters=1,
+                           cache_path=str(tmp_path / "gone.json")) == sentinel
+        # corrupt entry -> fall back to measuring (any valid choice is fine)
+        lt._store_disk_cache(path, {h: {"engine": "warp-drive"}})
+        lt._TUNE_CACHE.clear()
+        measured = tune_layout(template, C, N, iters=1, cache_path=path)
+        assert isinstance(measured, LayoutChoice)
+        # a different template hashes differently: its entry is untouched
+        assert lt.template_hash(template, C, N + 1) != h
+    finally:
+        lt._TUNE_CACHE.clear()   # drop sentinel so later tests re-measure
+
+
 # ------------------------------------------------- checkpoint layout pin
 def test_restore_refuses_cross_layout_checkpoint(tmp_path):
     from repro.checkpoint import restore_checkpoint, save_checkpoint

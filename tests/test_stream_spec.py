@@ -1,0 +1,244 @@
+"""Executable DESIGN.md §4 — the RNG stream specification as a test.
+
+The channel is *defined* by its random streams: every reserved fold
+domain, the chunk-quantized threefry draw, and the position-determinism
+slice rule are contract, not implementation detail. This suite pins all
+of it in one place, parametrized over every reserved fold, so a stream
+regression names the offending fold instead of surfacing as a mystery
+mismatch three engines away.
+
+What is pinned here (anything that changes a pinned value is a stream-
+spec BREAK and needs a DESIGN.md §4 edit + checkpoint-migration story):
+
+* the reserved fold VALUES themselves, and that they are pairwise
+  distinct and live at/above the 0x7FFF0000 floor (structurally
+  disjoint from any cluster / leaf / chunk index);
+* golden first-u32 digests of the gain stream (per fold, cluster 0)
+  and the noise stream (per fold) under ``jax.random.PRNGKey(0)``;
+* the chunk-slice identity: ``stream_range_bits(key, a, n)`` equals the
+  same positions of the whole-stream draw, across chunk boundaries;
+* the section-fold schedule: trunk section s ⇒ BASE + s, the ω̃ tail
+  keeps PACKED_TAIL_FOLD in every layout;
+* the participation sub-folds (dropout/blackout/straggler) and the
+  SAMPLE_FOLD client-id draw are disjoint from every channel stream.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.flatpack import packer_for
+from repro.core import ota
+from repro.core.hota import PACKED_FINAL_FOLD
+from repro.core.hota_slab import PACKED_OMEGA_FOLD
+
+# Every reserved fold domain of DESIGN.md §4, by name. New domains MUST
+# be registered here — the golden tables below force the registration.
+RESERVED_FOLDS = {
+    "NOISE_FOLD": ota.NOISE_FOLD,
+    "PACKED_HEAD_FOLD": ota.PACKED_HEAD_FOLD,
+    "PACKED_TAIL_FOLD": ota.PACKED_TAIL_FOLD,
+    "SIM_CHAN_FOLD": ota.SIM_CHAN_FOLD,
+    "PART_FOLD": ota.PART_FOLD,
+    "SAMPLE_FOLD": ota.SAMPLE_FOLD,
+    "PACKED_FINAL_FOLD": PACKED_FINAL_FOLD,
+    "PACKED_OMEGA_FOLD": PACKED_OMEGA_FOLD,
+    "PACKED_SECTION_FOLD_0": ota.PACKED_SECTION_FOLD_BASE + 0,
+    "PACKED_SECTION_FOLD_1": ota.PACKED_SECTION_FOLD_BASE + 1,
+    "PACKED_SECTION_FOLD_2": ota.PACKED_SECTION_FOLD_BASE + 2,
+}
+
+# the spec'd values — a constant that drifts is a silent re-keying of
+# every checkpointed stream
+FOLD_VALUES = {
+    "NOISE_FOLD": 0x7FFFFFFF,
+    "PACKED_HEAD_FOLD": 0x7FFF0001,
+    "PACKED_TAIL_FOLD": 0x7FFF0002,
+    "SIM_CHAN_FOLD": 0x7FFF0003,
+    "PART_FOLD": 0x7FFF0004,
+    "SAMPLE_FOLD": 0x7FFF0005,
+    "PACKED_FINAL_FOLD": 0x7FFF00F1,
+    "PACKED_OMEGA_FOLD": 0x7FFF00F2,
+    "PACKED_SECTION_FOLD_0": 0x7FFF0100,
+    "PACKED_SECTION_FOLD_1": 0x7FFF0101,
+    "PACKED_SECTION_FOLD_2": 0x7FFF0102,
+}
+
+# golden first u32 of the cluster-0 gain stream under PRNGKey(0):
+# stream_range_bits(section_gain_key(key, fold, 0), 0, 4)[0]
+GOLDEN_GAIN_U32 = {
+    "NOISE_FOLD": 0x0B686A7C,
+    "PACKED_HEAD_FOLD": 0xE2E0D19F,
+    "PACKED_TAIL_FOLD": 0x1BEF84B4,
+    "SIM_CHAN_FOLD": 0x3A418B11,
+    "PART_FOLD": 0xB89EA6A5,
+    "SAMPLE_FOLD": 0xDEABE9ED,
+    "PACKED_FINAL_FOLD": 0x3AEBBD34,
+    "PACKED_OMEGA_FOLD": 0x755B8C4B,
+    "PACKED_SECTION_FOLD_0": 0x0B3450D2,
+    "PACKED_SECTION_FOLD_1": 0xAB81093C,
+    "PACKED_SECTION_FOLD_2": 0x96C21E23,
+}
+
+# golden first u32 of the per-fold noise stream under PRNGKey(0):
+# stream_range_bits(section_noise_key(key, fold), 0, 4)[0]
+GOLDEN_NOISE_U32 = {
+    "NOISE_FOLD": 0xD9CF7EC3,
+    "PACKED_HEAD_FOLD": 0x32DFF2BA,
+    "PACKED_TAIL_FOLD": 0xF4999DB8,
+    "SIM_CHAN_FOLD": 0xE5AB619D,
+    "PART_FOLD": 0x8EEA33EF,
+    "SAMPLE_FOLD": 0xADDA1262,
+    "PACKED_FINAL_FOLD": 0x8007622F,
+    "PACKED_OMEGA_FOLD": 0x5032934A,
+    "PACKED_SECTION_FOLD_0": 0xF9C4A3E8,
+    "PACKED_SECTION_FOLD_1": 0x3E08D583,
+    "PACKED_SECTION_FOLD_2": 0x587C0806,
+}
+
+KEY = jax.random.PRNGKey(0)
+FOLD_NAMES = sorted(RESERVED_FOLDS)
+
+
+# -------------------------------------------------------------- constants
+@pytest.mark.parametrize("name", FOLD_NAMES)
+def test_reserved_fold_value_pinned(name):
+    assert RESERVED_FOLDS[name] == FOLD_VALUES[name], (
+        f"reserved fold {name} changed: 0x{RESERVED_FOLDS[name]:08X} != "
+        f"spec'd 0x{FOLD_VALUES[name]:08X} — this re-keys every stream "
+        f"drawn under it (DESIGN.md §4)")
+
+
+@pytest.mark.parametrize("name", FOLD_NAMES)
+def test_reserved_fold_above_floor(name):
+    assert RESERVED_FOLDS[name] >= 0x7FFF0000, (
+        f"reserved fold {name} = 0x{RESERVED_FOLDS[name]:08X} is below "
+        f"the 0x7FFF0000 reserved floor — it can collide with a cluster/"
+        f"leaf/section index fold")
+
+
+def test_reserved_folds_pairwise_distinct():
+    for a, b in itertools.combinations(FOLD_NAMES, 2):
+        assert RESERVED_FOLDS[a] != RESERVED_FOLDS[b], (
+            f"reserved folds {a} and {b} collide at "
+            f"0x{RESERVED_FOLDS[a]:08X} — their streams are identical")
+
+
+def test_registry_is_complete():
+    """Every named *_FOLD constant in the core modules is registered
+    here (new domains must land with golden digests)."""
+    from repro.core import hota, hota_slab
+    found = {}
+    for mod in (ota, hota, hota_slab):
+        for attr in dir(mod):
+            if attr.endswith("_FOLD") and not attr.startswith("_"):
+                found[attr] = getattr(mod, attr)
+    for attr, val in found.items():
+        assert val in set(RESERVED_FOLDS.values()), (
+            f"fold constant {attr} = 0x{val:08X} is not registered in "
+            f"tests/test_stream_spec.py RESERVED_FOLDS — register it "
+            f"with golden digests (DESIGN.md §4)")
+
+
+# ----------------------------------------------------------- derived keys
+def test_derived_stream_keys_pairwise_disjoint():
+    """fold_in(key, fold) gives pairwise-distinct key material — the
+    fold constants separating in key space, not just in value."""
+    data = {n: np.asarray(jax.random.key_data(
+        jax.random.fold_in(KEY, f))) for n, f in RESERVED_FOLDS.items()}
+    for a, b in itertools.combinations(FOLD_NAMES, 2):
+        assert not np.array_equal(data[a], data[b]), (
+            f"derived keys for folds {a} and {b} coincide — their "
+            f"streams are identical")
+
+
+# --------------------------------------------------------- golden digests
+@pytest.mark.parametrize("name", FOLD_NAMES)
+def test_golden_gain_first_u32(name):
+    got = int(ota.stream_range_bits(
+        ota.section_gain_key(KEY, RESERVED_FOLDS[name], 0), 0, 4)[0])
+    assert got == GOLDEN_GAIN_U32[name], (
+        f"gain stream for fold {name} drifted: first u32 is "
+        f"0x{got:08X}, spec'd 0x{GOLDEN_GAIN_U32[name]:08X} — the "
+        f"chunk-quantized threefry draw changed (DESIGN.md §4)")
+
+
+@pytest.mark.parametrize("name", FOLD_NAMES)
+def test_golden_noise_first_u32(name):
+    got = int(ota.stream_range_bits(
+        ota.section_noise_key(KEY, RESERVED_FOLDS[name]), 0, 4)[0])
+    assert got == GOLDEN_NOISE_U32[name], (
+        f"noise stream for fold {name} drifted: first u32 is "
+        f"0x{got:08X}, spec'd 0x{GOLDEN_NOISE_U32[name]:08X} — the "
+        f"chunk-quantized threefry draw changed (DESIGN.md §4)")
+
+
+# ----------------------------------------------------- position rules
+def test_chunk_slice_identity():
+    """stream_range_bits(key, a, n) == whole-stream[a : a+n], including
+    across a chunk boundary — the position-determinism slice rule that
+    lets per-cluster streaming draws, per-region backward draws and
+    whole-section oracle draws consume identical bits."""
+    k = ota.section_gain_key(KEY, ota.PACKED_TAIL_FOLD, 1)
+    length = ota.CHUNK + 640
+    full = ota._chunked_stream(k, length)
+    for start, n in [(0, 16), (ota.CHUNK - 8, 16), (ota.CHUNK, 128),
+                     (513, 257), (length - 64, 64)]:
+        part = ota.stream_range_bits(k, start, n)
+        assert jnp.array_equal(part, full[start:start + n]), (
+            f"stream_range_bits(start={start}, n={n}) != whole-stream "
+            f"slice — the chunk-quantization slice rule broke")
+
+
+def test_section_fold_schedule():
+    """Trunk section s ⇒ PACKED_SECTION_FOLD_BASE + s; the ω̃ tail keeps
+    PACKED_TAIL_FOLD in EVERY layout; the legacy two-section layout maps
+    to the HEAD/TAIL pair (DESIGN.md §4, fold-after-coalescing rule)."""
+    tmpl = {
+        "final": {"w": jax.ShapeDtypeStruct((40, 8), jnp.float32)},
+        "trunk": {"fc0": {"w": jax.ShapeDtypeStruct((30, 50), jnp.float32)},
+                  "fc1": {"w": jax.ShapeDtypeStruct((50, 40), jnp.float32)}},
+    }
+    multi = packer_for(tmpl, tail="final", sections="toplevel")
+    folds = ota.packed_section_folds(multi)
+    assert folds[-1] == ota.PACKED_TAIL_FOLD, (
+        f"ω̃ tail section fold is 0x{folds[-1]:08X}, not "
+        f"PACKED_TAIL_FOLD — eq.-5 consumers would re-draw wrong masks")
+    for i, f in enumerate(folds[:-1]):
+        assert f == ota.PACKED_SECTION_FOLD_BASE + i, (
+            f"trunk section {i} fold is 0x{f:08X}, spec'd BASE+{i} = "
+            f"0x{ota.PACKED_SECTION_FOLD_BASE + i:08X}")
+    legacy = packer_for(tmpl, tail="final")
+    assert ota.packed_section_folds(legacy) == [
+        ota.PACKED_HEAD_FOLD, ota.PACKED_TAIL_FOLD], (
+        "legacy two-section layout no longer maps to HEAD/TAIL folds")
+
+
+# --------------------------------------------- participation + sampling
+def test_participation_subfolds_disjoint():
+    """The dropout/blackout/straggler uniforms draw from sub-folds 0/1/2
+    of participation_key(round_key) — pairwise distinct, and distinct
+    from the channel key and the sample key of the same round."""
+    pk = ota.participation_key(KEY)
+    keys = {f"PART_FOLD/{i}": jax.random.fold_in(pk, i) for i in range(3)}
+    keys["SIM_CHAN_FOLD"] = ota.sim_channel_key(KEY)
+    keys["SAMPLE_FOLD"] = ota.sample_key(KEY)
+    keys["NOISE_FOLD"] = ota.noise_key(KEY)
+    data = {n: np.asarray(jax.random.key_data(k)) for n, k in keys.items()}
+    for a, b in itertools.combinations(sorted(data), 2):
+        assert not np.array_equal(data[a], data[b]), (
+            f"stream keys {a} and {b} coincide — resampling one would "
+            f"perturb the other's draws")
+
+
+def test_sample_draw_golden():
+    """The client-id draw is a pure function of the round key through
+    SAMPLE_FOLD — golden-pinned so a re-keying shows up by name."""
+    ids = ota.draw_client_sample(KEY, 2, 3, 7)
+    assert ids.dtype == jnp.int32
+    assert ids.tolist() == [[0, 6, 2], [5, 4, 6]], (
+        f"SAMPLE_FOLD client-id draw drifted: {ids.tolist()} — the "
+        f"sample stream was re-keyed (DESIGN.md §4)")
+    assert bool(jnp.all((ids >= 0) & (ids < 7)))
