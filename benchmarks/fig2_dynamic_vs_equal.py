@@ -14,11 +14,16 @@ import sys
 from benchmarks.paper_common import run_sweep, summarize
 
 
-def run(steps: int = 800, force: bool = False):
+def run(steps: int = 800, force: bool = False,
+        ota_streaming: bool = False, ota_sectioned: bool = False,
+        max_section_rows: int = 0):
+    # engine kwargs ride through run_sweep to the bank's base FLConfig —
+    # they are static, bank-wide, and validated there (never inert)
     results = run_sweep({
         "fig2_hota_fgn": dict(weighting="fedgradnorm"),
         "fig2_equal": dict(weighting="equal"),
-    }, steps=steps, force=force)
+    }, steps=steps, force=force, ota_streaming=ota_streaming,
+        ota_sectioned=ota_sectioned, max_section_rows=max_section_rows)
     print(summarize(results, "Fig. 2 — dynamic vs equal (sigma²=1)"))
     return results
 

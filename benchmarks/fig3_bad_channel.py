@@ -13,12 +13,15 @@ import sys
 from benchmarks.paper_common import run_sweep, summarize
 
 
-def run(steps: int = 800, force: bool = False):
+def run(steps: int = 800, force: bool = False,
+        ota_streaming: bool = False, ota_sectioned: bool = False,
+        max_section_rows: int = 0):
     sigma2 = (0.5,) + (1.0,) * 9
     results = run_sweep({
         "fig3_hota_fgn": dict(weighting="fedgradnorm", sigma2=sigma2),
         "fig3_equal": dict(weighting="equal", sigma2=sigma2),
-    }, steps=steps, force=force)
+    }, steps=steps, force=force, ota_streaming=ota_streaming,
+        ota_sectioned=ota_sectioned, max_section_rows=max_section_rows)
     print(summarize(results, "Fig. 3 — bad channel sigma1²=0.5"))
     return results
 

@@ -14,13 +14,18 @@ import sys
 from benchmarks.paper_common import run_sweep, summarize
 
 
-def run(steps: int = 800, force: bool = False):
+def run(steps: int = 800, force: bool = False,
+        ota_streaming: bool = False, ota_sectioned: bool = False,
+        max_section_rows: int = 0):
     experiments = {}
     for s1, tag in [(2.0, "s1_2.0"), (0.25, "s1_0.25")]:
         sigma2 = (s1, 0.75) + (1.0,) * 8
         for w in ("fedgradnorm", "equal"):
             experiments[f"fig4_{tag}_{w}"] = dict(weighting=w, sigma2=sigma2)
-    results = run_sweep(experiments, steps=steps, force=force)
+    results = run_sweep(experiments, steps=steps, force=force,
+                        ota_streaming=ota_streaming,
+                        ota_sectioned=ota_sectioned,
+                        max_section_rows=max_section_rows)
     print(summarize(results, "Fig. 4 — diverse sigma"))
     return results
 

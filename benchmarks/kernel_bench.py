@@ -255,6 +255,12 @@ def client_folded_rows(n_scenarios: int = 8, iters: int = 3,
                 lambda k, gg, pp, ch: ota.ota_aggregate_client_folded(
                     k, gg, pp, ch, N, tuned_pk))
             t_tuned = _time(f_tuned, key, g, p, chan, iters=iters)
+        elif choice.engine == "sectioned":
+            tuned_pk = packer_for_layout(template, choice)
+            f_tuned = jax.jit(
+                lambda k, gg, pp, ch: ota.ota_aggregate_sectioned(
+                    k, gg, pp, ch, N, tuned_pk))
+            t_tuned = _time(f_tuned, key, g, p, chan, iters=iters)
         else:
             t_tuned = t_leaf
         rows.append((f"ota_agg_clientfold_tuned_{label}", t_tuned,

@@ -78,6 +78,9 @@ def run_sweep(
     log_every: int = 50,
     sharded: Optional[bool] = None,
     tune: bool = True,
+    ota_streaming: bool = False,
+    ota_sectioned: bool = False,
+    max_section_rows: int = 0,
 ) -> Dict[str, Dict]:
     """Run ALL experiments as one compiled ScenarioBank sweep.
 
@@ -91,6 +94,13 @@ def run_sweep(
     paper MLP template before the sweep compiles; its calibration is
     persisted (keyed by template hash), so only the first sweep on a
     machine pays for it.
+
+    ``ota_streaming`` / ``ota_sectioned`` / ``max_section_rows`` select
+    the §3.15/§3.16 engines for the whole bank (engines are static, so
+    they cannot vary per scenario — the bank rejects scenarios that
+    try). Never silently inert: ``HotaSim`` raises by name when a flag's
+    prerequisites are off. Setting any of them skips the autotuner,
+    which would otherwise clobber the explicit engine choice.
     """
     os.makedirs(RESULTS_DIR, exist_ok=True)
     paths = {n: os.path.join(RESULTS_DIR, n + ".json") for n in experiments}
@@ -101,7 +111,15 @@ def run_sweep(
                 out[n] = json.load(f)
         return out
 
-    base_fl = FLConfig(n_clusters=n_clusters, n_clients=n_clients)
+    base_fl = FLConfig(n_clusters=n_clusters, n_clients=n_clients,
+                       ota_streaming=ota_streaming,
+                       ota_sectioned=ota_sectioned,
+                       max_section_rows=max_section_rows)
+    explicit_engine = ota_streaming or ota_sectioned or bool(max_section_rows)
+    if tune and explicit_engine:
+        print("  layout: explicit engine flags — autotuner skipped",
+              flush=True)
+        tune = False
     if tune:
         from repro.common.layout_tune import layout_of, tuned_fl
         from repro.models.model import build_model

@@ -5,6 +5,12 @@ Default mode is quick (reads cached results where the full experiments are
 long-running; see scripts/run_paper_experiments.sh and
 scripts/run_dryrun_sweep.sh for the full passes). ``--full`` recomputes the
 paper figures at full length.
+
+One parser, one mode: the row-set selectors (``--kernels``/``--sweep``/
+``--tune``/``--faults``/``--sample``/``--dist``/``--sections``) are
+mutually exclusive and unknown flags are an ERROR — the old
+``parse_known_args`` silently ignored typos like ``--smoke=1`` or a
+misspelled mode and ran the wrong (often much longer) benchmark.
 """
 from __future__ import annotations
 
@@ -30,48 +36,90 @@ def _figure_rows(results: dict):
     return rows
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
+def _print_rows(rows) -> None:
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def _write_rows_json(rows, path: str, merge: bool = False) -> None:
+    """Write rows as the perf-trajectory JSON artifact. With ``merge``,
+    update an existing artifact by row name — a partial (smoke/tune)
+    pass refreshes only the rows it ran and the committed full-size
+    rows survive."""
+    new = {n: {"name": n, "us_per_call": round(us, 1), "derived": d}
+           for n, us, d in rows}
+    merged = []
+    if merge and os.path.exists(path):
+        with open(path) as f:
+            merged = [new.pop(row["name"], row)
+                      for row in json.load(f).get("rows", [])]
+    merged += list(new.values())
+    with open(path, "w") as f:
+        json.dump({"rows": merged}, f, indent=1)
+
+
+def _mode_json_path(args, default: str) -> str | None:
+    """The JSON artifact path for a non-kernel mode: honor an explicit
+    --json PATH; the bare flag's const names the kernel artifact, so
+    each mode defaults to its own file instead."""
+    if not args.json:
+        return None
+    return default if args.json == "BENCH_kernels.json" else args.json
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--kernels", action="store_true",
+                      help="kernel/packed/sweep rows only (skip paper "
+                           "figures and roofline)")
+    mode.add_argument("--sweep", action="store_true",
+                      help="sweep-engine rows only (sharded vs vmap vs "
+                           "sequential banks) on a forced multi-device CPU "
+                           "mesh; with --json writes BENCH_sweep.json")
+    mode.add_argument("--tune", action="store_true",
+                      help="section-layout autotuner rows only (the "
+                           "calibration sweep of DESIGN.md §3.13 per bench "
+                           "template); with --json merges into "
+                           "BENCH_kernels.json by row name")
+    mode.add_argument("--faults", action="store_true",
+                      help="fault-injection rows only (round throughput vs "
+                           "dropout rate on the slab sim engine, DESIGN.md "
+                           "§3.14); with --json writes BENCH_faults.json")
+    mode.add_argument("--sample", action="store_true",
+                      help="client-sampling rows only (round throughput vs "
+                           "population size at fixed C*N, plus the "
+                           "streaming aggregator, DESIGN.md §3.15); with "
+                           "--json writes BENCH_sample.json")
+    mode.add_argument("--dist", action="store_true",
+                      help="distributed-step rows only (slab-native vs "
+                           "per-leaf engines + the 2-D scenario × client "
+                           "bank) on a forced 4-device CPU mesh; with "
+                           "--json writes BENCH_dist.json")
+    mode.add_argument("--sections", action="store_true",
+                      help="section-streaming rows only (sectioned vs "
+                           "full-slab engines with estimated peak working "
+                           "set, DESIGN.md §3.16); with --json writes "
+                           "BENCH_sections.json")
     ap.add_argument("--full", action="store_true",
                     help="recompute paper figures at full length")
     ap.add_argument("--steps", type=int, default=None)
-    ap.add_argument("--kernels", action="store_true",
-                    help="kernel/packed/sweep rows only (skip paper figures "
-                         "and roofline)")
     ap.add_argument("--smoke", action="store_true",
-                    help="small fast variant of every kernel row (CI)")
-    ap.add_argument("--sweep", action="store_true",
-                    help="sweep-engine rows only (sharded vs vmap vs "
-                         "sequential banks) on a forced multi-device CPU "
-                         "mesh; with --json also writes BENCH_sweep.json")
+                    help="small fast variant of every row set (CI)")
     ap.add_argument("--sweep-devices", type=int, default=2,
                     help="forced host device count for --sweep (default 2)")
-    ap.add_argument("--tune", action="store_true",
-                    help="section-layout autotuner rows only (the "
-                         "calibration sweep of DESIGN.md §3.13 per bench "
-                         "template); with --json merges into "
-                         "BENCH_kernels.json by row name")
-    ap.add_argument("--faults", action="store_true",
-                    help="fault-injection rows only (round throughput vs "
-                         "dropout rate on the slab sim engine, DESIGN.md "
-                         "§3.14); with --json writes BENCH_faults.json")
-    ap.add_argument("--sample", action="store_true",
-                    help="client-sampling rows only (round throughput vs "
-                         "population size at fixed C*N, plus the streaming "
-                         "aggregator, DESIGN.md §3.15); with --json writes "
-                         "BENCH_sample.json")
-    ap.add_argument("--dist", action="store_true",
-                    help="distributed-step rows only (slab-native vs "
-                         "per-leaf engines + the 2-D scenario × client "
-                         "bank) on a forced 4-device CPU mesh; with "
-                         "--json writes BENCH_dist.json")
     ap.add_argument("--json", nargs="?", const="BENCH_kernels.json",
                     default=None, metavar="PATH",
-                    help="also write the kernel rows to PATH as JSON "
-                         "(default BENCH_kernels.json) — the perf "
-                         "trajectory artifact; sweep rows go to "
-                         "BENCH_sweep.json")
-    args, _ = ap.parse_known_args()
+                    help="also write the rows to PATH as JSON (default "
+                         "BENCH_kernels.json) — the perf trajectory "
+                         "artifact; each mode defaults to its own "
+                         "BENCH_<mode>.json")
+    return ap
+
+
+def main() -> None:
+    args = build_parser().parse_args()
 
     if args.sweep or args.dist:
         # must land before ANY jax import in this process
@@ -82,30 +130,17 @@ def main() -> None:
                 flags + " --xla_force_host_platform_device_count="
                 f"{n_dev}").strip()
 
-    rows = []
-
     if args.tune:
         # --- section-layout autotuner calibration (DESIGN.md §3.13) ------
         from benchmarks.kernel_bench import layout_tune_rows
         trows = layout_tune_rows(quick=args.smoke,
                                  iters=1 if args.smoke else 2)
         if args.json:
-            # merge into the kernel artifact by row name (same pattern as
-            # the kernel rows below): a tune pass refreshes only its own
-            # rows and leaves the committed kernel rows intact
-            new = {n: {"name": n, "us_per_call": round(us, 1), "derived": d}
-                   for n, us, d in trows}
-            merged = []
-            if os.path.exists(args.json):
-                with open(args.json) as f:
-                    merged = [new.pop(row["name"], row)
-                              for row in json.load(f).get("rows", [])]
-            merged += list(new.values())
-            with open(args.json, "w") as f:
-                json.dump({"rows": merged}, f, indent=1)
-        print("name,us_per_call,derived")
-        for name, us, derived in trows:
-            print(f"{name},{us:.1f},{derived}")
+            # merge into the kernel artifact by row name: a tune pass
+            # refreshes only its own rows and leaves the committed
+            # kernel rows intact
+            _write_rows_json(trows, args.json, merge=True)
+        _print_rows(trows)
         return
 
     if args.faults:
@@ -113,15 +148,8 @@ def main() -> None:
         from benchmarks.faults_bench import fault_rows
         frows = fault_rows(smoke=args.smoke)
         if args.json:
-            path = ("BENCH_faults.json" if args.json == "BENCH_kernels.json"
-                    else args.json)
-            with open(path, "w") as f:
-                json.dump({"rows": [
-                    {"name": n, "us_per_call": round(us, 1), "derived": d}
-                    for n, us, d in frows]}, f, indent=1)
-        print("name,us_per_call,derived")
-        for name, us, derived in frows:
-            print(f"{name},{us:.1f},{derived}")
+            _write_rows_json(frows, _mode_json_path(args, "BENCH_faults.json"))
+        _print_rows(frows)
         return
 
     if args.sample:
@@ -129,15 +157,8 @@ def main() -> None:
         from benchmarks.sample_bench import sample_rows
         srows = sample_rows(smoke=args.smoke)
         if args.json:
-            path = ("BENCH_sample.json" if args.json == "BENCH_kernels.json"
-                    else args.json)
-            with open(path, "w") as f:
-                json.dump({"rows": [
-                    {"name": n, "us_per_call": round(us, 1), "derived": d}
-                    for n, us, d in srows]}, f, indent=1)
-        print("name,us_per_call,derived")
-        for name, us, derived in srows:
-            print(f"{name},{us:.1f},{derived}")
+            _write_rows_json(srows, _mode_json_path(args, "BENCH_sample.json"))
+        _print_rows(srows)
         return
 
     if args.dist:
@@ -145,15 +166,19 @@ def main() -> None:
         from benchmarks.dist_bench import dist_rows
         drows = dist_rows(smoke=args.smoke)
         if args.json:
-            path = ("BENCH_dist.json" if args.json == "BENCH_kernels.json"
-                    else args.json)
-            with open(path, "w") as f:
-                json.dump({"rows": [
-                    {"name": n, "us_per_call": round(us, 1), "derived": d}
-                    for n, us, d in drows]}, f, indent=1)
-        print("name,us_per_call,derived")
-        for name, us, derived in drows:
-            print(f"{name},{us:.1f},{derived}")
+            _write_rows_json(drows, _mode_json_path(args, "BENCH_dist.json"))
+        _print_rows(drows)
+        return
+
+    if args.sections:
+        # --- section streaming: sectioned vs full-slab engines (§3.16) ---
+        from benchmarks.sections_bench import section_rows
+        xrows = section_rows(smoke=args.smoke)
+        if args.json:
+            _write_rows_json(xrows,
+                             _mode_json_path(args, "BENCH_sections.json"),
+                             merge=True)
+        _print_rows(xrows)
         return
 
     if args.sweep:
@@ -165,19 +190,11 @@ def main() -> None:
         srows = sweep_rows(n_scenarios=s, steps=steps,
                            include_sequential=not args.smoke)
         if args.json:
-            # honor an explicit --json PATH; the bare flag's const names
-            # the kernel artifact, so sweep rows default to their own file
-            path = ("BENCH_sweep.json" if args.json == "BENCH_kernels.json"
-                    else args.json)
-            with open(path, "w") as f:
-                json.dump({"rows": [
-                    {"name": n, "us_per_call": round(us, 1), "derived": d}
-                    for n, us, d in srows]}, f, indent=1)
-        print("name,us_per_call,derived")
-        for name, us, derived in srows:
-            print(f"{name},{us:.1f},{derived}")
+            _write_rows_json(srows, _mode_json_path(args, "BENCH_sweep.json"))
+        _print_rows(srows)
         return
 
+    rows = []
     if not args.kernels:
         # --- paper figures (Figs. 2-4) -----------------------------------
         steps = args.steps or (500 if args.full else 40)
@@ -226,16 +243,7 @@ def main() -> None:
         # refreshes only the rows it actually ran, so the committed
         # full-size rows (1M/16M, banked S=8) survive a local CI-smoke
         # invocation instead of being clobbered by the smaller row set
-        new = {n: {"name": n, "us_per_call": round(us, 1), "derived": d}
-               for n, us, d in kernel_rows}
-        merged = []
-        if os.path.exists(args.json):
-            with open(args.json) as f:
-                merged = [new.pop(row["name"], row)
-                          for row in json.load(f).get("rows", [])]
-        merged += list(new.values())
-        with open(args.json, "w") as f:
-            json.dump({"rows": merged}, f, indent=1)
+        _write_rows_json(kernel_rows, args.json, merge=True)
 
     if not args.kernels:
         # --- roofline table (from cached dry-run JSONs) -------------------
@@ -254,9 +262,7 @@ def main() -> None:
                 f"dom={rl['dominant']};c={rl['compute_s']:.3f}s;"
                 f"m={rl['memory_s']:.3f}s;coll={rl['collective_s']:.3f}s"))
 
-    print("name,us_per_call,derived")
-    for name, us, derived in rows:
-        print(f"{name},{us:.1f},{derived}")
+    _print_rows(rows)
 
 
 if __name__ == "__main__":

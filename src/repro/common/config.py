@@ -145,6 +145,7 @@ class FLConfig:
     # repro.common.layout_tune.apply_layout, not by hand.
     ota_sections: str = "toplevel"    # "toplevel" | "tail"
     min_section_rows: int = 0         # coalescing threshold (slab rows)
+    max_section_rows: int = 0         # section split cap (slab rows); 0=off
     # Streaming aggregation (DESIGN.md §3.15) — static, sim engine only:
     # fold arriving cluster contributions into the slab running sum one
     # cluster at a time (lax.scan over repro.core.ota.ota_stream_fold)
@@ -153,6 +154,16 @@ class FLConfig:
     # reduction order changes); peak aggregation memory drops from
     # (C × section) to one cluster's contribution + the running sum.
     ota_streaming: bool = False
+    # Section-streaming aggregation (DESIGN.md §3.16) — static: make the
+    # multi-section layout the unit of scheduling. The round walks the
+    # Section partition one section at a time, drawing only that
+    # section's gain/noise streams (the same per-section folds — bit-
+    # identical draws), folding only its leaf runs, then releasing the
+    # buffers, so peak live streams are ONE section (bounded by
+    # max_section_rows above), never the (P,) or (C,P) slab. Composes
+    # with ota_streaming: the cluster scan then runs inside each
+    # section. Requires a multi-section layout (ota_sections="toplevel").
+    ota_sectioned: bool = False
     microbatches: int = 1             # gradient accumulation count
     # Fault injection (DESIGN.md §3.14). ``faults`` is the one static gate:
     # False keeps the legacy trace bit-exact (no participation draws, no

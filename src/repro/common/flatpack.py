@@ -56,9 +56,23 @@ stream folds. ``min_section_rows=0`` is bit-identical to the uncoalesced
 layout (stream-pinned in tests), and the ω̃ tail always stays its own
 last section so eq.-5 consumers keep ``PACKED_TAIL_FOLD``.
 
+Section splitting (``max_section_rows`` — DESIGN.md §4): the
+section-streaming engine (§3.16) holds ONE section's streams live at a
+time, so its peak memory is the largest section — useless if one giant
+layer stack is most of the model. With a nonzero cap, any trunk section
+longer than ``max_section_rows`` LANE-wide rows is split at leaf
+boundaries into consecutive sections of at most the cap (a single leaf
+larger than the cap stays one section — leaf runs never straddle
+sections, so the reachable bound is
+``max(max_section_rows, ceil(largest_leaf / LANE))`` rows,
+``peak_section_rows()``). Exactly like coalescing, the split moves no
+data: leaf offsets are identical at every cap (every leaf start is
+already ROW_QUANTUM-aligned); only the Section partition — and so the
+per-section stream folds — changes. The ω̃ tail is never split.
+
 Packers are cached on (treedef, shapes, dtypes, tail, sections,
-min_section_rows), so tracing a step re-uses the offsets computed at the
-first call.
+min_section_rows, max_section_rows), so tracing a step re-uses the
+offsets computed at the first call.
 """
 from __future__ import annotations
 
@@ -156,26 +170,52 @@ class TreePacker:
     the Section partition (and so the stream folds) changes. ``0``
     (the default) reproduces the uncoalesced layout bit-exactly.
 
+    ``max_section_rows`` (``sections="toplevel"`` only) splits, AFTER
+    coalescing, any trunk section longer than that many rows at leaf
+    boundaries into consecutive sections of at most the cap — the
+    memory-budget knob of the section-streaming engine (DESIGN.md
+    §3.16): peak live streams are one section, so the cap bounds them.
+    A leaf larger than the cap stays one oversized section (runs never
+    straddle sections); the tail is never split. Like coalescing this
+    never moves data — only the partition and stream folds change —
+    and ``0`` (the default) performs no split.
+
     The template must carry ONE uniform leaf dtype: the slab is a single
     flat buffer and the zero-copy maps alias leaf storage in place, so a
     mixed-dtype tree has no representable layout — cast it first.
     """
 
     def __init__(self, template, tail: Optional[str] = "final",
-                 sections: str = "tail", min_section_rows: int = 0):
+                 sections: str = "tail", min_section_rows: int = 0,
+                 max_section_rows: int = 0):
         if sections not in ("tail", "toplevel"):
             raise ValueError(
                 f"sections must be 'tail' or 'toplevel', got {sections!r}")
         min_section_rows = int(min_section_rows)
+        max_section_rows = int(max_section_rows)
         if min_section_rows < 0:
             raise ValueError(
                 f"min_section_rows must be >= 0, got {min_section_rows}")
+        if max_section_rows < 0:
+            raise ValueError(
+                f"max_section_rows must be >= 0, got {max_section_rows}")
         if sections == "tail" and min_section_rows:
             raise ValueError(
                 "min_section_rows requires sections='toplevel': the legacy "
                 "two-section layout has no trunk groups to coalesce "
                 f"(got min_section_rows={min_section_rows})")
+        if sections == "tail" and max_section_rows:
+            raise ValueError(
+                "max_section_rows requires sections='toplevel': the legacy "
+                "two-section layout has no trunk sections to split "
+                f"(got max_section_rows={max_section_rows})")
+        if max_section_rows and max_section_rows < min_section_rows:
+            raise ValueError(
+                f"max_section_rows ({max_section_rows}) < min_section_rows "
+                f"({min_section_rows}): the coalescer would merge sections "
+                f"the splitter immediately re-cuts — contradictory layout")
         self.min_section_rows = min_section_rows
+        self.max_section_rows = max_section_rows
         paths_leaves, treedef = jtu.tree_flatten_with_path(template)
         self.treedef = treedef
         self.tail_name = tail
@@ -281,6 +321,35 @@ class TreePacker:
                     merged[-1][3].extend(open_grp[3])
                 else:
                     merged.append(open_grp)
+            # Phase 2b: split over-cap trunk sections at leaf boundaries
+            # (every leaf start is ROW_QUANTUM-aligned, so every piece
+            # is too — no data moves, only the partition/folds change).
+            # A single leaf longer than the cap stays one section: leaf
+            # runs never straddle sections.
+            if max_section_rows:
+                cap = max_section_rows * LANE
+                split: List[List[Any]] = []
+                for sec_names, start, length, leaf_list in merged:
+                    if length <= cap:
+                        split.append([sec_names, start, length, leaf_list])
+                        continue
+                    base = "+".join(sec_names)
+                    end = start + length
+                    pieces: List[Tuple[int, List[int]]] = []
+                    p_start, p_leaves = start, []
+                    for i in leaf_list:
+                        slot = self.slots[i]
+                        if p_leaves and round_up(
+                                slot.offset + slot.size - p_start,
+                                ROW_QUANTUM) > cap:
+                            pieces.append((p_start, p_leaves))
+                            p_start, p_leaves = slot.offset, []
+                        p_leaves.append(i)
+                    pieces.append((p_start, p_leaves))
+                    for k, (ps, pl) in enumerate(pieces):
+                        pe = pieces[k + 1][0] if k + 1 < len(pieces) else end
+                        split.append([[f"{base}[{k}]"], ps, pe - ps, pl])
+                merged = split
             merged.extend([[a[0]], a[1], a[2], list(a[3])]
                           for a in atoms if a[4])
             self.order = []
@@ -309,6 +378,14 @@ class TreePacker:
                 runs.append(LeafRun(i, sec.index, slot.offset - sec.start,
                                     slot.size))
         return runs
+
+    def peak_section_rows(self) -> int:
+        """Largest section in LANE-wide rows — the peak live stream
+        footprint of the section-streaming engine (DESIGN.md §3.16).
+        With ``max_section_rows`` set this is at most
+        ``max(max_section_rows, ceil(largest_leaf / LANE))``; computable
+        from the template alone (no weights materialized)."""
+        return max(sec.length for sec in self.sections) // LANE
 
     def chunk_leaf_map(
             self, chunk: int,
@@ -462,9 +539,10 @@ _PACKER_CACHE: Dict[Any, TreePacker] = {}
 
 def packer_for(tree, tail: Optional[str] = "final",
                sections: str = "tail",
-               min_section_rows: int = 0) -> TreePacker:
+               min_section_rows: int = 0,
+               max_section_rows: int = 0) -> TreePacker:
     """Cached TreePacker for ``tree``'s (treedef, shapes, dtypes, tail,
-    sections, min_section_rows).
+    sections, min_section_rows, max_section_rows).
 
     ``tree`` may hold arrays, tracers or ShapeDtypeStructs — only the
     static structure is read.
@@ -472,12 +550,13 @@ def packer_for(tree, tail: Optional[str] = "final",
     leaves, treedef = jax.tree.flatten(tree)
     key = (treedef, tuple((tuple(l.shape), jnp.dtype(l.dtype).name)
                           for l in leaves), tail, sections,
-           int(min_section_rows))
+           int(min_section_rows), int(max_section_rows))
     packer = _PACKER_CACHE.get(key)
     if packer is None:
         packer = TreePacker(
             treedef.unflatten([jax.ShapeDtypeStruct(tuple(l.shape), l.dtype)
                                for l in leaves]), tail, sections=sections,
-            min_section_rows=min_section_rows)
+            min_section_rows=min_section_rows,
+            max_section_rows=max_section_rows)
         _PACKER_CACHE[key] = packer
     return packer

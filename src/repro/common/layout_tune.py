@@ -10,14 +10,23 @@ draw. This module makes the choice once, explicitly, and persistable:
 
 * ``tune_layout(template, C, N)`` runs a one-shot calibration bench per
   model template — a coalescing-threshold sweep over
-  ``sections="toplevel"`` packers, the legacy two-section layout, and
+  ``sections="toplevel"`` packers for both the full-slab and the
+  section-streaming engine (§3.16), the legacy two-section layout, and
   the per-leaf engine — and returns the fastest as a ``LayoutChoice``.
-  Results are cached per (template structure, C, N), so a sweep bank or
-  a restarted trainer never re-times a template it has seen.
+  ``memory_budget_bytes`` excludes candidates whose estimated peak
+  aggregation working set (``estimate_peak_slab_bytes``) exceeds the
+  budget and adds a sectioned candidate with ``max_section_rows`` sized
+  to fit — the billion-parameter path where full-slab layouts cannot
+  run at all. Results are cached per (template structure, C, N), so a
+  sweep bank or a restarted trainer never re-times a template it has
+  seen.
 * ``apply_layout(fl, choice)`` writes the choice into ``FLConfig``'s
-  static layout fields (``use_pallas_ota`` / ``ota_sections`` /
-  ``min_section_rows``), which `sim.step_with_channel`, the slab-native
-  distributed step and the sweep banks all consume.
+  static layout fields (``use_pallas_ota`` / ``ota_sectioned`` /
+  ``ota_sections`` / ``min_section_rows`` / ``max_section_rows``),
+  which `sim.step_with_channel`, the slab-native distributed step and
+  the sweep banks all consume. It raises ``LayoutUnavailableError``
+  when a (typically cached) choice names an engine the gates cannot
+  run, so stale caches fail at config time with the layout named.
 * ``LayoutChoice.to_metadata()`` is what the checkpoint layer persists:
   section folds — and therefore all channel streams — depend on the
   layout, so a restore under a different layout would silently change
@@ -38,58 +47,171 @@ import jax.numpy as jnp
 
 from repro.common.config import FLConfig
 from repro.common.flatpack import packer_for
+from repro.kernels.slab import LANE
 
 # threshold sweep, in slab rows (x128 lanes): 0 = uncoalesced; 1024 rows
 # = one full stream chunk (CHUNK_ROWS), the natural upper useful bound —
 # any larger threshold cannot reduce the per-section chunk waste further
 DEFAULT_THRESHOLDS: Tuple[int, ...] = (0, 64, 256, 1024)
 
+# every engine a LayoutChoice may legally name; anything else is a
+# stale/foreign cache entry and must fail loudly, not deep in tracing
+ENGINES: Tuple[str, ...] = ("slab", "sectioned", "perleaf")
+
+
+class LayoutUnavailableError(ValueError):
+    """A LayoutChoice names an engine/section combination the current
+    gates cannot run (DESIGN.md §3.16) — e.g. a stale disk-cache entry
+    with ``engine="sectioned"`` on the legacy two-section layout, or an
+    engine string this build does not know. Raised by ``apply_layout``
+    (and ``LayoutChoice.from_metadata``) so the failure happens at
+    config time with the layout named, not as a shape/trace error deep
+    inside the step."""
+
 
 class LayoutChoice(NamedTuple):
     """One tuned packed-layout decision — the unit the manifest pins."""
-    engine: str             # "slab" | "perleaf"
+    engine: str             # "slab" | "sectioned" | "perleaf"
     sections: str           # "toplevel" | "tail" (legacy two-section)
     min_section_rows: int   # coalescing threshold (slab rows; 0 = off)
+    max_section_rows: int = 0   # section split cap (slab rows; 0 = off)
 
     def to_metadata(self) -> Dict[str, Any]:
-        return {"engine": self.engine, "sections": self.sections,
-                "min_section_rows": int(self.min_section_rows)}
+        md = {"engine": self.engine, "sections": self.sections,
+              "min_section_rows": int(self.min_section_rows)}
+        # emitted only when set: keeps the metadata dict — which the
+        # checkpoint manifest compares verbatim — byte-identical to
+        # pre-sectioned builds for every pre-sectioned layout
+        if self.max_section_rows:
+            md["max_section_rows"] = int(self.max_section_rows)
+        return md
 
     @classmethod
     def from_metadata(cls, md: Dict[str, Any]) -> "LayoutChoice":
-        return cls(str(md["engine"]), str(md["sections"]),
-                   int(md["min_section_rows"]))
+        choice = cls(str(md["engine"]), str(md["sections"]),
+                     int(md["min_section_rows"]),
+                     int(md.get("max_section_rows", 0)))
+        _check_available(choice)
+        return choice
 
     def describe(self) -> str:
         if self.engine == "perleaf":
             return "perleaf"
-        return (f"slab/sections={self.sections}"
+        desc = (f"{self.engine}/sections={self.sections}"
                 f"/min_section_rows={self.min_section_rows}")
+        if self.max_section_rows:
+            desc += f"/max_section_rows={self.max_section_rows}"
+        return desc
+
+
+def _check_available(choice: LayoutChoice) -> None:
+    """Raise LayoutUnavailableError unless ``choice`` names a runnable
+    engine/layout combination under the FLConfig gates."""
+    if choice.engine not in ENGINES:
+        raise LayoutUnavailableError(
+            f"layout names unknown engine {choice.engine!r} (known: "
+            f"{', '.join(ENGINES)}) — likely a stale or foreign "
+            "layout-tune cache / checkpoint entry; re-tune the layout")
+    if choice.engine == "sectioned" and choice.sections != "toplevel":
+        raise LayoutUnavailableError(
+            f"layout {choice.describe()} is unavailable: the sectioned "
+            "engine streams the multi-section layout and requires "
+            "sections='toplevel' (DESIGN.md §3.16); the legacy "
+            f"{choice.sections!r} layout has no section structure to "
+            "stream. Re-tune or pick a slab/perleaf layout.")
+    if choice.engine == "perleaf" and (choice.min_section_rows
+                                       or choice.max_section_rows):
+        raise LayoutUnavailableError(
+            f"layout {choice.describe()} is unavailable: the per-leaf "
+            "engine has no packed sections, so min/max_section_rows "
+            "would be silently inert — a stale cache entry; re-tune.")
+    if choice.max_section_rows < 0:
+        raise LayoutUnavailableError(
+            f"layout {choice.describe()} is unavailable: "
+            "max_section_rows must be >= 0")
+    if (0 < choice.max_section_rows < choice.min_section_rows):
+        raise LayoutUnavailableError(
+            f"layout {choice.describe()} is unavailable: "
+            "max_section_rows < min_section_rows cannot be packed "
+            "(split pieces would violate the coalescing floor)")
 
 
 def layout_of(fl: FLConfig) -> LayoutChoice:
     """The LayoutChoice an FLConfig currently encodes."""
-    return LayoutChoice("slab" if fl.use_pallas_ota else "perleaf",
-                        fl.ota_sections, fl.min_section_rows)
+    if not fl.use_pallas_ota:
+        return LayoutChoice("perleaf", fl.ota_sections,
+                            fl.min_section_rows, fl.max_section_rows)
+    return LayoutChoice("sectioned" if fl.ota_sectioned else "slab",
+                        fl.ota_sections, fl.min_section_rows,
+                        fl.max_section_rows)
 
 
 def apply_layout(fl: FLConfig, choice: LayoutChoice) -> FLConfig:
-    """FLConfig with the tuned layout written into its static fields."""
+    """FLConfig with the tuned layout written into its static fields.
+
+    Raises :class:`LayoutUnavailableError` when the choice — typically
+    a cached/persisted one — names an engine the current gates cannot
+    run, so a stale cache fails here with the layout named instead of
+    as a trace error inside the step."""
     import dataclasses
+    _check_available(choice)
     return dataclasses.replace(
-        fl, use_pallas_ota=(choice.engine == "slab"),
+        fl, use_pallas_ota=(choice.engine != "perleaf"),
+        ota_sectioned=(choice.engine == "sectioned"),
         ota_sections=choice.sections,
-        min_section_rows=int(choice.min_section_rows))
+        min_section_rows=int(choice.min_section_rows),
+        max_section_rows=int(choice.max_section_rows))
 
 
 def packer_for_layout(template, choice: LayoutChoice, tail: str = "final"):
-    """The (cached) TreePacker a slab LayoutChoice denotes."""
-    if choice.engine != "slab":
+    """The (cached) TreePacker a slab/sectioned LayoutChoice denotes."""
+    if choice.engine == "perleaf":
         raise ValueError(
             f"layout {choice.describe()} uses the per-leaf engine — it has "
             "no packer")
     return packer_for(template, tail=tail, sections=choice.sections,
-                      min_section_rows=choice.min_section_rows)
+                      min_section_rows=choice.min_section_rows,
+                      max_section_rows=choice.max_section_rows)
+
+
+# ---------------------------------------------------------------------------
+# memory model: what a candidate's aggregation intermediates cost
+# ---------------------------------------------------------------------------
+
+def estimate_peak_slab_bytes(template, choice: LayoutChoice,
+                             n_clusters: int, n_clients: int) -> int:
+    """Estimated peak f32 bytes the aggregation intermediates of
+    ``choice`` hold live at once (DESIGN.md §3.16).
+
+    The model counts LANE-padded slab rows times the per-row working
+    set: C*N packed gradient blocks + C gain streams + one noise stream
+    + one running estimate, i.e. ``4 * LANE * rows * (C*(N+1) + 2)``.
+    ``rows`` is the whole slab for the full-slab engines, the peak
+    SECTION for the sectioned engine, and the largest single leaf for
+    the per-leaf engine. Deliberately coarse — it ranks engines for the
+    budget constraint and the benches; it is not an allocator."""
+    C, N = int(n_clusters), int(n_clients)
+    per_row = 4 * LANE * (C * (N + 1) + 2)
+    if choice.engine == "perleaf":
+        leaves = jax.tree.leaves(template)
+        rows = max((-(-int(np_size(l)) // LANE) for l in leaves),
+                   default=0)
+    else:
+        packer = packer_for_layout(template, choice)
+        rows = (packer.peak_section_rows()
+                if choice.engine == "sectioned" else packer.n_rows)
+    return rows * per_row
+
+
+def np_size(leaf) -> int:
+    """Element count of an array or ShapeDtypeStruct leaf."""
+    size = getattr(leaf, "size", None)
+    if size is not None:
+        return int(size)
+    n = 1
+    for d in leaf.shape:
+        n *= int(d)
+    return n
 
 
 # ---------------------------------------------------------------------------
@@ -117,20 +239,43 @@ def _grad_tree(template, n_clusters: int, n_clients: int, key):
     return jax.tree.unflatten(treedef, out)
 
 
+class LayoutBudgetError(ValueError):
+    """``memory_budget_bytes`` excluded every candidate layout — even
+    the tightest sectioned split exceeds the budget (its floor is the
+    largest single leaf; DESIGN.md §4 split rule). Raised with the
+    smallest candidate named so the caller can loosen the budget."""
+
+
+def _budget_section_rows(n_clusters: int, n_clients: int,
+                         memory_budget_bytes: int) -> int:
+    """Largest max_section_rows whose estimated per-section working set
+    (see ``estimate_peak_slab_bytes``) fits the budget."""
+    per_row = 4 * LANE * (int(n_clusters) * (int(n_clients) + 1) + 2)
+    return max(1, int(memory_budget_bytes) // per_row)
+
+
 def calibrate_layout(template, n_clusters: int, n_clients: int,
                      thresholds: Tuple[int, ...] = DEFAULT_THRESHOLDS,
                      iters: int = 3,
                      include_perleaf: bool = True,
+                     memory_budget_bytes: Optional[int] = None,
                      ) -> Tuple[LayoutChoice, List[Dict[str, Any]]]:
     """Time every candidate layout on this template and return
     (winner, per-candidate report).
 
-    Candidates: ``sections="toplevel"`` at each coalescing threshold,
+    Candidates: ``sections="toplevel"`` at each coalescing threshold
+    for BOTH the full-slab (client-folded) and the sectioned engine,
     the legacy two-section layout, and (optionally) the per-leaf jnp
     engine. All candidates run the SAME math from the same raw
     (C, N, ...) gradients — they differ only in stream layout and
     engine, which is the whole point: the choice is free to make.
-    Report entries: {"layout", "us", "choice"}.
+
+    ``memory_budget_bytes`` is the §3.16 constraint: candidates whose
+    ``estimate_peak_slab_bytes`` exceeds it are excluded from timing
+    (reported with ``us=None``), and one extra sectioned candidate is
+    added with ``max_section_rows`` sized to the budget. If nothing
+    fits, raises :class:`LayoutBudgetError`.
+    Report entries: {"layout", "us", "peak_bytes", "choice"}.
     """
     from repro.core import ota
     from repro.core.channel import channel_params
@@ -148,14 +293,32 @@ def calibrate_layout(template, n_clusters: int, n_clients: int,
 
     candidates: List[LayoutChoice] = [
         LayoutChoice("slab", "toplevel", t) for t in dict.fromkeys(thresholds)
-    ] + [LayoutChoice("slab", "tail", 0)]
+    ] + [LayoutChoice("slab", "tail", 0)] + [
+        LayoutChoice("sectioned", "toplevel", t)
+        for t in dict.fromkeys(thresholds)
+    ]
+    if memory_budget_bytes is not None:
+        rows = _budget_section_rows(n_clusters, n_clients,
+                                    memory_budget_bytes)
+        candidates.append(LayoutChoice("sectioned", "toplevel", 0, rows))
     if include_perleaf:
         candidates.append(LayoutChoice("perleaf", "toplevel", 0))
 
     report: List[Dict[str, Any]] = []
     best: Optional[Tuple[float, LayoutChoice]] = None
-    for choice in candidates:
-        if choice.engine == "slab":
+    for choice in dict.fromkeys(candidates):
+        peak = estimate_peak_slab_bytes(template, choice,
+                                        n_clusters, n_clients)
+        if memory_budget_bytes is not None and peak > memory_budget_bytes:
+            report.append({"layout": choice.describe(), "us": None,
+                           "peak_bytes": peak, "choice": choice})
+            continue
+        if choice.engine == "sectioned":
+            packer = packer_for_layout(template, choice)
+            fn = jax.jit(lambda k, gg, pp, ch, pk=packer:
+                         ota.ota_aggregate_sectioned(
+                             k, gg, pp, ch, n_clients, pk))
+        elif choice.engine == "slab":
             packer = packer_for_layout(template, choice)
             fn = jax.jit(lambda k, gg, pp, ch, pk=packer:
                          ota.ota_aggregate_client_folded(
@@ -167,9 +330,17 @@ def calibrate_layout(template, n_clusters: int, n_clients: int,
                 ch, n_clients))
         us = _time(fn, key, g, p, chan, iters=iters) * 1e6
         report.append({"layout": choice.describe(), "us": us,
-                       "choice": choice})
+                       "peak_bytes": peak, "choice": choice})
         if best is None or us < best[0]:
             best = (us, choice)
+    if best is None:
+        smallest = min(report, key=lambda r: r["peak_bytes"])
+        raise LayoutBudgetError(
+            f"memory_budget_bytes={memory_budget_bytes} excludes every "
+            f"candidate layout; smallest is {smallest['layout']} at "
+            f"{smallest['peak_bytes']} estimated peak bytes (floor: the "
+            "largest single leaf — DESIGN.md §4 split rule). Loosen the "
+            "budget.")
     return best[1], report
 
 
@@ -183,7 +354,8 @@ DEFAULT_CACHE_PATH = os.path.join(
 
 def template_hash(template, n_clusters: int, n_clients: int,
                   thresholds: Tuple[int, ...] = DEFAULT_THRESHOLDS,
-                  include_perleaf: bool = True) -> str:
+                  include_perleaf: bool = True,
+                  memory_budget_bytes: Optional[int] = None) -> str:
     """Stable digest of everything a calibration result depends on: the
     template's tree structure + leaf shapes/dtypes, the (C, N) topology
     and the candidate set. This is the persisted cache key — NOT the
@@ -194,6 +366,10 @@ def template_hash(template, n_clusters: int, n_clients: int,
                        for l in leaves),
                  int(n_clusters), int(n_clients), tuple(thresholds),
                  bool(include_perleaf)))
+    # appended only when set, so unconstrained tunes keep their
+    # pre-sectioned hashes and the existing disk caches stay warm
+    if memory_budget_bytes is not None:
+        desc += repr(int(memory_budget_bytes))
     return hashlib.sha256(desc.encode()).hexdigest()[:16]
 
 
@@ -225,7 +401,8 @@ def tune_layout(template, n_clusters: int, n_clients: int,
                 thresholds: Tuple[int, ...] = DEFAULT_THRESHOLDS,
                 iters: int = 3,
                 include_perleaf: bool = True,
-                cache_path: Optional[str] = None) -> LayoutChoice:
+                cache_path: Optional[str] = None,
+                memory_budget_bytes: Optional[int] = None) -> LayoutChoice:
     """Cached one-shot calibration: the fastest LayoutChoice for this
     template at this (C, N) topology. The cache key is the template's
     static structure — a sweep bank or restarted trainer re-uses the
@@ -241,7 +418,7 @@ def tune_layout(template, n_clusters: int, n_clients: int,
     key = (treedef,
            tuple((tuple(l.shape), jnp.dtype(l.dtype).name) for l in leaves),
            int(n_clusters), int(n_clients), tuple(thresholds),
-           bool(include_perleaf))
+           bool(include_perleaf), memory_budget_bytes)
     choice = _TUNE_CACHE.get(key)
     if choice is not None:
         return choice
@@ -249,11 +426,15 @@ def tune_layout(template, n_clusters: int, n_clients: int,
         cache_path = os.environ.get("REPRO_LAYOUT_CACHE",
                                     DEFAULT_CACHE_PATH)
     h = template_hash(template, n_clusters, n_clients, thresholds,
-                      include_perleaf)
+                      include_perleaf, memory_budget_bytes)
     if cache_path:
         entry = _load_disk_cache(cache_path).get(h)
         if entry is not None:
             try:
+                # from_metadata validates availability, so an entry
+                # naming an engine the current gates cannot run
+                # (LayoutUnavailableError) is re-measured here instead
+                # of crashing later inside step tracing
                 choice = LayoutChoice.from_metadata(entry)
             except (KeyError, TypeError, ValueError):
                 choice = None      # stale/foreign entry: re-measure
@@ -262,7 +443,8 @@ def tune_layout(template, n_clusters: int, n_clients: int,
             return choice
     choice, _ = calibrate_layout(template, n_clusters, n_clients,
                                  thresholds=thresholds, iters=iters,
-                                 include_perleaf=include_perleaf)
+                                 include_perleaf=include_perleaf,
+                                 memory_budget_bytes=memory_budget_bytes)
     _TUNE_CACHE[key] = choice
     if cache_path:
         _store_disk_cache(cache_path, {h: choice.to_metadata()})
@@ -271,7 +453,8 @@ def tune_layout(template, n_clusters: int, n_clients: int,
 
 def tuned_fl(fl: FLConfig, template, iters: int = 3,
              include_perleaf: Optional[bool] = None,
-             cache_path: Optional[str] = None) -> FLConfig:
+             cache_path: Optional[str] = None,
+             memory_budget_bytes: Optional[int] = None) -> FLConfig:
     """``fl`` with the tuned layout for ``template`` written into its
     static fields — the one-line default-on entry point the launchers
     use. Checkpoint manifests pin the resulting layout (layout_of), so
@@ -285,5 +468,6 @@ def tuned_fl(fl: FLConfig, template, iters: int = 3,
         include_perleaf = not fl.faults
     choice = tune_layout(template, fl.n_clusters, fl.n_clients,
                          iters=iters, include_perleaf=include_perleaf,
-                         cache_path=cache_path)
+                         cache_path=cache_path,
+                         memory_budget_bytes=memory_budget_bytes)
     return apply_layout(fl, choice)

@@ -87,16 +87,18 @@ def packed_omega_key(base_key: jax.Array) -> jax.Array:
 
 
 def omega_packer(template, sections: str = "toplevel",
-                 min_section_rows: int = 0) -> TreePacker:
+                 min_section_rows: int = 0,
+                 max_section_rows: int = 0) -> TreePacker:
     """The slab-native layout of one omega template, all-f32. Defaults
     to multi-section (per layer-stack trunk sections, ω̃ tail last);
-    ``sections``/``min_section_rows`` come from the tuned LayoutChoice
-    (repro.common.layout_tune) so the engine, the simulator and the
-    checkpoint manifest agree on one stream layout."""
+    ``sections``/``min_section_rows``/``max_section_rows`` come from the
+    tuned LayoutChoice (repro.common.layout_tune) so the engine, the
+    simulator and the checkpoint manifest agree on one stream layout."""
     f32 = jax.tree.map(
         lambda l: jax.ShapeDtypeStruct(tuple(l.shape), jnp.float32), template)
     return packer_for(f32, tail="final", sections=sections,
-                      min_section_rows=min_section_rows)
+                      min_section_rows=min_section_rows,
+                      max_section_rows=max_section_rows)
 
 
 # ---------------------------------------------------------------------------
@@ -109,9 +111,11 @@ def make_packed_omega_gather(data_axes: Tuple[str, ...],
                              template, axes_list: List[tuple],
                              n_clusters: Optional[int] = None,
                              interpret: Optional[bool] = None,
-                             count_mode: str = "psum",
+                             count_mode: Optional[str] = None,
                              sections: str = "toplevel",
-                             min_section_rows: int = 0):
+                             min_section_rows: int = 0,
+                             max_section_rows: int = 0,
+                             sectioned: bool = False):
     """Custom-vjp FSDP gather for the ENTIRE shared model {trunk, final}.
 
     forward : per-leaf all-gather of the FSDP shards -> full tree
@@ -139,20 +143,39 @@ def make_packed_omega_gather(data_axes: Tuple[str, ...],
     ``count_mode`` picks how |M| reaches the estimate (identical values
     either way — masks are pure stream functions):
 
-    * ``"psum"`` (default): draw only THIS cluster's stream; the region-
-      sliced mask rides the same pytree MAC psum as the data. Minimal
-      PRNG volume — right on CPU and small meshes.
+    * ``"psum"``: draw only THIS cluster's stream; the region-sliced
+      mask rides the same pytree MAC psum as the data. Minimal PRNG
+      volume — right on CPU and small meshes.
     * ``"local"``: draw EVERY cluster's stream and count locally via the
       fused ``ota_mask_count_apply`` kernel — zero mask collectives at
       C× the PRNG. Right where collectives cross pods and PRNG is
       hardware (TPU, DESIGN.md §3.10).
+    * ``None`` (default): by platform — "local" on TPU, "psum"
+      elsewhere, resolved at gather build time like ``interpret``.
+
+    ``sectioned`` (DESIGN.md §3.16) makes the Section partition the unit
+    of scheduling: the backward walks the layout one section at a time
+    — draw that section's streams, mask/apply its leaf runs, ISSUE its
+    psums — and finalizes (AWGN + guarded estimate + shard slice) each
+    section one step LATE, so section s's collectives are in flight
+    while section s+1 draws and packs (double-buffered carry). Peak live
+    streams are one section's (bounded by ``max_section_rows``), never
+    the (P,) or (C,P) slab; per-leaf values are bit-identical to the
+    full-slab schedule (same streams, same kernels — only stream
+    lifetime and psum grouping change, and psum is per-leaf
+    elementwise).
     """
+    if count_mode is None:
+        # default-by-platform (ROADMAP): zero-mask-collective local
+        # counting where the PRNG is hardware; minimal PRNG volume
+        # where it is not. Resolved at gather build time (post backend
+        # selection), never at module import.
+        count_mode = "local" if on_tpu() else "psum"
     assert count_mode in ("psum", "local"), count_mode
-    # platform resolved NOW (gather build time, post backend selection),
-    # never at module import — see repro.kernels.slab.on_tpu
     interp = (not on_tpu()) if interpret is None else interpret
     packer = omega_packer(template, sections=sections,
-                          min_section_rows=min_section_rows)
+                          min_section_rows=min_section_rows,
+                          max_section_rows=max_section_rows)
     folds = packed_section_folds(packer)
     runs = {run.leaf: run for run in packer.leaf_runs()}
     n_leaves = len(packer.slots)
@@ -208,9 +231,6 @@ def make_packed_omega_gather(data_axes: Tuple[str, ...],
                 [(lambda s=s: stream_range_bits(key, s, length))
                  for s in range(start, start + n_clients * length, length)])
 
-        reg_idx = [i for i in range(n_leaves) if fsdp_axes[i] >= 0]
-        rep_idx = [i for i in range(n_leaves) if fsdp_axes[i] < 0]
-
         # Partial participation (DESIGN.md §3.14): a dead cluster (ctx.live
         # = 0) contributes neither data nor mask count to the MAC psums —
         # its local y/mask are zeroed pre-collective (psum mode) or masked
@@ -219,152 +239,195 @@ def make_packed_omega_gather(data_axes: Tuple[str, ...],
         live_me = None if ctx.live is None else ctx.live[cidx]
         denom = (jnp.float32(n_clients) if ctx.n_eff is None
                  else jnp.maximum(ctx.n_eff, 1.0))
+        grads = [None] * n_leaves
 
-        if count_mode == "local":
-            # TPU-oriented variant: draw EVERY cluster's stream and count
-            # |M| locally via the fused kernel — zero mask collectives at
-            # C× the (hardware-cheap) PRNG; cnt is exact because masks
-            # are pure stream functions.
-            gbits_all = [jnp.stack([
-                _chunked_stream(section_gain_key(ctx.key, folds[s.index],
-                                                 c), s.length)
-                for c in range(n_cl)]) for s in packer.sections]
-            outs, cnts = [], []
-            for i in range(n_leaves):
-                run = runs[i]
-                b = jax.lax.slice(gbits_all[run.section], (0, run.offset),
-                                  (n_cl, run.offset + run.size))
-                o, c = ota_mask_count_apply(
-                    leaves[i].astype(jnp.float32), b, cidx, ctx.sigma2,
-                    ctx.h_th, ctx.ota_on, ctx.p_weight,
-                    live_all=ctx.live, interpret=interp)
-                outs.append(o)
-                cnts.append(c)
-            y_reg = [jax.lax.psum_scatter(outs[i], CLIENT_AXIS,
-                                          scatter_dimension=fsdp_axes[i],
-                                          tiled=True) for i in reg_idx]
-            cnt_reg = [_region(cnts[i], i) for i in reg_idx]
-            cnt_rep = [cnts[i] for i in rep_idx]
-            if reg_idx:
-                y_reg = jax.lax.psum(y_reg, tuple(cluster_axes))
-            y_rep = (jax.lax.psum([outs[i] for i in rep_idx],
-                                  (CLIENT_AXIS,) + tuple(cluster_axes))
-                     if rep_idx else [])
-        else:
-            # default pipeline: LAN psum_scatter FIRST (mask commutes
-            # with the client sum — it is cluster-constant), then this
-            # cluster's REGION mask on a region-sized stream draw; the
-            # mask rides the same pytree MAC psum as the data.
-            y_reg, mask_reg = [], []
-            gkeys = [section_gain_key(ctx.key, folds[s.index], cidx)
-                     for s in packer.sections]
-            full_bits = {}          # sections needing a full draw
-            for i in rep_idx + [i for i in reg_idx if not _contig(i)]:
-                s = runs[i].section
-                if s not in full_bits:
-                    full_bits[s] = _chunked_stream(
-                        gkeys[s], packer.sections[s].length)
-            for i in reg_idx:
-                run, ax = runs[i], fsdp_axes[i]
-                g32 = leaves[i].astype(jnp.float32)
-                if _contig(i):
-                    x_reg = jax.lax.psum_scatter(
-                        ctx.p_weight * g32, CLIENT_AXIS,
-                        scatter_dimension=ax, tiled=True)
-                    lreg = run.size // n_clients
-                    b = _range_draw(gkeys[run.section], run.offset, lreg)
-                    o, m = ota_mask_weight_apply(
-                        x_reg, b, sig_me, ctx.h_th, ctx.ota_on, 1.0,
-                        interpret=interp)
-                    if live_me is not None:
-                        o, m = o * live_me, m * live_me
-                    y_reg.append(o)
-                    mask_reg.append(m)
-                else:
-                    b = jax.lax.slice(full_bits[run.section],
-                                      (run.offset,),
+        def _collect(idxs):
+            """Local channel work + the group's collectives for the
+            leaves ``idxs``. Returns ({leaf: y}, {leaf: cnt}), post-psum
+            for FSDP leaves. A group is the whole model (full-slab
+            schedule) or ONE section (sectioned schedule): per-leaf
+            values are bit-identical either way — only the stream
+            lifetime and the psum grouping differ, and the psums are
+            per-leaf elementwise."""
+            reg_idx = [i for i in idxs if fsdp_axes[i] >= 0]
+            rep_idx = [i for i in idxs if fsdp_axes[i] < 0]
+            if count_mode == "local":
+                # TPU-oriented variant: draw EVERY cluster's stream and
+                # count |M| locally via the fused kernel — zero mask
+                # collectives at C× the (hardware-cheap) PRNG; cnt is
+                # exact because masks are pure stream functions.
+                secs = sorted({runs[i].section for i in idxs})
+                gbits_all = {s: jnp.stack([
+                    _chunked_stream(
+                        section_gain_key(ctx.key, folds[s], c),
+                        packer.sections[s].length)
+                    for c in range(n_cl)]) for s in secs}
+                outs, cnts = {}, {}
+                for i in idxs:
+                    run = runs[i]
+                    b = jax.lax.slice(gbits_all[run.section],
+                                      (0, run.offset),
+                                      (n_cl, run.offset + run.size))
+                    o, c = ota_mask_count_apply(
+                        leaves[i].astype(jnp.float32), b, cidx, ctx.sigma2,
+                        ctx.h_th, ctx.ota_on, ctx.p_weight,
+                        live_all=ctx.live, interpret=interp)
+                    outs[i], cnts[i] = o, c
+                y_reg = [jax.lax.psum_scatter(outs[i], CLIENT_AXIS,
+                                              scatter_dimension=fsdp_axes[i],
+                                              tiled=True) for i in reg_idx]
+                cnt_reg = [_region(cnts[i], i) for i in reg_idx]
+                cnt_rep = [cnts[i] for i in rep_idx]
+                if reg_idx:
+                    y_reg = jax.lax.psum(y_reg, tuple(cluster_axes))
+                y_rep = (jax.lax.psum([outs[i] for i in rep_idx],
+                                      (CLIENT_AXIS,) + tuple(cluster_axes))
+                         if rep_idx else [])
+            else:
+                # default pipeline: LAN psum_scatter FIRST (mask commutes
+                # with the client sum — it is cluster-constant), then this
+                # cluster's REGION mask on a region-sized stream draw; the
+                # mask rides the same pytree MAC psum as the data.
+                y_reg, mask_reg = [], []
+                full_bits = {}          # sections needing a full draw
+                for i in rep_idx + [i for i in reg_idx if not _contig(i)]:
+                    s = runs[i].section
+                    if s not in full_bits:
+                        full_bits[s] = _chunked_stream(
+                            section_gain_key(ctx.key, folds[s], cidx),
+                            packer.sections[s].length)
+                for i in reg_idx:
+                    run, ax = runs[i], fsdp_axes[i]
+                    g32 = leaves[i].astype(jnp.float32)
+                    if _contig(i):
+                        x_reg = jax.lax.psum_scatter(
+                            ctx.p_weight * g32, CLIENT_AXIS,
+                            scatter_dimension=ax, tiled=True)
+                        lreg = run.size // n_clients
+                        b = _range_draw(
+                            section_gain_key(ctx.key, folds[run.section],
+                                             cidx), run.offset, lreg)
+                        o, m = ota_mask_weight_apply(
+                            x_reg, b, sig_me, ctx.h_th, ctx.ota_on, 1.0,
+                            interpret=interp)
+                        if live_me is not None:
+                            o, m = o * live_me, m * live_me
+                        y_reg.append(o)
+                        mask_reg.append(m)
+                    else:
+                        b = jax.lax.slice(full_bits[run.section],
+                                          (run.offset,),
+                                          (run.offset + run.size,))
+                        o, m = ota_mask_weight_apply(
+                            g32, b, sig_me, ctx.h_th, ctx.ota_on,
+                            ctx.p_weight, interpret=interp)
+                        if live_me is not None:
+                            o, m = o * live_me, m * live_me
+                        y_reg.append(jax.lax.psum_scatter(
+                            o, CLIENT_AXIS, scatter_dimension=ax,
+                            tiled=True))
+                        mask_reg.append(_region(m, i))
+                rep_out, rep_mask = [], []
+                for i in rep_idx:
+                    run = runs[i]
+                    b = jax.lax.slice(full_bits[run.section], (run.offset,),
                                       (run.offset + run.size,))
                     o, m = ota_mask_weight_apply(
-                        g32, b, sig_me, ctx.h_th, ctx.ota_on,
-                        ctx.p_weight, interpret=interp)
+                        leaves[i].astype(jnp.float32), b, sig_me, ctx.h_th,
+                        ctx.ota_on, ctx.p_weight, interpret=interp)
                     if live_me is not None:
                         o, m = o * live_me, m * live_me
-                    y_reg.append(jax.lax.psum_scatter(
-                        o, CLIENT_AXIS, scatter_dimension=ax, tiled=True))
-                    mask_reg.append(_region(m, i))
-            rep_out, rep_mask = [], []
-            for i in rep_idx:
-                run = runs[i]
-                b = jax.lax.slice(full_bits[run.section], (run.offset,),
-                                  (run.offset + run.size,))
-                o, m = ota_mask_weight_apply(
-                    leaves[i].astype(jnp.float32), b, sig_me, ctx.h_th,
-                    ctx.ota_on, ctx.p_weight, interpret=interp)
-                if live_me is not None:
-                    o, m = o * live_me, m * live_me
-                rep_out.append(o)
-                rep_mask.append(m)
-            if reg_idx:
-                y_reg, cnt_reg = jax.lax.psum((y_reg, mask_reg),
-                                              tuple(cluster_axes))
-            else:
-                cnt_reg = []
-            if rep_idx:
-                y_rep = jax.lax.psum(rep_out,
-                                     (CLIENT_AXIS,) + tuple(cluster_axes))
-                cnt_rep = jax.lax.psum(rep_mask, tuple(cluster_axes))
-            else:
-                y_rep, cnt_rep = [], []
+                    rep_out.append(o)
+                    rep_mask.append(m)
+                if reg_idx:
+                    y_reg, cnt_reg = jax.lax.psum((y_reg, mask_reg),
+                                                  tuple(cluster_axes))
+                else:
+                    cnt_reg = []
+                if rep_idx:
+                    y_rep = jax.lax.psum(rep_out,
+                                         (CLIENT_AXIS,) + tuple(cluster_axes))
+                    cnt_rep = jax.lax.psum(rep_mask, tuple(cluster_axes))
+                else:
+                    y_rep, cnt_rep = [], []
 
-        y, cnt = {}, {}
-        y.update(zip(reg_idx, y_reg))
-        y.update(zip(rep_idx, y_rep))
-        cnt.update(zip(reg_idx, cnt_reg))
-        cnt.update(zip(rep_idx, cnt_rep))
+            y, cnt = {}, {}
+            y.update(zip(reg_idx, y_reg))
+            y.update(zip(rep_idx, y_rep))
+            cnt.update(zip(reg_idx, cnt_reg))
+            cnt.update(zip(rep_idx, cnt_rep))
+            return y, cnt
 
-        # AWGN per leaf from the section noise streams; contiguous-region
-        # leaves draw only their region's slice (same switch trick)
-        nkeys = [section_noise_key(ctx.key, folds[s.index])
-                 for s in packer.sections]
-        full_nbits = {}
-        for i in rep_idx + [i for i in reg_idx if not _contig(i)]:
-            s = runs[i].section
-            if s not in full_nbits:
-                full_nbits[s] = _chunked_stream(
-                    nkeys[s], packer.sections[s].length)
-
-        grads = []
-        for i in range(n_leaves):
-            run, ax = runs[i], fsdp_axes[i]
-            if ax >= 0:
-                if _contig(i):
-                    lreg = run.size // n_clients
-                    nb = _range_draw(nkeys[run.section], run.offset, lreg)
-                    z = bits_to_gaussian(nb, 1.0).reshape(y[i].shape)
+        def _finalize(idxs, y, cnt):
+            """AWGN (section noise streams; contiguous-region leaves draw
+            only their region's slice — same switch trick), guarded
+            estimate, own-shard slice. Consumes the group's psum results
+            — the sectioned schedule calls this one section LATE so the
+            collectives overlap the next section's local work."""
+            full_nbits = {}
+            for i in [i for i in idxs if fsdp_axes[i] < 0 or not _contig(i)]:
+                s = runs[i].section
+                if s not in full_nbits:
+                    full_nbits[s] = _chunked_stream(
+                        section_noise_key(ctx.key, folds[s]),
+                        packer.sections[s].length)
+            for i in idxs:
+                run, ax = runs[i], fsdp_axes[i]
+                if ax >= 0:
+                    if _contig(i):
+                        lreg = run.size // n_clients
+                        nb = _range_draw(
+                            section_noise_key(ctx.key, folds[run.section]),
+                            run.offset, lreg)
+                        z = bits_to_gaussian(nb, 1.0).reshape(y[i].shape)
+                    else:
+                        nb = jax.lax.slice(full_nbits[run.section],
+                                           (run.offset,),
+                                           (run.offset + run.size,))
+                        z = _region(bits_to_gaussian(nb, 1.0).reshape(
+                            leaves[i].shape), i)
+                    z = z * ctx.noise_std * ctx.ota_on
+                    ghat = jnp.where(
+                        cnt[i] > 0,
+                        (y[i] + z) / (jnp.maximum(cnt[i], 1.0) * denom),
+                        0.0)
+                    sz = ghat.shape[ax] // n_sub
+                    ghat = jax.lax.dynamic_slice_in_dim(ghat, sub_idx * sz,
+                                                        sz, ax)
                 else:
                     nb = jax.lax.slice(full_nbits[run.section],
                                        (run.offset,),
                                        (run.offset + run.size,))
-                    z = _region(bits_to_gaussian(nb, 1.0).reshape(
-                        leaves[i].shape), i)
-                z = z * ctx.noise_std * ctx.ota_on
-                ghat = jnp.where(
-                    cnt[i] > 0,
-                    (y[i] + z) / (jnp.maximum(cnt[i], 1.0) * denom),
-                    0.0)
-                sz = ghat.shape[ax] // n_sub
-                ghat = jax.lax.dynamic_slice_in_dim(ghat, sub_idx * sz, sz,
-                                                    ax)
-            else:
-                nb = jax.lax.slice(full_nbits[run.section], (run.offset,),
-                                   (run.offset + run.size,))
-                z = (bits_to_gaussian(nb, 1.0).reshape(leaves[i].shape)
-                     * ctx.noise_std * ctx.ota_on)
-                ghat = jnp.where(
-                    cnt[i] > 0,
-                    (y[i] + z) / (jnp.maximum(cnt[i], 1.0) * denom),
-                    0.0)
-            grads.append(ghat)
+                    z = (bits_to_gaussian(nb, 1.0).reshape(leaves[i].shape)
+                         * ctx.noise_std * ctx.ota_on)
+                    ghat = jnp.where(
+                        cnt[i] > 0,
+                        (y[i] + z) / (jnp.maximum(cnt[i], 1.0) * denom),
+                        0.0)
+                grads[i] = ghat
+
+        if sectioned:
+            # section-streaming schedule (DESIGN.md §3.16): walk the
+            # Section partition in layout order, double-buffered — issue
+            # section s's psums, then finalize section s-1 while they
+            # are in flight, so the latency-hiding scheduler overlaps
+            # each section's collectives with the next one's stream draw
+            # + mask/apply. Peak live streams: one section.
+            pending = None
+            for sec in packer.sections:
+                idxs = list(sec.leaf_indices)
+                if not idxs:
+                    continue
+                y, cnt = _collect(idxs)
+                if pending is not None:
+                    _finalize(*pending)
+                pending = (idxs, y, cnt)
+            if pending is not None:
+                _finalize(*pending)
+        else:
+            idxs = list(range(n_leaves))
+            y, cnt = _collect(idxs)
+            _finalize(idxs, y, cnt)
         return (packer.treedef.unflatten(grads),
                 jax.tree.map(_zero_cot, ctx))
 

@@ -199,6 +199,29 @@ def make_hota_step_parts(
             "per-leaf distributed path has no participation-aware "
             "aggregation — use the per-leaf SIMULATOR (repro.core.sim) as "
             "the fault oracle instead (DESIGN.md §3.14)")
+    if fl.ota_streaming:
+        raise ValueError(
+            "fl.ota_streaming is a SIMULATOR engine (DESIGN.md §3.15): the "
+            "distributed round already holds one cluster per device group, "
+            "so there is no cluster batch to stream — the flag would be "
+            "silently inert here. Use fl.ota_sectioned for the section-"
+            "streaming distributed schedule (DESIGN.md §3.16)")
+    if fl.ota_sectioned and not fl.use_pallas_ota:
+        raise ValueError(
+            "fl.ota_sectioned requires the slab engine (use_pallas_ota="
+            "True): the per-leaf distributed path has no section layout to "
+            "stream — the flag would be silently inert (DESIGN.md §3.16)")
+    if fl.ota_sectioned and fl.ota_sections != "toplevel":
+        raise ValueError(
+            "fl.ota_sectioned requires a multi-section layout "
+            "(ota_sections='toplevel'): with the legacy two-section 'tail' "
+            "layout the head IS the whole trunk, so section streaming "
+            "cannot bound peak memory (DESIGN.md §3.16)")
+    if fl.max_section_rows and not fl.use_pallas_ota:
+        raise ValueError(
+            "fl.max_section_rows splits the slab engine's section layout "
+            "(use_pallas_ota=True); on the per-leaf path it would be "
+            "silently inert (DESIGN.md §4)")
 
     head_specs = model.head_specs(n_out)
     final_axes = [a for a in jax.tree.leaves(
@@ -220,7 +243,9 @@ def make_hota_step_parts(
             data_axes, cluster_axes, n_clients, n_shards, compute_dtype,
             omega_template, omega_axes, n_clusters=n_total_clusters,
             sections=fl.ota_sections,
-            min_section_rows=fl.min_section_rows)
+            min_section_rows=fl.min_section_rows,
+            max_section_rows=fl.max_section_rows,
+            sectioned=fl.ota_sectioned)
         # local (per-device) slab length: FSDP leaves contribute their
         # shard, replicated leaves their full size — the SlabAdamState
         # moments layout (repro.optim.adam)

@@ -30,7 +30,12 @@ Two implementations share the math:
   the simulator's hot path — DESIGN.md §3.12) folds eq. 3's Σ_i p_i g_i
   INTO the masked MAC sum and consumes each raw (C, N, ·) gradient leaf
   in place against the multi-section stream layout — no weighted tree,
-  no (C, P) pack copy.
+  no (C, P) pack copy;
+* the **section-streaming path** (``ota_aggregate_sectioned`` —
+  DESIGN.md §3.16) schedules the client-folded math one SECTION at a
+  time (optionally with the §3.15 cluster scan inside each section), so
+  peak live streams are one section of the layout — the
+  billion-parameter memory shape.
 
 Per-leaf channel keys are derived with ``fold_in(cluster_key, leaf_index)``,
 which realizes the paper's "one i.i.d. gain per parameter entry" over an
@@ -669,6 +674,115 @@ def ota_aggregate_streaming(
          jnp.asarray(p, jnp.float32), live_v))
     return ota_stream_finalize(key, acc, chan, n_clients, packer,
                                n_eff=n_eff)
+
+
+def ota_aggregate_sectioned(
+    key: jax.Array,
+    grads,                       # pytree with leading (C, N, ...) leaves
+    p: jax.Array,                # (C, N) loss weights
+    chan: ChannelParams,         # traced knobs; chan.sigma2 is (C,)
+    n_clients: int,
+    packer: TreePacker,
+    bits_mode: str = "fused",    # accepted for API symmetry (key-only draw)
+    live: Optional[jax.Array] = None,   # (C,) cluster participation
+    n_eff: Optional[jax.Array] = None,  # () traced effective N
+    streaming: bool = False,     # compose with the cluster scan (§3.15)
+):
+    """Section-streaming OTA aggregation (DESIGN.md §3.16): the Section
+    partition is the unit of scheduling. Sections are heterogeneous
+    (length AND leaf set differ), so the scan over the section index is
+    a STATIC unrolled schedule — per section, draw only that section's
+    chunk-quantized gain/noise streams (the same ``packed_section_folds``
+    folds, so the draws are byte-identical to the batch draw), fold only
+    that section's leaf runs, then release the buffers. Peak live
+    streams are one section — bounded by the layout's
+    ``max_section_rows`` cap — never the (P,) or (C, P) slab
+    (HLO-pinned in tests/test_sectioned.py).
+
+    Equivalence: with ``streaming=False`` every per-leaf kernel call
+    receives byte-identical inputs to ``ota_aggregate_client_folded``'s,
+    so the result is BIT-identical (not just associativity-close). With
+    ``streaming=True`` the cluster ``lax.scan`` runs INSIDE each
+    section (one cluster's slice of one section live at a time) and
+    every leaf accumulates in the same cluster order as
+    ``ota_aggregate_streaming`` — bit-identical to that engine."""
+    if bits_mode not in ("fused", "supplied"):
+        raise ValueError(bits_mode)
+    check_tree_matches_packer(packer, grads,
+                              "gradient pytree (sectioned OTA)",
+                              batch_ndim=2)
+    n_clusters = int(chan.sigma2.shape[0])
+    folds = packed_section_folds(packer)
+    leaves = packer.treedef.flatten_up_to(grads)
+    out = [None] * len(leaves)
+    runs_by_sec: dict = {}
+    for run in packer.leaf_runs():
+        runs_by_sec.setdefault(run.section, []).append(run)
+
+    def _fold_section(sec, runs):
+        # all-clusters-at-once fold of ONE section: the client-folded
+        # math restricted to this section's runs, on this section's draw
+        gb = _section_bits(key, folds[sec.index], n_clusters, sec.length)
+        nb = _chunked_stream(section_noise_key(key, folds[sec.index]),
+                             sec.length)
+        for run in runs:
+            b = jax.lax.slice(gb, (0, run.offset),
+                              (n_clusters, run.offset + run.size))
+            nbs = jax.lax.slice(nb, (run.offset,),
+                                (run.offset + run.size,))
+            out[run.leaf] = ota_client_fold_apply(
+                leaves[run.leaf], p, b, nbs, chan.sigma2,
+                chan.h_threshold, chan.noise_std, chan.ota_on, n_clients,
+                live=live, n_eff=n_eff, interpret=not on_tpu())
+
+    def _stream_section(sec, runs, p_v, live_v, denom):
+        # cluster scan INSIDE the section: one (cluster, section) slice
+        # live at a time, leaf sums in ota_aggregate_streaming's order
+        def body(acc, xs):
+            c, gs, p_c, lv_c = xs
+            sig_c = jnp.asarray(chan.sigma2, jnp.float32)[c]
+            y, cnt = acc
+            for k, run in enumerate(runs):
+                gkey = section_gain_key(key, folds[sec.index], c)
+                b = stream_range_bits(gkey, run.offset, run.size)
+                dy, dc = ota_stream_fold_apply(
+                    gs[k], p_c, b, sig_c, chan.h_threshold, chan.ota_on,
+                    live_c=lv_c, interpret=not on_tpu())
+                y[k] = y[k] + dy
+                cnt[k] = cnt[k] + dc
+            return (y, cnt), None
+
+        zeros = [jnp.zeros(packer.slots[r.leaf].shape, jnp.float32)
+                 for r in runs]
+        (y, cnt), _ = jax.lax.scan(
+            body, (list(zeros), list(zeros)),
+            (jnp.arange(n_clusters), [leaves[r.leaf] for r in runs],
+             p_v, live_v))
+        nkey = section_noise_key(key, folds[sec.index])
+        for k, run in enumerate(runs):
+            nbs = stream_range_bits(nkey, run.offset, run.size)
+            z = (bits_to_gaussian(nbs, 1.0) * chan.noise_std
+                 * jnp.asarray(chan.ota_on, jnp.float32))
+            yl = y[k].reshape(-1) + z
+            cl = cnt[k].reshape(-1)
+            g = jnp.where(cl > 0, yl / (jnp.maximum(cl, 1.0) * denom), 0.0)
+            out[run.leaf] = g.reshape(y[k].shape)
+
+    if streaming:
+        p_v = jnp.asarray(p, jnp.float32)
+        live_v = (jnp.ones((n_clusters,), jnp.float32) if live is None
+                  else jnp.asarray(live, jnp.float32).reshape(n_clusters))
+        denom = (jnp.float32(n_clients) if n_eff is None
+                 else jnp.maximum(jnp.asarray(n_eff, jnp.float32), 1.0))
+    for sec in packer.sections:
+        runs = runs_by_sec.get(sec.index, [])
+        if not runs:
+            continue
+        if streaming:
+            _stream_section(sec, runs, p_v, live_v, denom)
+        else:
+            _fold_section(sec, runs)
+    return packer.treedef.unflatten(out)
 
 
 def final_layer_masks_packed(key: jax.Array, chan: ChannelParams,

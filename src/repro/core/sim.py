@@ -88,6 +88,28 @@ class HotaSim:
         # fault knobs are the same pattern (traced, bankable); fl.faults is
         # the one static gate that decides whether they are consumed at all
         self.faults = fault_params(fl)
+        # no-silent-inertness (the PR-7 pattern): a static gate that the
+        # chosen engine cannot honor must refuse loudly at build time,
+        # not silently run the un-gated path
+        if fl.ota_sectioned and not fl.use_pallas_ota:
+            raise ValueError(
+                "fl.ota_sectioned requires the slab engine "
+                "(use_pallas_ota=True): the per-leaf oracle has no "
+                "Section partition to stream — the gate would be "
+                "silently inert (DESIGN.md §3.16)")
+        if fl.ota_sectioned and fl.ota_sections != "toplevel":
+            raise ValueError(
+                "fl.ota_sectioned requires a multi-section layout "
+                f"(ota_sections='toplevel', got {fl.ota_sections!r}): "
+                "section streaming over the legacy two-section layout "
+                "holds most of the model in its head section — the "
+                "memory bound would be silently vacuous (DESIGN.md §3.16)")
+        if fl.max_section_rows and not fl.use_pallas_ota:
+            raise ValueError(
+                "fl.max_section_rows requires the slab engine "
+                "(use_pallas_ota=True): the per-leaf oracle has no "
+                "section layout to split — the cap would be silently "
+                "inert (DESIGN.md §3.16)")
 
     # ------------------------------------------------------------------
     def init(self, key: jax.Array) -> SimState:
@@ -264,7 +286,8 @@ class HotaSim:
         # folds, so it is static and checkpoint-pinned (DESIGN.md §3.13).
         packer = (packer_for(state.omega, tail="final",
                              sections=fl.ota_sections,
-                             min_section_rows=fl.min_section_rows)
+                             min_section_rows=fl.min_section_rows,
+                             max_section_rows=fl.max_section_rows)
                   if fl.use_pallas_ota else None)
 
         # --- Alg. 2: FGN_Server per cluster -------------------------------
@@ -317,11 +340,21 @@ class HotaSim:
             # fl.ota_streaming (static, DESIGN.md §3.15) swaps in the
             # scan-over-clusters fold: identical streams, one cluster's
             # contribution resident at a time instead of all C.
-            agg = (ota.ota_aggregate_streaming if fl.ota_streaming
-                   else ota.ota_aggregate_client_folded)
-            ghat = agg(
-                chan_key, g, w_tx, chan, fl.n_clients, packer,
-                bits_mode=ota_bits_mode, live=live, n_eff=n_eff)
+            # fl.ota_sectioned (static, DESIGN.md §3.16) walks the
+            # Section partition one section at a time — bit-identical
+            # per leaf, peak live streams one section — and composes
+            # with the cluster scan (the scan runs inside each section).
+            if fl.ota_sectioned:
+                ghat = ota.ota_aggregate_sectioned(
+                    chan_key, g, w_tx, chan, fl.n_clients, packer,
+                    bits_mode=ota_bits_mode, live=live, n_eff=n_eff,
+                    streaming=fl.ota_streaming)
+            else:
+                agg = (ota.ota_aggregate_streaming if fl.ota_streaming
+                       else ota.ota_aggregate_client_folded)
+                ghat = agg(
+                    chan_key, g, w_tx, chan, fl.n_clients, packer,
+                    bits_mode=ota_bits_mode, live=live, n_eff=n_eff)
             # slab-view PS update: moments stay one flat slab, params
             # unpack exactly once (the model-apply boundary)
             omega, ps_opt = slab_adam_update(ghat, state.ps_opt,

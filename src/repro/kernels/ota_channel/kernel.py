@@ -54,6 +54,9 @@ from repro.kernels.slab import LANE, SUBLANE
 TWO_PI = 6.283185307179586
 DEFAULT_BLOCK_ROWS = 256
 VMEM_BUDGET_BYTES = 6 * 1024 * 1024
+# per-grid-step wg budget of the in-kernel-RNG TPU path; C beyond
+# 8MB / (CHUNK_ROWS·128·4) = 16 clusters loops the cluster axis in blocks
+TPU_WG_BLOCK_BUDGET = 8 * 1024 * 1024
 
 
 def _box_muller(bits, sigma2):
@@ -280,6 +283,90 @@ def _ota_aggregate_client_kernel(x_ref, bits_ref, nbits_ref, params_ref,
         cnt > 0, y / (jnp.maximum(cnt, 1.0) * jnp.maximum(n_eff, 1.0)), 0.0)
 
 
+def _ota_aggregate_client_cblk_kernel(x_ref, bits_ref, nbits_ref, params_ref,
+                                      out_ref, acc_ref, cnt_ref, *,
+                                      cb, n_clients):
+    """C-axis-blocked client-folded estimator (ROADMAP: large cluster
+    counts). Grid is (row_blocks, cluster_blocks) with the cluster axis
+    minor: each step accumulates ``cb`` clusters' masked contributions
+    into VMEM scratch SEQUENTIALLY — the same accumulation ORDER as the
+    unblocked kernel, so results agree to fusion level (XLA may contract
+    mul+add into FMA differently around the scratch round-trip; ~1 ulp,
+    pinned in tests/test_sectioned.py). The last cluster block adds AWGN
+    and finishes the guarded estimate. The per-block params row carries
+    that block's σ²/p/live slices (padded tail clusters arrive live=0,
+    so they contribute nothing)."""
+    c, n = cb, n_clients
+    base = c + c * n
+    h_th = params_ref[0, base]
+    noise_std = params_ref[0, base + 1]
+    ota_on = params_ref[0, base + 2]
+    n_eff = params_ref[0, base + 3 + c]
+    off = ota_on < 0.5
+
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    acc = acc_ref[...]
+    cnt = cnt_ref[...]
+    for l in range(cb):                      # static unrolled cluster loop
+        wg = jnp.zeros_like(acc)
+        for i in range(n_clients):           # eq. 3: Σ_n p[l,n]·g[l,n]
+            wg = wg + params_ref[0, c + l * n + i] * (
+                x_ref[l, i].astype(jnp.float32))
+        live_l = params_ref[0, base + 3 + l]
+        mask = jnp.logical_and(
+            _bits_mask(bits_ref[l],
+                       _pass_probability(params_ref[0, l], h_th), off),
+            live_l >= 0.5)
+        acc = acc + jnp.where(mask, wg, 0.0)
+        cnt = cnt + mask.astype(jnp.float32)
+    acc_ref[...] = acc
+    cnt_ref[...] = cnt
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _done():
+        z = _box_muller(nbits_ref[...], 1.0) * noise_std * ota_on
+        y = acc_ref[...] + z
+        out_ref[...] = jnp.where(
+            cnt_ref[...] > 0,
+            y / (jnp.maximum(cnt_ref[...], 1.0) * jnp.maximum(n_eff, 1.0)),
+            0.0)
+
+
+def _client_cluster_block(n_clusters: int, n_clients: int,
+                          interpret: bool) -> int:
+    """Largest cluster block whose (cb·(N+1)+2) concurrent SUBLANE-row
+    buffers fit the VMEM budget — n_clusters (one block, the fast
+    unblocked kernel) whenever it fits."""
+    if interpret:
+        return n_clusters
+    unit = SUBLANE * LANE * 4
+    cb = max(1, (VMEM_BUDGET_BYTES // unit - 2) // (n_clients + 1))
+    return min(n_clusters, cb)
+
+
+def _client_params_blocked(params, n_clusters, n_clients, cb, n_cb):
+    """Re-tile the (1, C(N+2)+4) client params row into (n_cb, cb(N+2)+4)
+    per-cluster-block rows of the SAME layout (σ², p, scalars, live,
+    N_eff), padding the tail block's clusters with live=0."""
+    c, n = n_clusters, n_clients
+    pad = n_cb * cb - c
+    sig = jnp.pad(params[0, :c], (0, pad))
+    p = jnp.pad(params[0, c:c + c * n].reshape(c, n), ((0, pad), (0, 0)))
+    live = jnp.pad(params[0, c + c * n + 3:c + c * n + 3 + c], (0, pad))
+    scal = jnp.broadcast_to(params[0, c + c * n:c + c * n + 3].reshape(1, 3),
+                            (n_cb, 3))
+    n_eff = jnp.broadcast_to(params[0, -1].reshape(1, 1), (n_cb, 1))
+    return jnp.concatenate([
+        sig.reshape(n_cb, cb), p.reshape(n_cb, cb * n), scal,
+        live.reshape(n_cb, cb), n_eff], axis=1)
+
+
 def ota_aggregate_client_pallas(
     x: jax.Array,            # (C, N, rows, 128) f32 — RAW per-client grads
     bits: jax.Array,         # (C, rows, 128) uint32 — gain bits per cluster
@@ -290,18 +377,53 @@ def ota_aggregate_client_pallas(
     n_clients: int,
     block_rows: int = DEFAULT_BLOCK_ROWS,
     interpret: bool = False,
+    cluster_block: int = 0,  # 0 = auto; tests force small blocks
 ) -> jax.Array:
     """Fused client-folded OTA aggregation for one leaf/section slab.
 
     Returns the (rows, 128) PS estimate ĝ. The caller supplies the bit
     streams (the chunk-quantized key schedule lives in ``repro.core.ota``
     — under a scenario vmap the draw depends only on the shared key and
-    hoists out of the scenario axis)."""
+    hoists out of the scenario axis). At large cluster counts the C·N
+    concurrent VMEM blocks outgrow the budget faster than row blocking
+    can shrink them, so the call auto-switches to the C-axis-blocked
+    kernel (scratch accumulation over cluster blocks in the same float
+    order — equal to fusion level, validated in interpret mode)."""
     n_clusters, n_cl, rows, lane = x.shape
     assert lane == LANE and n_cl == n_clients, (x.shape, n_clients)
     assert bits.shape == (n_clusters, rows, LANE), (bits.shape, x.shape)
     assert nbits.shape == (rows, LANE), nbits.shape
     assert params.shape == (1, n_clusters * (n_clients + 2) + 4), params.shape
+    cb = (cluster_block if cluster_block
+          else _client_cluster_block(n_clusters, n_clients, interpret))
+    if cb < n_clusters:
+        n_cb = pl.cdiv(n_clusters, cb)
+        # cb·N grad blocks + cb bits blocks + noise + out + 2 scratch
+        br = _pick_block_rows(rows, cb * (n_clients + 1) + 4,
+                              block_rows, interpret)
+        kernel = functools.partial(_ota_aggregate_client_cblk_kernel,
+                                   cb=cb, n_clients=n_clients)
+        from jax.experimental.pallas import tpu as pltpu
+        return pl.pallas_call(
+            kernel,
+            grid=(rows // br, n_cb),
+            in_specs=[
+                pl.BlockSpec((cb, n_clients, br, LANE),
+                             lambda i, j: (j, 0, i, 0)),
+                pl.BlockSpec((cb, br, LANE), lambda i, j: (j, i, 0)),
+                pl.BlockSpec((br, LANE), lambda i, j: (i, 0)),
+                pl.BlockSpec((1, cb * (n_clients + 2) + 4),
+                             lambda i, j: (j, 0)),
+            ],
+            out_specs=pl.BlockSpec((br, LANE), lambda i, j: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((br, LANE), jnp.float32),
+                            pltpu.VMEM((br, LANE), jnp.float32)],
+            interpret=interpret,
+        )(x, bits, nbits,
+          _client_params_blocked(params.astype(jnp.float32), n_clusters,
+                                 n_clients, cb, n_cb))
+
     # C·N grad blocks + C bits blocks + noise + out resident at once
     br = _pick_block_rows(rows, n_clusters * (n_clients + 1) + 2,
                           block_rows, interpret)
@@ -491,27 +613,83 @@ def _ota_aggregate_supplied_kernel(wg_ref, bits_ref, nbits_ref, params_ref,
     _chunk_sweep(out_ref, chunk)
 
 
-def _ota_aggregate_tpu_kernel(wg_ref, keys_ref, params_ref, out_ref, *,
-                              n_clusters, n_clients):
-    """Compiled TPU body: grid over row-chunks, hardware PRNG
-    (pltpu.prng_random_bits — an i.i.d. stream distinct from the
-    interpret/oracle threefry stream; statistical tests only)."""
+def tpu_hw_seed(key2, l, i):
+    """The compiled TPU branch's hardware-PRNG seed for (cluster ``l``,
+    row-chunk ``i``) of the stream keyed by the (2,) uint32 threefry key
+    ``key2`` (``l=None`` = the AWGN stream). ONE home for the seed
+    arithmetic — the kernels below and the validation pass
+    (tests/test_sectioned.py) both call it, so the schedule the tests
+    check for (cluster, chunk) collisions and C-blocking invariance is
+    the schedule the hardware actually seeds. All arithmetic wraps mod
+    2³²; ``l``/``i`` may be traced."""
+    s = key2[0] ^ key2[1]
+    if l is not None:
+        s = s + jnp.asarray(l, jnp.uint32) * jnp.uint32(0x10001)
+    return s + jnp.asarray(i, jnp.uint32)
+
+
+def _hw_chunk_bits(key_row, l, i):
+    """One hardware-PRNG (CHUNK_ROWS, 128) uint32 chunk draw. The
+    int32->uint32 astype is a bit-preserving cast (mod 2³²):
+    ``prng_random_bits`` yields int32, and consuming it signed would
+    sign-extend in ``_bits_mask``'s uniform compare and ``_box_muller``'s
+    ``>> 16`` — the mask law would be biased (the bug the hardware-PRNG
+    validation pass exists to catch)."""
     from jax.experimental.pallas import tpu as pltpu
+    pltpu.prng_seed(tpu_hw_seed(key_row, l, i))
+    return pltpu.prng_random_bits((CHUNK_ROWS, LANE)).astype(jnp.uint32)
+
+
+def _ota_aggregate_tpu_kernel(wg_ref, keys_ref, params_ref, out_ref,
+                              acc_ref, cnt_ref, *, cb, n_clusters,
+                              n_clients):
+    """Compiled TPU body: grid (row-chunks, cluster-blocks) with the
+    cluster axis minor, hardware PRNG (pltpu.prng_random_bits — an
+    i.i.d. stream distinct from the interpret/oracle threefry stream;
+    statistical tests only). Each step folds ``cb`` clusters' masked
+    contributions into VMEM scratch SEQUENTIALLY (the same float order —
+    and, via ``tpu_hw_seed`` on GLOBAL cluster indices, the same seeds —
+    as the old single-block kernel), so VMEM holds cb·CHUNK_ROWS wg rows
+    however large C grows; the last cluster block adds AWGN and writes
+    the guarded estimate."""
+    c = n_clusters
+    h_th = params_ref[0, c]
+    noise_std = params_ref[0, c + 1]
+    ota_on = params_ref[0, c + 2]
+    off = ota_on < 0.5
     i = pl.program_id(0)
+    j = pl.program_id(1)
 
-    def bits_fn(l):
-        pltpu.prng_seed((keys_ref[0, 0] ^ keys_ref[0, 1])
-                        + jnp.uint32(l * 0x10001) + jnp.uint32(i))
-        return pltpu.prng_random_bits((CHUNK_ROWS, LANE))
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
 
-    def nbits_fn():
-        pltpu.prng_seed((keys_ref[1, 0] ^ keys_ref[1, 1]) + jnp.uint32(i))
-        return pltpu.prng_random_bits((CHUNK_ROWS, LANE))
+    acc = acc_ref[...]
+    cnt = cnt_ref[...]
+    for l_loc in range(cb):                  # static unrolled local loop
+        l = j * cb + l_loc                   # traced GLOBAL cluster index
+        bits = _hw_chunk_bits(keys_ref[0], l, i)
+        valid = l < n_clusters               # padded tail cluster block
+        sig_l = jnp.sum(jnp.where(
+            jax.lax.broadcasted_iota(jnp.int32, (c, 1), 0)
+            == jnp.minimum(l, c - 1),
+            params_ref[0, :c].reshape(c, 1), 0.0))
+        mask = jnp.logical_and(
+            _bits_mask(bits, _pass_probability(sig_l, h_th), off), valid)
+        acc = acc + jnp.where(mask, wg_ref[l_loc].astype(jnp.float32), 0.0)
+        cnt = cnt + mask.astype(jnp.float32)
+    acc_ref[...] = acc
+    cnt_ref[...] = cnt
 
-    br = out_ref.shape[0]
-    out_ref[...] = _fused_body(
-        lambda l, r, b: wg_ref[l], bits_fn, nbits_fn,
-        params_ref, n_clusters, n_clients, 0, br)
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _done():
+        nbits = _hw_chunk_bits(keys_ref[1], None, i)
+        z = _box_muller(nbits, 1.0) * noise_std * ota_on
+        y = acc_ref[...] + z
+        out_ref[...] = jnp.where(
+            cnt_ref[...] > 0,
+            y / (jnp.maximum(cnt_ref[...], 1.0) * n_clients), 0.0)
 
 
 def ota_aggregate_fused_pallas(
@@ -572,27 +750,31 @@ def ota_aggregate_fused_pallas(
             interpret=True,
         )(wg, keys, params.astype(jnp.float32))
 
-    # the wg block is (C, CHUNK_ROWS, 128) f32 — VMEM use scales with C.
-    # CHUNK_ROWS is part of the stream spec and cannot shrink per call;
-    # very large C needs a C-axis block loop instead (ROADMAP follow-up).
-    wg_block_bytes = n_clusters * CHUNK_ROWS * LANE * 4
-    assert wg_block_bytes <= 8 * 1024 * 1024, (
-        f"ota_aggregate_fused TPU path: wg block {wg_block_bytes}B for "
-        f"C={n_clusters} exceeds the VMEM budget — loop the cluster axis "
-        f"in blocks before raising this limit")
-    kernel = functools.partial(_ota_aggregate_tpu_kernel,
+    # the wg block is (cb, CHUNK_ROWS, 128) f32 — CHUNK_ROWS is part of
+    # the stream spec and cannot shrink per call, so at large C the
+    # CLUSTER axis is blocked (scratch accumulation over a minor grid
+    # dim); seeds key on global cluster indices, so blocking never
+    # shifts the hardware draw (tpu_hw_seed — validated in
+    # tests/test_sectioned.py).
+    from jax.experimental.pallas import tpu as pltpu
+    cb_cap = max(1, TPU_WG_BLOCK_BUDGET // (CHUNK_ROWS * LANE * 4))
+    cb = min(n_clusters, cb_cap)
+    n_cb = pl.cdiv(n_clusters, cb)
+    kernel = functools.partial(_ota_aggregate_tpu_kernel, cb=cb,
                                n_clusters=n_clusters, n_clients=n_clients)
     return pl.pallas_call(
         kernel,
-        grid=(pl.cdiv(rows, CHUNK_ROWS),),
+        grid=(pl.cdiv(rows, CHUNK_ROWS), n_cb),
         in_specs=[
-            pl.BlockSpec((n_clusters, CHUNK_ROWS, LANE),
-                         lambda i: (0, i, 0)),
-            pl.BlockSpec((2, 2), lambda i: (0, 0)),
-            pl.BlockSpec((1, n_clusters + 3), lambda i: (0, 0)),
+            pl.BlockSpec((cb, CHUNK_ROWS, LANE),
+                         lambda i, j: (j, i, 0)),
+            pl.BlockSpec((2, 2), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, n_clusters + 3), lambda i, j: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((CHUNK_ROWS, LANE), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((CHUNK_ROWS, LANE), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((CHUNK_ROWS, LANE), jnp.float32),
+                        pltpu.VMEM((CHUNK_ROWS, LANE), jnp.float32)],
         interpret=False,
     )(wg, keys, params.astype(jnp.float32))
 

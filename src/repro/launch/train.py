@@ -88,6 +88,28 @@ def main():
                     choices=["fedgradnorm", "equal"])
     ap.add_argument("--ota-mode", default="scatter", choices=["scatter", "naive"])
     ap.add_argument("--no-ota", action="store_true")
+    # section-streaming engines (DESIGN.md §3.15/§3.16). Neither flag is
+    # ever silently inert: --ota-streaming is a SIMULATOR engine and the
+    # distributed step rejects it by name (make_hota_step_parts guard);
+    # --ota-sectioned/--max-section-rows are validated against the
+    # layout gates the same way. Explicit flags skip the autotuner so
+    # the tuned layout cannot clobber the requested engine.
+    ap.add_argument("--ota-streaming", action="store_true",
+                    help="simulator-only cluster-scan engine; the "
+                         "distributed round rejects it with the reason "
+                         "named (use --ota-sectioned here)")
+    ap.add_argument("--ota-sectioned", action="store_true",
+                    help="section-streaming slab aggregation: peak live "
+                         "channel memory is one section, not the slab")
+    ap.add_argument("--max-section-rows", type=int, default=0,
+                    help="split packed sections above this many 128-lane "
+                         "slab rows (0 = off); bounds --ota-sectioned's "
+                         "peak section size")
+    ap.add_argument("--memory-budget-mb", type=int, default=0,
+                    help="aggregation working-set budget for the layout "
+                         "autotuner (MB, 0 = unconstrained): full-slab "
+                         "candidates over budget are excluded and a "
+                         "budget-sized sectioned candidate is added")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0,
@@ -135,6 +157,9 @@ def main():
     fl = FLConfig(n_clusters=shape[0], n_clients=shape[1],
                   weighting=args.weighting, ota=not args.no_ota,
                   ota_mode=args.ota_mode, noise_std=0.1,
+                  ota_streaming=args.ota_streaming,
+                  ota_sectioned=args.ota_sectioned,
+                  max_section_rows=args.max_section_rows,
                   faults=args.faults, dropout_rate=args.dropout,
                   blackout_rate=args.blackout,
                   straggler_rate=args.straggler,
@@ -142,7 +167,9 @@ def main():
                   spike_norm=args.spike_norm)
     tcfg = TrainConfig(lr=args.lr)
 
-    if not args.no_tune_layout:
+    explicit_layout = (args.ota_streaming or args.ota_sectioned
+                       or bool(args.max_section_rows))
+    if not args.no_tune_layout and not explicit_layout:
         # tuned section layout, default on: the same {final, trunk}
         # template the step builds its packer from, so the tuned folds
         # are exactly the streams the run draws (checkpoint-pinned)
@@ -150,8 +177,14 @@ def main():
         from repro.models.params import abstract_params
         template = {"final": abstract_params(model.final_specs()),
                     "trunk": abstract_params(model.trunk_specs())}
-        fl = tuned_fl(fl, template, cache_path=args.layout_cache)
+        budget = args.memory_budget_mb * (1 << 20) or None
+        fl = tuned_fl(fl, template, cache_path=args.layout_cache,
+                      memory_budget_bytes=budget)
         print(f"layout: {layout_of(fl).describe()}", flush=True)
+    elif explicit_layout:
+        from repro.common.layout_tune import layout_of
+        print(f"layout: {layout_of(fl).describe()} (explicit; "
+              "autotuner skipped)", flush=True)
 
     init_fn, step_fn, state_specs, batch_spec = make_hota_train_step(
         model, mesh, fl, tcfg, loss_kind="lm")

@@ -1,0 +1,107 @@
+"""Config-zoo abstract layout smoke suite (DESIGN.md §3.16).
+
+Every config in ``src/repro/configs`` — including the multi-billion-
+parameter ones — is checked at its FULL size without materializing a
+single weight: the omega template comes out of ``jax.eval_shape`` over
+the real ``init_params``, and everything downstream (the toplevel
+``TreePacker``, the stream-fold schedule, the ``leaf_runs`` zero-copy
+partition, the ``max_section_rows`` peak bound) is static metadata.
+This is the pin that the section-streaming engine's layout invariants
+hold for the whole zoo, not just the shapes the unit tests happen to
+build.
+"""
+from __future__ import annotations
+
+import jax
+import pytest
+
+from repro.common.flatpack import TreePacker
+from repro.configs import ARCH_IDS, get_config
+from repro.core.ota import (PACKED_SECTION_FOLD_BASE, PACKED_TAIL_FOLD,
+                            packed_section_folds)
+from repro.kernels.slab import LANE, ROW_QUANTUM, round_up
+from repro.models.model import build_model
+from repro.models.params import init_params
+
+# splits most real layer stacks (524k elements) while staying far above
+# the coalescer's thresholds — a working billion-parameter budget knob
+SPLIT_ROWS = 4096
+
+
+def _abstract_template(arch: str):
+    """The {final, trunk} omega template of ``arch`` at FULL size, via
+    jax.eval_shape over the real initializers — no weight memory."""
+    model = build_model(get_config(arch))
+
+    def init(key):
+        return {"final": init_params(model.final_specs(), key),
+                "trunk": init_params(model.trunk_specs(), key)}
+    return jax.eval_shape(init, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def packed(request):
+    template = _abstract_template(request.param)
+    packer = TreePacker(template, tail="final", sections="toplevel")
+    split = TreePacker(template, tail="final", sections="toplevel",
+                       max_section_rows=SPLIT_ROWS)
+    return request.param, template, packer, split
+
+
+def test_fold_schedule(packed):
+    """One distinct stream fold per section; the ω̃ tail keeps
+    PACKED_TAIL_FOLD in every layout (eq.-5 stream stability)."""
+    _, _, packer, split = packed
+    for pk in (packer, split):
+        folds = packed_section_folds(pk)
+        assert len(folds) == len(pk.sections) > 1
+        assert len(set(folds)) == len(folds), "stream folds must be unique"
+        assert pk.sections[-1].name == pk.tail_name
+        assert folds[-1] == PACKED_TAIL_FOLD
+        for sec, fold in zip(pk.sections[:-1], folds[:-1]):
+            assert fold == PACKED_SECTION_FOLD_BASE + sec.index
+
+
+def test_leaf_runs_partition(packed):
+    """leaf_runs is an exact partition: every leaf exactly once, runs
+    inside their section, sizes matching the slots, sections tiling the
+    slab in order."""
+    _, template, packer, split = packed
+    leaves = jax.tree.leaves(template)
+    for pk in (packer, split):
+        runs = pk.leaf_runs()
+        assert sorted(r.leaf for r in runs) == list(range(len(leaves)))
+        by_section = {}
+        for r in runs:
+            sec = pk.sections[r.section]
+            assert 0 <= r.offset and r.offset + r.size <= sec.length
+            assert r.size == pk.slots[r.leaf].size
+            by_section.setdefault(r.section, []).append(r)
+        for s, sec in enumerate(pk.sections):
+            assert tuple(r.leaf for r in by_section.get(s, [])) \
+                == sec.leaf_indices
+        # sections tile [0, P) in order, ROW_QUANTUM-aligned
+        off = 0
+        for sec in pk.sections:
+            assert sec.start == off and sec.start % ROW_QUANTUM == 0
+            assert sec.length % ROW_QUANTUM == 0
+            off += sec.length
+        assert off == pk.size
+
+
+def test_split_peak_rows_bound(packed):
+    """The documented §4 split rule: peak live section ≤
+    max(max_section_rows, ceil(largest_leaf / LANE)) rows — the
+    memory-budget guarantee the sectioned engine relies on — and the
+    split changes only the partition, never where data lives."""
+    _, template, packer, split = packed
+    largest = max(r.size for r in packer.leaf_runs())
+    bound = max(SPLIT_ROWS, round_up(largest, ROW_QUANTUM) // LANE)
+    assert split.peak_section_rows() <= bound
+    assert split.peak_section_rows() <= packer.peak_section_rows()
+    # a zoo config big enough to split must actually split
+    if packer.peak_section_rows() > bound:
+        assert len(split.sections) > len(packer.sections)
+    # layout-only transform: identical slab, identical leaf offsets
+    assert split.size == packer.size
+    assert split.slots == packer.slots
