@@ -1,77 +1,36 @@
 #!/usr/bin/env python
 """Fail if any ``DESIGN.md §x.y`` citation lacks a matching anchor.
 
-Source files cite design sections as ``DESIGN.md §3.1`` (optionally with
-more text in between, e.g. "documented in DESIGN.md §3.5"). This script
-greps every citation under the checked roots, collects the section
-anchors actually present in DESIGN.md (headings containing ``§x.y``),
-and exits non-zero listing the dangling ones. Bare ``DESIGN.md``
-mentions without a § are rejected too — every citation must be
-anchorable, or it rots exactly the way the pre-PR-3 tree did.
+Thin wrapper over :mod:`repro.analysis.design_refs` (the ``design-ref``
+rule of ``scripts/repro_lint.py``, which runs this plus the AST lint and
+the §4 stream-registry cross-check). Kept as a standalone entry point
+for focused runs; walks ``src``, ``tests``, and ``benchmarks`` by
+default so §-refs in test docstrings can no longer dangle.
 
-Usage: python scripts/check_design_refs.py [root ...]   (default: src)
+Usage: python scripts/check_design_refs.py [root ...]
 """
 from __future__ import annotations
 
 import os
-import re
 import sys
 
 REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
-# a citation may wrap across a docstring line break between "DESIGN.md"
-# and its "§x.y" — tolerate up to ~40 chars of any filler incl. newlines
-SECTION = re.compile(
-    r"DESIGN\.md((?:(?!DESIGN\.md)[^§]){0,40}?)§([0-9]+(?:\.[0-9]+)*)", re.S)
-BARE = re.compile(r"DESIGN\.md(?!(?:(?!DESIGN\.md)[^§]){0,40}§)", re.S)
-ANCHOR = re.compile(r"^#+.*§([0-9]+(?:\.[0-9]+)*)", re.M)
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.analysis.design_refs import (DEFAULT_ROOTS,      # noqa: E402
+                                        check_design_refs)
 
 
 def main(roots) -> int:
-    design_path = os.path.join(REPO, "DESIGN.md")
-    if not os.path.exists(design_path):
-        print("check_design_refs: DESIGN.md does not exist", file=sys.stderr)
+    violations = check_design_refs(REPO, roots or DEFAULT_ROOTS)
+    for v in violations:
+        print(v.format(), file=sys.stderr)
+    if violations:
         return 1
-    with open(design_path) as f:
-        anchors = set(ANCHOR.findall(f.read()))
-
-    dangling, bare = [], []
-    for root in roots:
-        for dirpath, _, files in os.walk(os.path.join(REPO, root)):
-            for name in sorted(files):
-                if not name.endswith(".py"):
-                    continue
-                path = os.path.join(dirpath, name)
-                rel = os.path.relpath(path, REPO)
-                with open(path) as f:
-                    text = f.read()
-                # scan whole-file text (citations may wrap across lines);
-                # recover line numbers from match offsets
-                cited_spans = []
-                for m in SECTION.finditer(text):
-                    cited_spans.append(m.start())
-                    if m.group(2) not in anchors:
-                        dangling.append(
-                            (rel, text.count("\n", 0, m.start()) + 1,
-                             m.group(2)))
-                for m in BARE.finditer(text):
-                    if m.start() not in cited_spans:
-                        bare.append(
-                            (rel, text.count("\n", 0, m.start()) + 1))
-
-    ok = True
-    for rel, lineno, sec in dangling:
-        print(f"{rel}:{lineno}: cites DESIGN.md §{sec} but DESIGN.md has "
-              f"no such heading", file=sys.stderr)
-        ok = False
-    for rel, lineno in bare:
-        print(f"{rel}:{lineno}: cites DESIGN.md without a § anchor — "
-              f"point it at a section", file=sys.stderr)
-        ok = False
-    if ok:
-        print(f"check_design_refs: all DESIGN.md citations under "
-              f"{list(roots)} resolve ({len(anchors)} anchors)")
-    return 0 if ok else 1
+    print(f"check_design_refs: all DESIGN.md citations under "
+          f"{list(roots or DEFAULT_ROOTS)} resolve")
+    return 0
 
 
 if __name__ == "__main__":
-    sys.exit(main(sys.argv[1:] or ["src"]))
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,58 @@
+#!/usr/bin/env python
+"""repro-lint: machine-check the tree's invariants (DESIGN.md §3.17).
+
+Runs, in order:
+
+1. the AST lint passes over the given paths (default ``src``):
+   bare-fold-salt, bare-prng-seed, traced-branch,
+   import-time-platform-pin, host-nondeterminism;
+2. the ``stream-registry`` cross-check (DESIGN.md §4 table ↔
+   ``core/ota.py``/``core/hota*.py`` constants);
+3. the ``design-ref`` citation check over ``src``/``tests``/
+   ``benchmarks``.
+
+Every violation prints as ``path:line: rule: message``; exit status is
+non-zero iff any violation survived its suppressions. Stdlib-only — no
+jax import, safe as a bare CI job.
+
+Usage: python scripts/repro_lint.py [path ...]   (default: src)
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.analysis.design_refs import check_design_refs          # noqa: E402
+from repro.analysis.lint import Violation, lint_paths             # noqa: E402
+from repro.analysis.stream_registry import (RULE as REGISTRY_RULE,  # noqa: E402
+                                            check_registry,
+                                            code_registry)
+
+
+def main(argv) -> int:
+    paths = argv or ["src"]
+    paths = [p if os.path.isabs(p) else os.path.join(REPO, p)
+             for p in paths]
+
+    registry = code_registry(REPO)
+    violations = list(lint_paths(paths, registry.names, repo_root=REPO))
+    violations += [Violation("DESIGN.md", 0, REGISTRY_RULE, msg)
+                   for msg in check_registry(REPO)]
+    violations += check_design_refs(REPO)
+
+    for v in sorted(violations, key=lambda v: (v.path, v.line, v.rule)):
+        print(v.format(), file=sys.stderr)
+    if violations:
+        print(f"repro-lint: {len(violations)} violation(s)",
+              file=sys.stderr)
+        return 1
+    print(f"repro-lint: clean ({len(registry.names)} registered salts, "
+          f"all DESIGN.md citations resolve)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

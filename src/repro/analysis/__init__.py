@@ -1,0 +1,51 @@
+"""Static analysis for the reproduction (DESIGN.md §3.17).
+
+Three layers, all stdlib-only (importable without jax, so the CI lint
+job needs no accelerator install):
+
+* :mod:`repro.analysis.lint` — AST passes over the source tree
+  (bare fold salts, hard-coded PRNG seeds, Python branches on traced
+  ChannelParams/FaultParams fields, import-time platform pins, host
+  nondeterminism in ``core/``) with inline
+  ``# repro-lint: allow(<rule>, <reason>)`` suppressions.
+* :mod:`repro.analysis.stream_registry` — spec↔code cross-check of the
+  DESIGN.md §4 reserved fold/salt table against the registry constants
+  in ``core/ota.py`` / ``core/hota*.py``.
+* :mod:`repro.analysis.hlo_audit` — declarative ``forbid_buffer`` /
+  ``require_buffer`` / ``forbid_opcode`` pins over lowered HLO, shared
+  by the engine memory-claim tests.
+
+This namespace also re-exports the single HLO text parser
+(``parse_hlo`` / ``analyze`` / ``parse_shape_tokens`` from
+``launch/hlo_cost.py``) so the audit library and the roofline extractor
+stay on one regex dialect.
+
+CLI: ``python scripts/repro_lint.py`` (wired as the CI ``lint`` job).
+"""
+from repro.analysis.design_refs import DEFAULT_ROOTS, check_design_refs
+from repro.analysis.hlo_audit import (BufferPin, OpcodePin, assert_hlo_pins,
+                                      audit_hlo, buffer_shapes,
+                                      cluster_chunk_stream_pin,
+                                      forbid_buffer, forbid_opcode,
+                                      no_cluster_stream_pins, no_slab_pins,
+                                      opcodes, require_buffer,
+                                      require_opcode)
+from repro.analysis.lint import (Violation, lint_paths, lint_source,
+                                 rules_for_path)
+from repro.analysis.stream_registry import (check_registry, code_registry,
+                                            cross_check, design_table,
+                                            is_salt_name)
+from repro.launch.hlo_cost import analyze, parse_hlo
+from repro.launch.hlo_cost import parse_shape_tokens  # noqa: F401
+
+__all__ = [
+    "DEFAULT_ROOTS", "check_design_refs",
+    "BufferPin", "OpcodePin", "assert_hlo_pins", "audit_hlo",
+    "buffer_shapes", "cluster_chunk_stream_pin", "forbid_buffer",
+    "forbid_opcode", "no_cluster_stream_pins", "no_slab_pins", "opcodes",
+    "require_buffer", "require_opcode",
+    "Violation", "lint_paths", "lint_source", "rules_for_path",
+    "check_registry", "code_registry", "cross_check", "design_table",
+    "is_salt_name",
+    "analyze", "parse_hlo", "parse_shape_tokens",
+]

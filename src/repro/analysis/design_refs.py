@@ -1,0 +1,93 @@
+"""DESIGN.md § citation checker (rule ``design-ref``).
+
+Source files cite design sections as ``DESIGN.md §3.1`` (optionally with
+filler in between, e.g. "documented in DESIGN.md §3.5", possibly wrapped
+across a docstring line break). This pass greps every citation under the
+checked roots, collects the section anchors actually present in
+DESIGN.md (headings containing ``§x.y``), and reports the dangling ones.
+Bare ``DESIGN.md`` mentions without a § are rejected too — every
+citation must be anchorable, or it rots exactly the way the pre-PR-3
+tree did.
+
+Historically ``scripts/check_design_refs.py``; now one rule inside
+``scripts/repro_lint.py`` (the script remains as a thin wrapper). Tests
+and benchmarks are walked by default — §-refs in test docstrings used to
+dangle unchecked.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import List, Sequence
+
+from repro.analysis.lint import Violation
+
+RULE = "design-ref"
+
+DEFAULT_ROOTS = ("src", "tests", "benchmarks")
+
+# assembled so this module's own source carries no bare citation for the
+# checker to flag when it walks itself
+DESIGN_MD = "DESIGN" + ".md"
+
+# a citation may wrap across a docstring line break between "DESIGN.md"
+# and its "§x.y" — tolerate up to ~40 chars of any filler incl. newlines
+SECTION = re.compile(
+    r"DESIGN\.md((?:(?!DESIGN\.md)[^§]){0,40}?)§([0-9]+(?:\.[0-9]+)*)", re.S)
+BARE = re.compile(r"DESIGN\.md(?!(?:(?!DESIGN\.md)[^§]){0,40}§)", re.S)
+ANCHOR = re.compile(r"^#+.*§([0-9]+(?:\.[0-9]+)*)", re.M)
+
+
+def design_anchors(design_text: str) -> set:
+    """§x.y anchors present as design-doc headings."""
+    return set(ANCHOR.findall(design_text))
+
+
+def check_file_text(rel: str, text: str, anchors: set) -> List[Violation]:
+    """All dangling/bare design-doc citations in one file's text."""
+    out: List[Violation] = []
+    cited_spans = []
+    for m in SECTION.finditer(text):
+        cited_spans.append(m.start())
+        if m.group(2) not in anchors:
+            out.append(Violation(
+                rel, text.count("\n", 0, m.start()) + 1, RULE,
+                f"cites {DESIGN_MD} §{m.group(2)} but no such heading "
+                f"exists"))
+    for m in BARE.finditer(text):
+        if m.start() not in cited_spans:
+            out.append(Violation(
+                rel, text.count("\n", 0, m.start()) + 1, RULE,
+                f"cites {DESIGN_MD} without a § anchor — point it at a "
+                f"section"))
+    return out
+
+
+def check_design_refs(repo_root: str,
+                      roots: Sequence[str] = DEFAULT_ROOTS
+                      ) -> List[Violation]:
+    """Walk the roots and report every unanchorable citation."""
+    design_path = os.path.join(repo_root, DESIGN_MD)
+    if not os.path.exists(design_path):
+        return [Violation(DESIGN_MD, 0, RULE,
+                          f"{DESIGN_MD} does not exist")]
+    with open(design_path) as f:
+        anchors = design_anchors(f.read())
+
+    out: List[Violation] = []
+    for root in roots:
+        top = os.path.join(repo_root, root)
+        if not os.path.isdir(top):
+            continue
+        for dirpath, dirnames, files in os.walk(top):
+            dirnames[:] = [d for d in dirnames
+                           if d not in ("__pycache__", ".git")]
+            for name in sorted(files):
+                if not name.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, name)
+                rel = os.path.relpath(path, repo_root)
+                with open(path) as f:
+                    text = f.read()
+                out.extend(check_file_text(rel, text, anchors))
+    return out

@@ -1,0 +1,189 @@
+"""Declarative HLO buffer/opcode audits (DESIGN.md §3.17).
+
+The slab and sectioned engines' memory claims (no materialized
+``f32[C,P]`` slab, no ``(P,)`` flat vector, streams drawn one
+``u32[C,CHUNK]`` window at a time — DESIGN.md §3.10/§3.15/§3.16) were
+asserted by ad-hoc ``as_text()`` substring checks copy-pasted across
+five test modules. This library makes them declarative pin specs:
+
+    pins = [
+        forbid_buffer((C, P), note="full slab"),
+        require_buffer((C, CHUNK), dtypes=("u32",), note="chunk window"),
+        forbid_opcode("dynamic-update-slice"),
+    ]
+    assert_hlo_pins(lowered.as_text(), pins, context="sectioned fwd")
+
+Buffer matching tokenizes every ``dtype[d0,d1,...]`` shape in the HLO
+text with the same parser the roofline cost model uses
+(``launch/hlo_cost.py``) — exact dtype + exact dims, layout annotations
+ignored. Opcode matching walks the parsed computations (fusion bodies
+included). Failures name the pin's note so a tripped memory claim reads
+as a claim, not a regex.
+
+New engines get the canned pin sets (``no_slab_pins``,
+``no_cluster_stream_pins``, ``cluster_chunk_stream_pin``) for free.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, List, Sequence, Set, Tuple
+
+from repro.launch.hlo_cost import (_SHAPE_TOKEN, DTYPE_BYTES, analyze,
+                                   parse_hlo)
+
+Shape = Tuple[int, ...]
+
+# forbidding both the f32 payload and a u32 twin catches bit-cast
+# reappearances of the same buffer (the sectioned tests always banned
+# both)
+DEFAULT_DTYPES = ("f32", "u32")
+
+
+@dataclass(frozen=True)
+class BufferPin:
+    """A buffer that must (``require``) or must not (``forbid``) appear
+    anywhere in the lowered HLO."""
+    kind: str                     # "forbid" | "require"
+    dtypes: Tuple[str, ...]
+    shape: Shape
+    note: str = ""
+
+    def __post_init__(self):
+        assert self.kind in ("forbid", "require"), self.kind
+        for d in self.dtypes:
+            assert d in DTYPE_BYTES, f"unknown HLO dtype {d!r}"
+
+    def describe(self) -> str:
+        shapes = ", ".join(f"{d}[{','.join(map(str, self.shape))}]"
+                           for d in self.dtypes)
+        return f"{shapes}" + (f" ({self.note})" if self.note else "")
+
+
+@dataclass(frozen=True)
+class OpcodePin:
+    """An HLO opcode that must not appear (e.g. ``dynamic-update-slice``
+    — scatter-into-slab)."""
+    kind: str
+    opcode: str
+    note: str = ""
+
+    def __post_init__(self):
+        assert self.kind in ("forbid", "require"), self.kind
+
+    def describe(self) -> str:
+        return self.opcode + (f" ({self.note})" if self.note else "")
+
+
+Pin = object  # BufferPin | OpcodePin
+
+
+def forbid_buffer(shape: Sequence[int],
+                  dtypes: Sequence[str] = DEFAULT_DTYPES,
+                  note: str = "") -> BufferPin:
+    return BufferPin("forbid", tuple(dtypes), tuple(shape), note)
+
+
+def require_buffer(shape: Sequence[int],
+                   dtypes: Sequence[str] = DEFAULT_DTYPES,
+                   note: str = "") -> BufferPin:
+    return BufferPin("require", tuple(dtypes), tuple(shape), note)
+
+
+def forbid_opcode(opcode: str, note: str = "") -> OpcodePin:
+    return OpcodePin("forbid", opcode, note)
+
+
+def require_opcode(opcode: str, note: str = "") -> OpcodePin:
+    return OpcodePin("require", opcode, note)
+
+
+def buffer_shapes(hlo: str) -> Set[Tuple[str, Shape]]:
+    """Every ``(dtype, dims)`` shape token in the HLO text — same
+    tokenizer as the roofline cost model, so one parser serves both."""
+    out: Set[Tuple[str, Shape]] = set()
+    for dtype, dims in _SHAPE_TOKEN.findall(hlo):
+        if dtype not in DTYPE_BYTES:
+            continue
+        out.add((dtype,
+                 tuple(int(d) for d in dims.split(",") if d.strip())))
+    return out
+
+
+def opcodes(hlo: str) -> Set[str]:
+    """Opcodes across all computations, fusion bodies included."""
+    comps, _ = parse_hlo(hlo)
+    return {op.opcode for comp in comps.values() for op in comp.ops}
+
+
+def audit_hlo(hlo: str, pins: Iterable[Pin]) -> List[str]:
+    """Evaluate pins against lowered HLO text; return failure messages
+    (empty list = all pins hold)."""
+    shapes = buffer_shapes(hlo)
+    ops = None
+    failures: List[str] = []
+    for pin in pins:
+        if isinstance(pin, BufferPin):
+            hits = [d for d in pin.dtypes if (d, pin.shape) in shapes]
+            if pin.kind == "forbid" and hits:
+                failures.append(
+                    f"forbidden buffer materialized: {pin.describe()} — "
+                    f"present as {', '.join(hits)}"
+                    f"[{','.join(map(str, pin.shape))}]")
+            elif pin.kind == "require" and not hits:
+                failures.append(
+                    f"required buffer absent: {pin.describe()} — the "
+                    f"positive control no longer compiles the expected "
+                    f"shape (pin may be vacuous)")
+        elif isinstance(pin, OpcodePin):
+            if ops is None:
+                ops = opcodes(hlo)
+            present = pin.opcode in ops
+            if pin.kind == "forbid" and present:
+                failures.append(
+                    f"forbidden opcode present: {pin.describe()}")
+            elif pin.kind == "require" and not present:
+                failures.append(
+                    f"required opcode absent: {pin.describe()}")
+        else:
+            raise TypeError(f"not a pin: {pin!r}")
+    return failures
+
+
+def assert_hlo_pins(hlo: str, pins: Iterable[Pin], context: str = ""):
+    """Raise AssertionError listing every failed pin."""
+    failures = audit_hlo(hlo, pins)
+    if failures:
+        where = f" [{context}]" if context else ""
+        raise AssertionError(
+            "HLO audit failed" + where + ":\n  " + "\n  ".join(failures))
+
+
+# ----------------------------------------------------------- canned sets
+
+def no_slab_pins(n_clusters: int, slab_size: int,
+                 note: str = "") -> List[Pin]:
+    """The §3.10 claim: neither the full (C, P) slab nor a flat (P,)
+    vector may materialize."""
+    tag = note or "slab"
+    return [
+        forbid_buffer((n_clusters, slab_size),
+                      note=f"full (C, P) {tag}"),
+        forbid_buffer((slab_size,), note=f"flat (P,) {tag} vector"),
+    ]
+
+
+def no_cluster_stream_pins(n_clusters: int,
+                           lengths: Iterable[int]) -> List[Pin]:
+    """The §3.16 claim: no (C, L) per-section cross-cluster buffer for
+    any section length L."""
+    return [forbid_buffer((n_clusters, int(L)),
+                          note=f"(C, {L}) cross-cluster section buffer")
+            for L in sorted(set(int(L) for L in lengths))]
+
+
+def cluster_chunk_stream_pin(n_clusters: int, chunk: int) -> List[Pin]:
+    """Positive control for the streaming engines: the per-chunk
+    ``u32[C, CHUNK]`` random window IS expected (proves the pins are
+    inspecting the real program, not a trivially-empty one)."""
+    return [require_buffer((n_clusters, chunk), dtypes=("u32",),
+                           note="per-chunk stream window")]

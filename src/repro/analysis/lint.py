@@ -1,0 +1,391 @@
+"""AST lint passes over the source tree (DESIGN.md §3.17).
+
+The invariants this reproduction's correctness rests on — the §4
+reserved-fold registry, the traced-vs-static knob discipline that lets
+one compiled step serve every scenario, trace-time platform dispatch —
+were enforced only by convention and scattered tests. These passes make
+them machine-checked:
+
+* ``bare-fold-salt`` — every ``jax.random.fold_in(key, <salt>)`` whose
+  salt is a literal (or an UPPERCASE constant not in the §4 registry)
+  is flagged. Bare salts *did* collide once (the pre-PR-2 ``fold_in(key,
+  999)`` noise stream vs cluster 999); named registry constants are the
+  only sanctioned spelling. Runtime indices (lowercase names: cluster,
+  leaf_idx, chunk, ...) pass.
+* ``bare-prng-seed`` — ``jax.random.PRNGKey(<int literal>)`` outside a
+  ``jax.eval_shape`` argument: a hard-coded root seed in library code.
+  Shape-only keys under ``eval_shape`` never produce bits and pass.
+* ``traced-branch`` — Python ``if``/``while``/ternary/``assert`` on a
+  ChannelParams/FaultParams field: traced values must branch through
+  ``jnp.where``/``lax.switch``, or the knob silently stops being
+  sweepable and one compiled step no longer serves every scenario.
+  ``.shape``/``.dtype`` accesses and static-config receivers
+  (``fl.…``, ``cfg.…``, ``*Config`` class bodies) are static and pass.
+* ``import-time-platform-pin`` — module-scope ``jax.devices()`` /
+  ``jax.default_backend()`` / ``on_tpu()``: backend selection after
+  import silently pins kernels to the wrong dispatch (the ``_ON_TPU``
+  regression PR 6 fixed). Resolve platform at trace time instead.
+* ``host-nondeterminism`` — ``time.time`` / ``np.random`` / stdlib
+  ``random`` / ``os.urandom`` etc. inside ``core/``: round math must be
+  a pure function of (state, batch, key).
+
+Suppression: every exception is documented in place with
+
+    # repro-lint: allow(<rule>, <reason>)
+
+on the offending line or the line above. A suppression without a reason
+is itself a violation (``bad-suppression``).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.stream_registry import is_salt_name
+
+RULE_BARE_FOLD = "bare-fold-salt"
+RULE_BARE_SEED = "bare-prng-seed"
+RULE_TRACED_BRANCH = "traced-branch"
+RULE_PLATFORM_PIN = "import-time-platform-pin"
+RULE_HOST_NONDET = "host-nondeterminism"
+RULE_SUPPRESSION = "bad-suppression"
+RULE_PARSE = "parse-error"
+
+AST_RULES = (RULE_BARE_FOLD, RULE_BARE_SEED, RULE_TRACED_BRANCH,
+             RULE_PLATFORM_PIN, RULE_HOST_NONDET)
+
+_SUPPRESS = re.compile(
+    r"#\s*repro-lint:\s*allow\(\s*([A-Za-z0-9_-]+)\s*(?:,\s*([^)]*?)\s*)?\)")
+
+# ChannelParams / FaultParams fields (core/channel.py). Branching on one
+# of these in Python means the knob is being read statically.
+TRACED_FIELDS = frozenset({
+    "sigma2", "h_threshold", "noise_std", "ota_on", "fgn_on",
+    "dropout", "blackout", "straggler", "staleness", "spike_norm",
+    "faults_on",
+})
+# metadata reads are static even on traced arrays
+_STATIC_META = frozenset({"shape", "dtype", "ndim", "size", "weak_type",
+                          "sharding", "aval"})
+# receivers that hold the STATIC config mirror of these field names
+# (FLConfig.sigma2/noise_std/... are frozen Python values, branch freely)
+_STATIC_RECEIVERS = frozenset({"fl", "cfg", "config", "tcfg", "mcfg",
+                               "flconfig", "base_fl"})
+
+_PLATFORM_CALLS = frozenset({
+    "jax.devices", "jax.local_devices", "jax.default_backend",
+    "jax.device_count", "jax.local_device_count", "jax.process_index",
+})
+
+# host-nondeterminism (exact canonical dotted names after alias
+# resolution; "numpy.random." / "random." are prefix bans)
+_NONDET_EXACT = frozenset({
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns", "os.urandom",
+    "os.getpid", "uuid.uuid1", "uuid.uuid4", "secrets.token_bytes",
+    "secrets.token_hex", "secrets.randbits", "datetime.datetime.now",
+    "datetime.datetime.utcnow",
+})
+_NONDET_PREFIXES = ("numpy.random.", "random.")
+
+
+@dataclass(frozen=True)
+class Violation:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}"
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _module_aliases(tree: ast.Module) -> Dict[str, str]:
+    """local name -> canonical dotted module/object for top-level-ish
+    imports (``import numpy as np`` => np -> numpy)."""
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def _canonical(dotted: str, aliases: Dict[str, str]) -> str:
+    head, _, rest = dotted.partition(".")
+    head = aliases.get(head, head)
+    return f"{head}.{rest}" if rest else head
+
+
+def _salt_identifiers(expr: ast.AST) -> Tuple[bool, Set[str]]:
+    """(has_any_identifier, uppercase identifiers referenced) in a salt
+    expression."""
+    has_ident = False
+    uppers: Set[str] = set()
+    for n in ast.walk(expr):
+        if isinstance(n, ast.Name):
+            has_ident = True
+            if is_salt_name(n.id) or n.id.isupper():
+                uppers.add(n.id)
+        elif isinstance(n, ast.Attribute):
+            has_ident = True
+            if is_salt_name(n.attr) or n.attr.isupper():
+                uppers.add(n.attr)
+    return has_ident, uppers
+
+
+class _FileLinter(ast.NodeVisitor):
+    def __init__(self, path: str, tree: ast.Module, registry: Set[str],
+                 rules: Set[str]):
+        self.path = path
+        self.rules = rules
+        self.registry = registry
+        self.aliases = _module_aliases(tree)
+        self.violations: List[Violation] = []
+        self._func_depth = 0
+        self._class_stack: List[str] = []
+        self._call_stack: List[str] = []
+
+    # ---------------------------------------------------------- helpers
+    def _flag(self, node: ast.AST, rule: str, message: str):
+        if rule in self.rules:
+            self.violations.append(
+                Violation(self.path, getattr(node, "lineno", 0), rule,
+                          message))
+
+    # ------------------------------------------------------------ scope
+    def visit_FunctionDef(self, node):
+        self._func_depth += 1
+        self.generic_visit(node)
+        self._func_depth -= 1
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node):
+        self._func_depth += 1
+        self.generic_visit(node)
+        self._func_depth -= 1
+
+    def visit_ClassDef(self, node):
+        self._class_stack.append(node.name)
+        self.generic_visit(node)
+        self._class_stack.pop()
+
+    # ------------------------------------------------------------ calls
+    def visit_Call(self, node: ast.Call):
+        dotted = _dotted(node.func)
+        if dotted is not None:
+            self._check_fold(node, dotted)
+            self._check_prngkey(node, dotted)
+            self._check_platform(node, dotted)
+            self._check_nondet(node, dotted)
+        self._call_stack.append(dotted or "")
+        self.generic_visit(node)
+        self._call_stack.pop()
+
+    def _check_fold(self, node: ast.Call, dotted: str):
+        if not (dotted == "fold_in" or dotted.endswith(".fold_in")):
+            return
+        salt = None
+        if len(node.args) >= 2:
+            salt = node.args[1]
+        else:
+            for kw in node.keywords:
+                if kw.arg == "data":
+                    salt = kw.value
+        if salt is None:
+            return
+        if isinstance(salt, ast.Constant) and isinstance(salt.value, int):
+            self._flag(node, RULE_BARE_FOLD,
+                       f"bare fold_in salt {salt.value} — register it as a "
+                       f"named constant in the DESIGN.md §4 registry "
+                       f"(core/ota.py) and fold the NAME, not the number")
+            return
+        has_ident, uppers = _salt_identifiers(salt)
+        if not has_ident:
+            self._flag(node, RULE_BARE_FOLD,
+                       "fold_in salt computed from literals only — use a "
+                       "registered §4 constant")
+            return
+        for name in sorted(uppers - self.registry):
+            self._flag(node, RULE_BARE_FOLD,
+                       f"fold_in salt references constant {name} that is "
+                       f"not in the DESIGN.md §4 registry — register it "
+                       f"in core/ota.py (or core/hota*.py) with a table "
+                       f"row")
+
+    def _check_prngkey(self, node: ast.Call, dotted: str):
+        if not (dotted.endswith(".PRNGKey") or dotted == "PRNGKey"
+                or dotted.endswith("random.key")):
+            return
+        if not node.args:
+            return
+        seed = node.args[0]
+        if not (isinstance(seed, ast.Constant) and isinstance(seed.value, int)):
+            return
+        if any(c.endswith("eval_shape") for c in self._call_stack):
+            return     # shape-only key: never produces bits
+        self._flag(node, RULE_BARE_SEED,
+                   f"hard-coded PRNGKey({seed.value}) in library code — "
+                   f"thread the caller's key (or wrap in jax.eval_shape "
+                   f"if shape-only)")
+
+    def _check_platform(self, node: ast.Call, dotted: str):
+        if self._func_depth > 0:
+            return
+        canon = _canonical(dotted, self.aliases)
+        if canon in _PLATFORM_CALLS or dotted.endswith("on_tpu") \
+                or canon.endswith(".on_tpu"):
+            self._flag(node, RULE_PLATFORM_PIN,
+                       f"import-time platform pin {dotted}() at module "
+                       f"scope — resolve the backend at trace time "
+                       f"(kernels/slab.py on_tpu()); baking it in at "
+                       f"import silently pins dispatch (the _ON_TPU "
+                       f"regression)")
+
+    def _check_nondet(self, node: ast.Call, dotted: str):
+        if RULE_HOST_NONDET not in self.rules:
+            return
+        canon = _canonical(dotted, self.aliases)
+        if canon in _NONDET_EXACT or any(
+                canon.startswith(p) for p in _NONDET_PREFIXES):
+            self._flag(node, RULE_HOST_NONDET,
+                       f"host nondeterminism {dotted}() in core/ — round "
+                       f"math must be a pure function of (state, batch, "
+                       f"key)")
+
+    # ----------------------------------------------------- traced knobs
+    def _check_test_expr(self, node: ast.AST, test: ast.AST, kind: str):
+        if any("Config" in c for c in self._class_stack):
+            return     # static-config class bodies read their own fields
+        parents: Dict[ast.AST, ast.AST] = {}
+        for p in ast.walk(test):
+            for c in ast.iter_child_nodes(p):
+                parents[c] = p
+        for n in ast.walk(test):
+            if not (isinstance(n, ast.Attribute) and n.attr in TRACED_FIELDS):
+                continue
+            par = parents.get(n)
+            if isinstance(par, ast.Attribute) and par.attr in _STATIC_META:
+                continue
+            chain: Set[str] = set()
+            v = n.value
+            while isinstance(v, ast.Attribute):
+                chain.add(v.attr)
+                v = v.value
+            if isinstance(v, ast.Name):
+                chain.add(v.id)
+            if chain & _STATIC_RECEIVERS:
+                continue
+            self._flag(n, RULE_TRACED_BRANCH,
+                       f"Python {kind} on traced field .{n.attr} — "
+                       f"ChannelParams/FaultParams values must branch "
+                       f"through jnp.where/lax.switch so one compiled "
+                       f"step serves every scenario (DESIGN.md §3.8)")
+
+    def visit_If(self, node):
+        self._check_test_expr(node, node.test, "if")
+        self.generic_visit(node)
+
+    def visit_While(self, node):
+        self._check_test_expr(node, node.test, "while")
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node):
+        self._check_test_expr(node, node.test, "conditional expression")
+        self.generic_visit(node)
+
+    def visit_Assert(self, node):
+        self._check_test_expr(node, node.test, "assert")
+        self.generic_visit(node)
+
+
+def _suppressions(source: str, path: str):
+    """(line -> {rule}) allowed suppressions + violations for malformed
+    ones. A suppression covers its own line and the line below."""
+    allowed: Dict[int, Set[str]] = {}
+    bad: List[Violation] = []
+    for i, line in enumerate(source.splitlines(), start=1):
+        for m in _SUPPRESS.finditer(line):
+            rule, reason = m.group(1), (m.group(2) or "").strip()
+            if not reason:
+                bad.append(Violation(
+                    path, i, RULE_SUPPRESSION,
+                    f"allow({rule}) without a reason — every suppression "
+                    f"documents WHY in place: "
+                    f"# repro-lint: allow({rule}, <reason>)"))
+                continue
+            allowed.setdefault(i, set()).add(rule)
+            allowed.setdefault(i + 1, set()).add(rule)
+    return allowed, bad
+
+
+def rules_for_path(relpath: str) -> Set[str]:
+    """Which AST rules apply to a file. ``host-nondeterminism`` is the
+    round-math rule: it binds only inside ``core/``."""
+    rules = set(AST_RULES)
+    parts = relpath.replace(os.sep, "/").split("/")
+    if "core" not in parts:
+        rules.discard(RULE_HOST_NONDET)
+    return rules
+
+
+def lint_source(path: str, source: str, registry: Set[str],
+                rules: Optional[Set[str]] = None) -> List[Violation]:
+    """Run the AST rules over one file's source."""
+    if rules is None:
+        rules = rules_for_path(path)
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Violation(path, e.lineno or 0, RULE_PARSE, str(e.msg))]
+    linter = _FileLinter(path, tree, registry, rules)
+    linter.visit(tree)
+    allowed, bad = _suppressions(source, path)
+    kept = [v for v in linter.violations
+            if v.rule not in allowed.get(v.line, ())]
+    return sorted(kept + bad, key=lambda v: (v.line, v.rule))
+
+
+def lint_paths(paths: Sequence[str], registry: Set[str],
+               repo_root: Optional[str] = None) -> List[Violation]:
+    """Lint every ``.py`` file under the given files/directories."""
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for dirpath, dirnames, names in os.walk(p):
+                dirnames[:] = [d for d in dirnames
+                               if d not in ("__pycache__", ".git")]
+                files.extend(os.path.join(dirpath, n)
+                             for n in sorted(names) if n.endswith(".py"))
+        elif p.endswith(".py"):
+            files.append(p)
+    out: List[Violation] = []
+    for path in files:
+        rel = (os.path.relpath(path, repo_root)
+               if repo_root and os.path.abspath(path).startswith(
+                   os.path.abspath(repo_root)) else path)
+        with open(path) as f:
+            source = f.read()
+        out.extend(lint_source(rel, source, registry,
+                               rules_for_path(rel)))
+    return out

@@ -1,0 +1,181 @@
+"""Spec ↔ code cross-check of the reserved fold/salt registry (DESIGN.md §4).
+
+The RNG stream spec lives twice: as named constants in the registry
+modules (``core/ota.py``, ``core/hota.py``, ``core/hota_slab.py``) and as
+the normative table in DESIGN.md §4. Either copy drifting silently is
+exactly the failure mode the spec exists to prevent — a renamed or
+renumbered fold re-keys every stream drawn under it. This module parses
+BOTH sides without importing jax (the code side via ``ast``, the doc side
+via the markdown table) and reports every disagreement:
+
+* names present on one side only;
+* value mismatches;
+* ``channel``-class folds below the ``0x7FFF0000`` reserved floor or
+  colliding pairwise (they share the per-round channel key domain);
+* ``aux``-class salts colliding pairwise (conservative: today every
+  registered salt is distinct, so a new collision is a red flag even
+  across parent-key domains);
+* dict registries (``KLASS_SALT``) with colliding values.
+
+Run via ``python scripts/repro_lint.py`` (rule name: ``stream-registry``)
+— see DESIGN.md §3.17.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+RULE = "stream-registry"
+
+# the registry homes: every reserved fold/salt constant lives in one of
+# these (tests/test_stream_spec.py scans the same set at runtime)
+REGISTRY_MODULES = (
+    os.path.join("src", "repro", "core", "ota.py"),
+    os.path.join("src", "repro", "core", "hota.py"),
+    os.path.join("src", "repro", "core", "hota_slab.py"),
+)
+
+CHANNEL_FLOOR = 0x7FFF0000
+
+_CONST_NAME = re.compile(r"^[A-Z][A-Z0-9_]*$")
+_SALTY = re.compile(r"(?:^|_)(?:FOLD|SALT)(?:_|$)")
+
+# | `NAME` | `0x7FFF0001` | channel | purpose... |
+_TABLE_ROW = re.compile(
+    r"^\|\s*`([A-Z][A-Z0-9_]*)`\s*\|\s*`(0x[0-9A-Fa-f]+|\d+)`\s*\|"
+    r"\s*([a-z]+)\s*\|")
+
+
+@dataclass
+class CodeRegistry:
+    """Named salt constants AST-parsed out of the registry modules."""
+    scalars: Dict[str, int] = field(default_factory=dict)   # NAME -> value
+    dicts: Dict[str, Dict[str, int]] = field(default_factory=dict)
+    homes: Dict[str, str] = field(default_factory=dict)     # NAME -> relpath
+
+    @property
+    def names(self):
+        """Every registry name a lint-checked salt may reference."""
+        return set(self.scalars) | set(self.dicts)
+
+
+def is_salt_name(name: str) -> bool:
+    """Whether an identifier claims membership in the salt registry."""
+    return bool(_CONST_NAME.match(name)) and bool(_SALTY.search(name))
+
+
+def code_registry(repo_root: str) -> CodeRegistry:
+    """AST-parse the registry modules for ``NAME = <int>`` (and str->int
+    dict) assignments whose name contains FOLD or SALT."""
+    reg = CodeRegistry()
+    for rel in REGISTRY_MODULES:
+        path = os.path.join(repo_root, rel)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            tree = ast.parse(f.read(), filename=rel)
+        for node in tree.body:
+            if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+                continue
+            tgt = node.targets[0]
+            if not isinstance(tgt, ast.Name) or not is_salt_name(tgt.id):
+                continue
+            val = node.value
+            if isinstance(val, ast.Constant) and isinstance(val.value, int):
+                reg.scalars[tgt.id] = val.value
+                reg.homes[tgt.id] = rel
+            elif isinstance(val, ast.Dict):
+                entries = {}
+                for k, v in zip(val.keys, val.values):
+                    if (isinstance(k, ast.Constant) and isinstance(k.value, str)
+                            and isinstance(v, ast.Constant)
+                            and isinstance(v.value, int)):
+                        entries[k.value] = v.value
+                if entries:
+                    reg.dicts[tgt.id] = entries
+                    reg.homes[tgt.id] = rel
+    return reg
+
+
+def design_table(design_text: str) -> Dict[str, Tuple[int, str]]:
+    """Parse the §4 registry table: NAME -> (value, class)."""
+    out: Dict[str, Tuple[int, str]] = {}
+    for line in design_text.splitlines():
+        m = _TABLE_ROW.match(line.strip())
+        if m:
+            out[m.group(1)] = (int(m.group(2), 0), m.group(3))
+    return out
+
+
+def cross_check(code: CodeRegistry,
+                table: Dict[str, Tuple[int, str]]) -> List[str]:
+    """Every way the two registries can disagree, as messages (empty =
+    in sync). Pure so tests can perturb either side."""
+    problems: List[str] = []
+    if not table:
+        return ["DESIGN.md §4 has no parseable fold/salt registry table "
+                "(rows like `| `NAME` | `0x...` | channel | ... |`)"]
+    if not code.scalars:
+        return ["no fold/salt constants found in the registry modules "
+                f"({', '.join(REGISTRY_MODULES)})"]
+
+    for name in sorted(set(code.scalars) - set(table)):
+        problems.append(
+            f"{code.homes[name]}: constant {name} = "
+            f"0x{code.scalars[name]:X} has no DESIGN.md §4 table row — "
+            f"register it (value + class) or rename it without FOLD/SALT")
+    for name in sorted(set(table) - set(code.scalars)):
+        problems.append(
+            f"DESIGN.md §4 table row {name} matches no constant in the "
+            f"registry modules — stale doc or renamed code constant")
+    for name in sorted(set(table) & set(code.scalars)):
+        want, _ = table[name]
+        got = code.scalars[name]
+        if got != want:
+            problems.append(
+                f"{code.homes[name]}: {name} = 0x{got:X} but DESIGN.md §4 "
+                f"spec's 0x{want:X} — renumbering re-keys every stream "
+                f"drawn under it")
+
+    by_class: Dict[str, List[Tuple[str, int]]] = {}
+    for name, (value, klass) in table.items():
+        by_class.setdefault(klass, []).append((name, value))
+    for name, value in by_class.get("channel", ()):
+        if value < CHANNEL_FLOOR:
+            problems.append(
+                f"DESIGN.md §4: channel fold {name} = 0x{value:X} is below "
+                f"the 0x{CHANNEL_FLOOR:X} reserved floor — it can collide "
+                f"with a cluster/leaf/section index")
+    for klass, entries in sorted(by_class.items()):
+        entries = sorted(entries)
+        for i, (a, va) in enumerate(entries):
+            for b, vb in entries[i + 1:]:
+                if va == vb:
+                    problems.append(
+                        f"DESIGN.md §4: {klass} salts {a} and {b} collide "
+                        f"at 0x{va:X} — their streams are identical")
+
+    for dname, entries in sorted(code.dicts.items()):
+        seen: Dict[int, str] = {}
+        for k, v in entries.items():
+            if v in seen:
+                problems.append(
+                    f"{code.homes[dname]}: {dname}[{k!r}] collides with "
+                    f"{dname}[{seen[v]!r}] at {v}")
+            seen[v] = k
+    return problems
+
+
+def check_registry(repo_root: str) -> List[str]:
+    """Cross-check the live tree: parse code + the §4 table and diff."""
+    # name assembled so the design-ref pass has no bare citation to flag
+    design_path = os.path.join(repo_root, "DESIGN" + ".md")
+    if not os.path.exists(design_path):
+        return ["DESIGN.md does not exist — the §4 registry table is the "
+                "normative half of the stream spec"]
+    with open(design_path) as f:
+        table = design_table(f.read())
+    return cross_check(code_registry(repo_root), table)

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import FLConfig, ModelConfig, TrainConfig
+from repro.core.ota import HOTA_MASK_SALT
 from repro.common.flatpack import check_tree_matches_packer, packer_for
 from repro.core.channel import ChannelParams
 from repro.kernels.ota_channel.ops import _ota_channel_impl
@@ -207,7 +208,8 @@ def make_ota_gather(data_axes: Tuple[str, ...],
             cnt = jax.lax.psum(mask.astype(jnp.float32), cluster_axes)
             y = jax.lax.psum(jnp.where(mask, x_reg, 0.0), cluster_axes)
             z = (jax.random.normal(
-                jax.random.fold_in(mkey, 0xBEEF), x_reg.shape, jnp.float32)
+                jax.random.fold_in(mkey, HOTA_MASK_SALT), x_reg.shape,
+                jnp.float32)
                 * ctx.noise_std * ctx.ota_on)
             ghat_reg = _estimate(y, cnt, z, n_clients)
             # my FSDP piece = my cluster's sub-slice of my region
@@ -225,8 +227,9 @@ def make_ota_gather(data_axes: Tuple[str, ...],
                                 ctx.ota_on, cluster_axes)
         cnt = jax.lax.psum(mask.astype(jnp.float32), cluster_axes)
         y = jax.lax.psum(jnp.where(mask, x, 0.0), cluster_axes)
-        z = (jax.random.normal(jax.random.fold_in(ctx.key, 0xBEEF), g.shape,
-                               jnp.float32) * ctx.noise_std * ctx.ota_on)
+        z = (jax.random.normal(jax.random.fold_in(ctx.key, HOTA_MASK_SALT),
+                               g.shape, jnp.float32)
+             * ctx.noise_std * ctx.ota_on)
         ghat = _estimate(y, cnt, z, n_clients)
         if axis >= 0:
             me = jax.lax.axis_index(data_axes[0])
@@ -343,7 +346,7 @@ def make_packed_final_gather(data_axes: Tuple[str, ...],
                                       ctx.ota_on, cluster_axes)
         y = jax.lax.psum(xm, cluster_axes)
         cnt = jax.lax.psum(mask, cluster_axes)
-        z = (jax.random.normal(jax.random.fold_in(ctx.key, 0xBEEF),
+        z = (jax.random.normal(jax.random.fold_in(ctx.key, HOTA_MASK_SALT),
                                g_slab.shape, jnp.float32)
              * ctx.noise_std * ctx.ota_on)
         ghat = jnp.where(cnt > 0,

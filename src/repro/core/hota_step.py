@@ -303,7 +303,8 @@ def make_hota_step_parts(
     def init_fn(key: jax.Array) -> HotaState:
         k1, k2 = jax.random.split(key)
         omega = {
-            "final": init_params(model.final_specs(), jax.random.fold_in(k1, 7)),
+            "final": init_params(model.final_specs(),
+                                 jax.random.fold_in(k1, ota.FINAL_INIT_FOLD)),
             "trunk": init_params(model.trunk_specs(), k1),
         }
         heads = jax.vmap(lambda kc: init_params(head_specs, kc))(

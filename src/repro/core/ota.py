@@ -96,6 +96,20 @@ SAMPLE_FOLD = 0x7FFF0005
 # the tail (ω̃) section keeps PACKED_TAIL_FOLD in EVERY layout, so eq.-5
 # consumers re-draw only the ω̃ stream without knowing the trunk split.
 PACKED_SECTION_FOLD_BASE = 0x7FFF0100
+# ---- aux salts (DESIGN.md §4, class ``aux``) -----------------------------
+# Small-valued salts folded off keys that never meet the per-round channel
+# key domain, registered here (with their historical values, so no stream
+# moves) rather than spelled as bare literals at the call sites — the
+# `bare-fold-salt` lint rule (§3.17) rejects the literal spelling.
+FINAL_INIT_FOLD = 7      # ω̃ (final shared layer) init off the trunk key
+SAMPLE_INIT_FOLD = 11    # population client-bank init off the sim init key
+HOTA_MASK_SALT = 0xBEEF  # dist backward's AWGN z off the round mask key
+TUNE_PROBE_FOLD = 99     # layout autotuner's probe-weight draw
+# participation sub-streams: per-kind uniforms fold off the PART_FOLD
+# key (draw_participation), one sub-fold per fault kind
+PART_DROP_FOLD = 0       # client dropout uniforms
+PART_BLACK_FOLD = 1      # cluster blackout uniforms
+PART_STRAG_FOLD = 2      # straggler-flag uniforms
 
 
 def cluster_key(key: jax.Array, cluster: jax.Array | int) -> jax.Array:
@@ -178,10 +192,11 @@ def draw_participation(key: jax.Array, faults, n_clusters: int,
     through the scenario banks without retracing and resampling a rate
     never moves another scenario's draw."""
     pk = participation_key(key)
-    u_drop = jax.random.uniform(jax.random.fold_in(pk, 0),
+    u_drop = jax.random.uniform(jax.random.fold_in(pk, PART_DROP_FOLD),
                                 (n_clusters, n_clients))
-    u_black = jax.random.uniform(jax.random.fold_in(pk, 1), (n_clusters,))
-    u_strag = jax.random.uniform(jax.random.fold_in(pk, 2),
+    u_black = jax.random.uniform(jax.random.fold_in(pk, PART_BLACK_FOLD),
+                                 (n_clusters,))
+    u_strag = jax.random.uniform(jax.random.fold_in(pk, PART_STRAG_FOLD),
                                  (n_clusters, n_clients))
     on = faults.faults_on >= 0.5
     drop = jnp.logical_and(on, u_drop < faults.dropout)

@@ -158,7 +158,7 @@ class SampledHotaSim:
         inner = self.sim.init(key)
         bank = init_client_bank(self.model, self.fl, self.population,
                                 self.sim.max_classes,
-                                jax.random.fold_in(key, 11))
+                                jax.random.fold_in(key, ota.SAMPLE_INIT_FOLD))
         return SampledSimState(sim=inner, bank=bank)
 
     # ------------------------------------------------------------------

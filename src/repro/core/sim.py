@@ -117,7 +117,8 @@ class HotaSim:
         k1, k2 = jax.random.split(key)
         omega = {"trunk": init_params(self.model.trunk_specs(), k1),
                  "final": init_params(self.model.final_specs(),
-                                      jax.random.fold_in(k1, 7))}
+                                      jax.random.fold_in(
+                                          k1, ota.FINAL_INIT_FOLD))}
         # reorder so "final" flattens first (leaf offset 0 for channel keys)
         omega = {"final": omega["final"], "trunk": omega["trunk"]}
         head_specs = self.model.head_specs(self.max_classes)

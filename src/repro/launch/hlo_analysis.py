@@ -6,139 +6,32 @@ Terms (per device, per step):
     collective term = collective_bytes / link_bw_per_chip
 
 FLOPs/bytes come from ``compiled.cost_analysis()``. Collective bytes are
-NOT in cost_analysis: we parse the post-partitioning HLO text, summing the
-result-shape bytes of every all-gather / all-reduce / reduce-scatter /
-all-to-all / collective-permute, with while-loop trip-count multipliers
-recovered from loop condition constants (scan-over-layers makes nearly all
-collectives sit inside while bodies).
+NOT in cost_analysis: they come from the shared HLO text parser in
+``launch/hlo_cost.py`` (result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, with
+while-loop trip-count multipliers recovered from loop condition
+constants — scan-over-layers makes nearly all collectives sit inside
+while bodies). This module used to carry a second, divergent regex
+dialect for that walk; it now delegates (DESIGN.md §3.17).
 
 Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM,
 ~50 GB/s/link ICI (assignment-provided).
 """
 from __future__ import annotations
 
-import re
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.launch.hlo_cost import COLLECTIVES, DTYPE_BYTES, analyze
 
 PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link
 
-DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1,
-}
-
-COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-               "collective-permute")
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_COMP_RE = re.compile(r"^(?:%(\S+)|(\S+))\s+\([^)]*\)\s*->", re.M)
-
-
-def _shape_bytes(dtype: str, dims: str) -> int:
-    if dtype not in DTYPE_BYTES:
-        return 0
-    n = 1
-    for d in dims.split(","):
-        if d.strip():
-            n *= int(d)
-    return n * DTYPE_BYTES[dtype]
-
-
-@dataclass
-class Computation:
-    name: str
-    text: List[str] = field(default_factory=list)
-    collective_bytes: Dict[str, int] = field(default_factory=dict)
-    whiles: List[Tuple[str, str]] = field(default_factory=list)  # (body, cond)
-    calls: List[str] = field(default_factory=list)
-
-
-def _parse_computations(hlo: str) -> Dict[str, Computation]:
-    comps: Dict[str, Computation] = {}
-    cur: Optional[Computation] = None
-    for line in hlo.splitlines():
-        stripped = line.strip()
-        m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\([^)]*\)\s*->", line)
-        if m and not line.startswith(" "):
-            cur = Computation(name=m.group(2))
-            comps[cur.name] = cur
-            continue
-        if cur is None:
-            continue
-        cur.text.append(stripped)
-        # while loops: body=%name, condition=%name
-        if "while(" in stripped or " while(" in stripped:
-            b = re.search(r"body=%?([\w\.\-]+)", stripped)
-            c = re.search(r"condition=%?([\w\.\-]+)", stripped)
-            if b and c:
-                cur.whiles.append((b.group(1), c.group(1)))
-        for cname in re.findall(r"(?:to_apply|calls)=%?([\w\.\-]+)", stripped):
-            cur.calls.append(cname)
-        # collectives: result shape(s) appear before the op name
-        for op in COLLECTIVES:
-            if re.search(rf"=\s*(?:\([^)]*\)\s*)?{op}[\(\.]", stripped) or \
-               re.search(rf"=\s*\S+\s+{op}\(", stripped):
-                lhs = stripped.split("=")[1] if "=" in stripped else stripped
-                head = lhs.split(op)[0]
-                total = sum(_shape_bytes(d, dims)
-                            for d, dims in _SHAPE_RE.findall(head))
-                cur.collective_bytes[op] = cur.collective_bytes.get(op, 0) + total
-                break
-    return comps
-
-
-def _trip_count(cond: Computation) -> int:
-    """Best-effort static trip count from the loop condition constants."""
-    consts = []
-    for line in cond.text:
-        if "constant(" in line and ("compare" in "".join(cond.text) or True):
-            for m in re.finditer(r"constant\((\d+)\)", line):
-                consts.append(int(m.group(1)))
-    return max(consts) if consts else 1
-
 
 def collective_bytes(hlo: str) -> Dict[str, float]:
     """Total per-device collective bytes per step, loop-multiplied."""
-    comps = _parse_computations(hlo)
-    conds = {}
-
-    def visit(name: str, mult: float, seen: Tuple[str, ...]) -> Dict[str, float]:
-        if name not in comps or name in seen:
-            return {}
-        comp = comps[name]
-        out: Dict[str, float] = {}
-        for op, b in comp.collective_bytes.items():
-            out[op] = out.get(op, 0.0) + b * mult
-        for body, cond in comp.whiles:
-            tc = _trip_count(comps[cond]) if cond in comps else 1
-            sub = visit(body, mult * max(tc, 1), seen + (name,))
-            for op, b in sub.items():
-                out[op] = out.get(op, 0.0) + b
-        for callee in comp.calls:
-            sub = visit(callee, mult, seen + (name,))
-            for op, b in sub.items():
-                out[op] = out.get(op, 0.0) + b
-        return out
-
-    entry = None
-    for line in hlo.splitlines():
-        if line.startswith("ENTRY"):
-            m = re.search(r"ENTRY\s+%?([\w\.\-]+)", line)
-            if m:
-                entry = m.group(1)
-            break
-    if entry is None or entry not in comps:
-        # fall back: sum everything without multipliers
-        total: Dict[str, float] = {}
-        for comp in comps.values():
-            for op, b in comp.collective_bytes.items():
-                total[op] = total.get(op, 0.0) + b
-        return total
-    return visit(entry, 1.0, ())
+    return dict(analyze(hlo).coll_bytes)
 
 
 @dataclass
@@ -182,6 +75,8 @@ class Roofline:
 
 def extract_roofline(compiled) -> Roofline:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax 0.4.x returns [per-device dict]
+        ca = ca[0] if ca else {}
     flops = float(ca.get("flops", 0.0))
     bytes_acc = float(ca.get("bytes accessed", 0.0))
     hlo = compiled.as_text()

@@ -46,6 +46,11 @@ def _parse_shape_list(s: str) -> List[Tuple[str, Tuple[int, ...]]]:
     return out
 
 
+# public alias — repro.analysis (hlo_audit, roofline) and this module
+# share ONE shape-token dialect; see DESIGN.md §3.17
+parse_shape_tokens = _parse_shape_list
+
+
 def _bytes_of(shapes: List[Tuple[str, Tuple[int, ...]]]) -> int:
     total = 0
     for dtype, shape in shapes:

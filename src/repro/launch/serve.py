@@ -31,16 +31,20 @@ def main():
     cfg = get_smoke_config(ALIASES.get(args.arch, args.arch))
     model = build_model(cfg)
     key = jax.random.PRNGKey(args.seed)
-    backbone = {"trunk": init_params(model.trunk_specs(), key),
-                "final": init_params(model.final_specs(),
-                                     jax.random.fold_in(key, 7))}
-    head = init_params(model.head_specs(), jax.random.fold_in(key, 9))
+    # split, don't fold literals: bare fold salts are reserved for the
+    # DESIGN.md §4 registry (repro-lint bare-fold-salt); a demo's streams
+    # carry no parity contract, so independent split keys are the right
+    # spelling here
+    k_trunk, k_final, k_head, k_prompt = jax.random.split(key, 4)
+    backbone = {"trunk": init_params(model.trunk_specs(), k_trunk),
+                "final": init_params(model.final_specs(), k_final)}
+    head = init_params(model.head_specs(), k_head)
 
     cache_len = args.prefill_len + args.decode_steps + 1
     prefill = jax.jit(make_prefill_step(model, cache_len=cache_len))
     decode = jax.jit(make_decode_step(model))
 
-    prompt = jax.random.randint(jax.random.fold_in(key, 1),
+    prompt = jax.random.randint(k_prompt,
                                 (args.batch, args.prefill_len), 0,
                                 cfg.vocab_size)
     t0 = time.time()

@@ -29,6 +29,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 import repro.core.hota_step as hota_step
+from repro.analysis import hlo_audit
 from repro.common.config import FLConfig, ModelConfig, TrainConfig
 from repro.core.channel import channel_params
 from repro.core.hota import OTACtx, _is_axes
@@ -173,11 +174,15 @@ for (ka, a), (_, b) in zip(jax.tree_util.tree_flatten_with_path(ghat)[0],
 # --- 3. zero-copy: no slab-sized buffer in the compiled backward ------------
 hlo = jf.lower(g_dev_major, p_dev).compile().as_text()
 P_slab = packer.size
-assert f"f32[{P_slab}]" not in hlo, \
-    f"full (P,)={P_slab} slab materialized — the zero-copy layout regressed"
-assert f"f32[{C},{P_slab}]" not in hlo
-assert "dynamic-update-slice" not in hlo, \
-    "pack-style dynamic-update-slice chain found in the slab backward"
+hlo_audit.assert_hlo_pins(hlo, [
+    hlo_audit.forbid_buffer((P_slab,), dtypes=("f32",),
+                            note="full (P,) slab — zero-copy regressed"),
+    hlo_audit.forbid_buffer((C, P_slab), dtypes=("f32",),
+                            note="(C, P) slab"),
+    hlo_audit.forbid_opcode(
+        "dynamic-update-slice",
+        note="pack-style scatter chain in the slab backward"),
+], context="slab backward zero-copy (§3.10)")
 
 # --- 4. retrace pin: chan VALUES never re-trace (ota_mode is static) --------
 fl_tr = FLConfig(n_clusters=C, n_clients=N, weighting="fedgradnorm",

@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.analysis import hlo_audit
 from repro.common.config import FLConfig, ModelConfig, TrainConfig
 from repro.common.flatpack import packer_for
 from repro.core import ota
@@ -337,8 +338,6 @@ def test_sim_packed_step_allocates_no_slab_buffer():
         s, xx, yy, k, ch))
     hlo = f.lower(st_, x, y, jax.random.PRNGKey(1),
                   sim.chan).compile().as_text()
-    for pat in (f"f32[{Cc},{P}]", f"u32[{Cc},{P}]", f"f32[{P}]",
-                f"u32[{P}]"):
-        assert pat not in hlo, (
-            f"{pat} found in the compiled sim step — the slab-native "
-            f"channel regressed to a packed/weighted slab intermediate")
+    hlo_audit.assert_hlo_pins(
+        hlo, hlo_audit.no_slab_pins(Cc, P, note="packed/weighted slab"),
+        context="compiled sim step — slab-native channel (§3.12)")

@@ -1,0 +1,453 @@
+"""The §3.17 static-analysis subsystem, pinned (DESIGN.md §3.17).
+
+Three groups:
+
+* **AST lint rules** — for every rule a fixture snippet where it fires,
+  the carve-outs that must NOT fire (eval_shape keys, ``.shape`` reads,
+  static-config receivers, runtime indices), and the suppression
+  contract (``# repro-lint: allow(rule, reason)`` silences exactly its
+  rule; a reason-less allow is itself a violation);
+* **stream-registry cross-check** — the pure ``cross_check`` diff under
+  perturbations (rename / renumber / missing row / below-floor /
+  collision on either side), plus the live tree being in sync;
+* **HLO audit library** — pin evaluation against synthetic HLO and the
+  shared-parser re-exports.
+
+The real tree is the integration fixture: a clean run over ``src/``
+must produce zero violations, and the CLI must exit 0 (and exit 1,
+naming file:line and rule, when a scratch file with a bare
+``fold_in(key, 42)`` is added to its path list).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis import hlo_audit
+from repro.analysis.design_refs import check_design_refs
+from repro.analysis.lint import (AST_RULES, RULE_BARE_FOLD, RULE_BARE_SEED,
+                                 RULE_HOST_NONDET, RULE_PLATFORM_PIN,
+                                 RULE_SUPPRESSION, RULE_TRACED_BRANCH,
+                                 lint_paths, lint_source, rules_for_path)
+from repro.analysis.stream_registry import (CHANNEL_FLOOR, CodeRegistry,
+                                            check_registry, code_registry,
+                                            cross_check, design_table,
+                                            is_salt_name)
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+CORE_PATH = os.path.join("src", "repro", "core", "fixture.py")
+REGISTRY = {"NOISE_FOLD", "FINAL_INIT_FOLD", "KLASS_SALT"}
+
+
+def _lint(src, path=CORE_PATH, registry=REGISTRY):
+    return lint_source(path, textwrap.dedent(src), registry)
+
+
+def _rules(violations):
+    return [v.rule for v in violations]
+
+
+# ------------------------------------------------------------ bare-fold-salt
+def test_bare_fold_literal_fires():
+    vs = _lint("""\
+        import jax
+
+        def f(key):
+            return jax.random.fold_in(key, 42)
+    """)
+    assert _rules(vs) == [RULE_BARE_FOLD]
+    assert vs[0].line == 4 and "42" in vs[0].message
+
+
+def test_bare_fold_literal_expression_fires():
+    vs = _lint("import jax\nk = jax.random.fold_in(k0, 7 + 3)\n")
+    assert _rules(vs) == [RULE_BARE_FOLD]
+
+
+def test_fold_unregistered_constant_fires():
+    vs = _lint("""\
+        import jax
+        MY_SECRET_FOLD = 123
+
+        def f(key):
+            return jax.random.fold_in(key, MY_SECRET_FOLD)
+    """)
+    assert _rules(vs) == [RULE_BARE_FOLD]
+    assert "MY_SECRET_FOLD" in vs[0].message
+
+
+def test_fold_registered_constant_ok():
+    assert _lint("""\
+        import jax
+        from repro.core.ota import NOISE_FOLD
+
+        def f(key, klass):
+            a = jax.random.fold_in(key, NOISE_FOLD)
+            b = jax.random.fold_in(key, ota.FINAL_INIT_FOLD)
+            c = jax.random.fold_in(key, KLASS_SALT[klass])
+            return a, b, c
+    """) == []
+
+
+def test_fold_runtime_index_ok():
+    assert _lint("""\
+        import jax
+
+        def f(key, cluster, leaf_idx):
+            return jax.random.fold_in(jax.random.fold_in(key, cluster),
+                                      leaf_idx + 1)
+    """) == []
+
+
+# ------------------------------------------------------------ bare-prng-seed
+def test_prngkey_literal_fires():
+    vs = _lint("import jax\nKEY = jax.random.PRNGKey(0)\n")
+    assert _rules(vs) == [RULE_BARE_SEED]
+
+
+def test_prngkey_eval_shape_ok():
+    assert _lint("""\
+        import jax
+
+        def f(fn):
+            return jax.eval_shape(lambda k: fn(k), jax.random.PRNGKey(0))
+    """) == []
+
+
+def test_prngkey_variable_seed_ok():
+    assert _lint("""\
+        import jax
+
+        def f(seed):
+            return jax.random.PRNGKey(seed)
+    """) == []
+
+
+# ------------------------------------------------------------- traced-branch
+def test_traced_branch_if_fires():
+    vs = _lint("""\
+        import jax.numpy as jnp
+
+        def f(chan, g):
+            if chan.sigma2 > 0:
+                return g
+            return jnp.zeros_like(g)
+    """)
+    assert _rules(vs) == [RULE_TRACED_BRANCH]
+    assert ".sigma2" in vs[0].message
+
+
+def test_traced_branch_ternary_and_assert_fire():
+    vs = _lint("""\
+        def f(faults, g):
+            assert faults.faults_on
+            return g if faults.dropout else 0
+    """)
+    assert sorted(_rules(vs)) == [RULE_TRACED_BRANCH, RULE_TRACED_BRANCH]
+
+
+def test_traced_branch_shape_read_ok():
+    assert _lint("""\
+        def f(chan, g):
+            if chan.sigma2.shape[0] > 1:
+                return g
+            return 0
+    """) == []
+
+
+def test_traced_branch_static_config_receiver_ok():
+    assert _lint("""\
+        def f(fl, cfg, g):
+            if fl.sigma2 and cfg.noise_std:
+                return g
+            return 0
+    """) == []
+
+
+def test_traced_branch_config_class_ok():
+    assert _lint("""\
+        class FLConfig:
+            def validate(self):
+                if not self.sigma2:
+                    raise ValueError("sigma2 required")
+    """) == []
+
+
+# ------------------------------------------------- import-time-platform-pin
+def test_module_scope_backend_fires():
+    vs = _lint("import jax\n_ON_TPU = jax.default_backend() == 'tpu'\n")
+    assert _rules(vs) == [RULE_PLATFORM_PIN]
+
+
+def test_trace_time_backend_ok():
+    assert _lint("""\
+        import jax
+
+        def on_tpu():
+            return jax.default_backend() == "tpu"
+    """) == []
+
+
+# ------------------------------------------------------ host-nondeterminism
+def test_time_and_np_random_fire_in_core():
+    vs = _lint("""\
+        import time
+        import numpy as np
+
+        def f():
+            return time.time() + np.random.rand()
+    """)
+    assert sorted(_rules(vs)) == [RULE_HOST_NONDET, RULE_HOST_NONDET]
+
+
+def test_host_nondeterminism_scoped_to_core():
+    src = "import time\n\ndef f():\n    return time.time()\n"
+    bench_path = os.path.join("src", "repro", "launch", "bench.py")
+    assert lint_source(bench_path, src, REGISTRY,
+                       rules_for_path(bench_path)) == []
+
+
+def test_jax_random_not_flagged_as_host_nondeterminism():
+    assert _lint("""\
+        import jax
+
+        def f(key, shape):
+            return jax.random.normal(key, shape)
+    """) == []
+
+
+# --------------------------------------------------------------- suppression
+def test_suppression_silences_its_rule():
+    assert _lint("""\
+        import jax
+        # repro-lint: allow(bare-fold-salt, fixture exercising suppression)
+        k = jax.random.fold_in(k0, 42)
+    """) == []
+
+
+def test_suppression_on_same_line_silences():
+    assert _lint(
+        "import jax\n"
+        "k = jax.random.fold_in(k0, 42)"
+        "  # repro-lint: allow(bare-fold-salt, fixture)\n") == []
+
+
+def test_suppression_wrong_rule_does_not_silence():
+    vs = _lint("""\
+        import jax
+        # repro-lint: allow(bare-prng-seed, wrong rule named)
+        k = jax.random.fold_in(k0, 42)
+    """)
+    assert _rules(vs) == [RULE_BARE_FOLD]
+
+
+def test_suppression_without_reason_is_violation():
+    vs = _lint("""\
+        import jax
+        # repro-lint: allow(bare-fold-salt)
+        k = jax.random.fold_in(k0, 42)
+    """)
+    assert sorted(_rules(vs)) == [RULE_SUPPRESSION, RULE_BARE_FOLD]
+
+
+# --------------------------------------------------- the tree is the fixture
+def test_real_src_tree_is_clean():
+    """The acceptance bar: zero violations over the real src/ with the
+    real registry."""
+    reg = code_registry(REPO)
+    vs = lint_paths([os.path.join(REPO, "src")], reg.names, repo_root=REPO)
+    assert vs == [], "\n".join(v.format() for v in vs)
+
+
+def test_real_registry_cross_check_clean():
+    assert check_registry(REPO) == []
+
+
+def test_real_design_refs_clean():
+    assert [v.format() for v in check_design_refs(REPO)] == []
+
+
+def test_cli_clean_exit_0():
+    r = subprocess.run([sys.executable, "scripts/repro_lint.py"],
+                       cwd=REPO, capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr
+
+
+def test_cli_seeded_violation_reported(tmp_path):
+    scratch = tmp_path / "scratch_bad.py"
+    scratch.write_text(
+        "import jax\n\n\ndef f(key):\n"
+        "    return jax.random.fold_in(key, 42)\n")
+    r = subprocess.run(
+        [sys.executable, "scripts/repro_lint.py", str(scratch)],
+        cwd=REPO, capture_output=True, text=True)
+    assert r.returncode == 1
+    assert f"{scratch}:5: {RULE_BARE_FOLD}:" in r.stderr
+
+
+# ------------------------------------------------------ stream registry diff
+_TABLE = textwrap.dedent("""\
+    | name | value | class | purpose |
+    |------|-------|-------|---------|
+    | `NOISE_FOLD` | `0x7FFFFFFF` | channel | AWGN |
+    | `FINAL_INIT_FOLD` | `7` | aux | init |
+""")
+
+
+def _code(**scalars):
+    reg = CodeRegistry()
+    for name, val in scalars.items():
+        reg.scalars[name] = val
+        reg.homes[name] = "src/repro/core/ota.py"
+    return reg
+
+
+def test_cross_check_in_sync():
+    code = _code(NOISE_FOLD=0x7FFFFFFF, FINAL_INIT_FOLD=7)
+    assert cross_check(code, design_table(_TABLE)) == []
+
+
+def test_cross_check_renumbered_code_fails():
+    code = _code(NOISE_FOLD=0x7FFFFFFE, FINAL_INIT_FOLD=7)
+    msgs = cross_check(code, design_table(_TABLE))
+    assert len(msgs) == 1 and "NOISE_FOLD" in msgs[0]
+    assert "re-keys" in msgs[0]
+
+
+def test_cross_check_renamed_code_fails_both_ways():
+    code = _code(NOYSE_FOLD=0x7FFFFFFF, FINAL_INIT_FOLD=7)
+    msgs = cross_check(code, design_table(_TABLE))
+    assert any("NOYSE_FOLD" in m for m in msgs)       # code-only name
+    assert any("NOISE_FOLD" in m and "stale" in m for m in msgs)
+
+
+def test_cross_check_unregistered_constant_fails():
+    code = _code(NOISE_FOLD=0x7FFFFFFF, FINAL_INIT_FOLD=7,
+                 NEW_SECRET_FOLD=0x7FFF0777)
+    msgs = cross_check(code, design_table(_TABLE))
+    assert len(msgs) == 1 and "NEW_SECRET_FOLD" in msgs[0]
+
+
+def test_cross_check_channel_below_floor_fails():
+    table = design_table(_TABLE + "| `LOW_FOLD` | `5` | channel | bad |\n")
+    code = _code(NOISE_FOLD=0x7FFFFFFF, FINAL_INIT_FOLD=7, LOW_FOLD=5)
+    msgs = cross_check(code, table)
+    assert any("below" in m and "LOW_FOLD" in m for m in msgs)
+    assert CHANNEL_FLOOR == 0x7FFF0000
+
+
+def test_cross_check_collision_fails():
+    table = design_table(
+        _TABLE + "| `OTHER_INIT_FOLD` | `7` | aux | dup |\n")
+    code = _code(NOISE_FOLD=0x7FFFFFFF, FINAL_INIT_FOLD=7,
+                 OTHER_INIT_FOLD=7)
+    msgs = cross_check(code, table)
+    assert any("collide" in m for m in msgs)
+
+
+def test_is_salt_name():
+    assert is_salt_name("NOISE_FOLD")
+    assert is_salt_name("KLASS_SALT")
+    assert is_salt_name("PACKED_SECTION_FOLD_BASE")
+    assert not is_salt_name("CHUNK_ROWS")
+    assert not is_salt_name("noise_fold")
+    assert not is_salt_name("FOLDER_NAME")
+
+
+# ------------------------------------------------------------- HLO audit lib
+_HLO = textwrap.dedent("""\
+    HloModule m
+
+    %inner (a: f32[4,8]) -> f32[4,8] {
+      %a = f32[4,8]{1,0} parameter(0)
+      ROOT %d = f32[4,8]{1,0} dynamic-update-slice(%a, %a)
+    }
+
+    ENTRY %main (p0: f32[4,8], p1: u32[16]) -> f32[4,8] {
+      %p0 = f32[4,8]{1,0} parameter(0)
+      %p1 = u32[16]{0} parameter(1)
+      ROOT %f = f32[4,8]{1,0} fusion(%p0), kind=kLoop, calls=%inner
+    }
+""")
+
+
+def test_buffer_shapes_tokenizes_with_layouts():
+    shapes = hlo_audit.buffer_shapes(_HLO)
+    assert ("f32", (4, 8)) in shapes
+    assert ("u32", (16,)) in shapes
+    assert ("f32", (8,)) not in shapes
+
+
+def test_forbid_buffer_fires_and_passes():
+    assert hlo_audit.audit_hlo(
+        _HLO, [hlo_audit.forbid_buffer((4, 8), note="the slab")])
+    assert hlo_audit.audit_hlo(
+        _HLO, [hlo_audit.forbid_buffer((4, 9))]) == []
+    # dtype-restricted forbid: u32[4,8] absent even though f32[4,8] exists
+    assert hlo_audit.audit_hlo(
+        _HLO, [hlo_audit.forbid_buffer((4, 8), dtypes=("u32",))]) == []
+
+
+def test_require_buffer_positive_control():
+    assert hlo_audit.audit_hlo(
+        _HLO, [hlo_audit.require_buffer((16,), dtypes=("u32",))]) == []
+    msgs = hlo_audit.audit_hlo(
+        _HLO, [hlo_audit.require_buffer((999,), dtypes=("u32",),
+                                        note="missing control")])
+    assert len(msgs) == 1 and "vacuous" in msgs[0]
+
+
+def test_opcode_pin_sees_fusion_bodies():
+    assert hlo_audit.audit_hlo(
+        _HLO, [hlo_audit.forbid_opcode("dynamic-update-slice")])
+    assert hlo_audit.audit_hlo(
+        _HLO, [hlo_audit.forbid_opcode("all-gather")]) == []
+
+
+def test_assert_hlo_pins_names_every_failure():
+    with pytest.raises(AssertionError) as e:
+        hlo_audit.assert_hlo_pins(_HLO, [
+            hlo_audit.forbid_buffer((4, 8), note="the slab"),
+            hlo_audit.forbid_opcode("dynamic-update-slice"),
+        ], context="fixture")
+    assert "the slab" in str(e.value)
+    assert "dynamic-update-slice" in str(e.value)
+    assert "fixture" in str(e.value)
+
+
+def test_canned_pin_sets():
+    pins = hlo_audit.no_slab_pins(4, 8)
+    assert hlo_audit.audit_hlo(_HLO, pins)        # (4, 8) present -> fails
+    assert hlo_audit.audit_hlo(
+        _HLO, hlo_audit.no_slab_pins(3, 7)) == []
+    assert hlo_audit.audit_hlo(
+        _HLO, hlo_audit.no_cluster_stream_pins(4, [8, 8, 9]))
+    assert hlo_audit.audit_hlo(
+        _HLO, hlo_audit.cluster_chunk_stream_pin(4, 8))   # u32 absent
+
+
+def test_shared_parser_reexports():
+    """repro.analysis and launch/hlo_cost expose the SAME parser objects
+    — one regex dialect (satellite: no second copy can drift)."""
+    import repro.analysis as analysis
+    from repro.launch import hlo_cost
+    assert analysis.parse_hlo is hlo_cost.parse_hlo
+    assert analysis.analyze is hlo_cost.analyze
+    assert analysis.parse_shape_tokens is hlo_cost.parse_shape_tokens
+    assert analysis.parse_shape_tokens("f32[4,8]{1,0} u32[16]") == [
+        ("f32", (4, 8)), ("u32", (16,))]
+
+
+def test_hlo_analysis_delegates_to_shared_parser():
+    from repro.launch.hlo_analysis import collective_bytes
+    hlo = textwrap.dedent("""\
+        HloModule m
+
+        ENTRY %main (p0: f32[8]) -> f32[8] {
+          %p0 = f32[8]{0} parameter(0)
+          ROOT %ar = f32[8]{0} all-reduce(%p0), to_apply=%add
+        }
+    """)
+    assert collective_bytes(hlo) == {"all-reduce": 32.0}

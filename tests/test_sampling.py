@@ -22,6 +22,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.analysis import hlo_audit
 from repro.common.config import FLConfig, ModelConfig, TrainConfig
 from repro.common.flatpack import packer_for
 from repro.core import ota
@@ -187,15 +188,13 @@ def test_streaming_hlo_holds_one_cluster():
 
     hlo_s = lower(ota.ota_aggregate_streaming)
     hlo_c = lower(ota.ota_aggregate_client_folded)
-    banned = [f"{t}[{C},{L}]" for L in lengths + [P, ota.CHUNK]
-              for t in ("f32", "u32")]
-    for pat in banned:
-        assert pat not in hlo_s, (
-            f"{pat} found in the compiled streaming aggregation — a "
-            f"whole-(C, section) buffer regressed the one-cluster peak")
-    assert f"u32[{C},{ota.CHUNK}]" in hlo_c, (
-        "positive control failed: the all-at-once client-folded path no "
-        "longer compiles a (C, CHUNK) stream buffer — update this pin")
+    hlo_audit.assert_hlo_pins(
+        hlo_s,
+        hlo_audit.no_cluster_stream_pins(C, lengths + [P, ota.CHUNK]),
+        context="streaming aggregation — one-cluster peak (§3.15)")
+    hlo_audit.assert_hlo_pins(
+        hlo_c, hlo_audit.cluster_chunk_stream_pin(C, ota.CHUNK),
+        context="client-folded positive control")
 
 
 @settings(max_examples=3, deadline=None)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import hlo_audit
 from repro.common.config import FLConfig, ModelConfig, TrainConfig
 from repro.common.flatpack import TreePacker, packer_for
 from repro.common import layout_tune as lt
@@ -169,20 +170,19 @@ def test_sectioned_hlo_no_full_slab():
     setup = _setup()
     fl, chan, key, g, p, packer = setup
     P = packer.size
-    banned = [f"{t}[{C},{P}]" for t in ("f32", "u32")] + \
-             [f"{t}[{P}]" for t in ("f32", "u32")]
     for kw in ({}, {"streaming": True}):
         hlo = _lower(ota.ota_aggregate_sectioned, setup, **kw)
-        for pat in banned:
-            assert pat not in hlo, (
-                f"{pat} compiled in the sectioned round ({kw}) — a "
-                f"whole-slab buffer regressed the per-section peak")
+        hlo_audit.assert_hlo_pins(
+            hlo, hlo_audit.no_slab_pins(C, P),
+            context=f"sectioned round {kw} — per-section peak (§3.16)")
     wg = jax.tree.map(lambda l: jnp.einsum("cn,cn...->c...", p, l), g)
     hlo_packed = jax.jit(lambda k, w: ota.ota_aggregate_packed(
         k, w, chan, N, packer)).lower(key, wg).compile().as_text()
-    assert f"f32[{C},{P}]" in hlo_packed, (
-        "positive control failed: the packed engine no longer compiles "
-        "the (C, P) slab — update this pin")
+    hlo_audit.assert_hlo_pins(
+        hlo_packed,
+        [hlo_audit.require_buffer((C, P), dtypes=("f32",),
+                                  note="the packed engine's (C, P) slab")],
+        context="packed-engine positive control")
 
 
 def test_sectioned_streaming_hlo_holds_one_cluster_one_section():
@@ -194,18 +194,17 @@ def test_sectioned_streaming_hlo_holds_one_cluster_one_section():
     _, chan, key, g, p, packer = setup
     lengths = sorted({sec.length for sec in packer.sections})
     hlo_s = _lower(ota.ota_aggregate_sectioned, setup, streaming=True)
-    banned = [f"{t}[{C},{L}]" for L in lengths + [packer.size, ota.CHUNK]
-              for t in ("f32", "u32")]
-    for pat in banned:
-        assert pat not in hlo_s, (
-            f"{pat} compiled in sectioned(streaming=True) — a whole-"
-            f"(C, section) buffer regressed the one-cluster peak")
+    hlo_audit.assert_hlo_pins(
+        hlo_s,
+        hlo_audit.no_cluster_stream_pins(
+            C, lengths + [packer.size, ota.CHUNK]),
+        context="sectioned(streaming=True) — one-cluster peak (§3.16)")
     for agg, kw in ((ota.ota_aggregate_client_folded, {}),
                     (ota.ota_aggregate_sectioned, {})):
         hlo_c = _lower(agg, setup, **kw)
-        assert f"u32[{C},{ota.CHUNK}]" in hlo_c, (
-            "positive control failed: the all-clusters draw no longer "
-            "compiles a (C, CHUNK) stream buffer — update this pin")
+        hlo_audit.assert_hlo_pins(
+            hlo_c, hlo_audit.cluster_chunk_stream_pin(C, ota.CHUNK),
+            context=f"all-clusters positive control ({agg.__name__})")
 
 
 # ================================================== no-silent-inertness

@@ -153,6 +153,36 @@ def test_stream_range_bits_matches_chunked_stream():
                                       np.asarray(full[start:start + length]))
 
 
+def test_stream_range_bits_hlo_draws_covering_chunks_only():
+    """Memory pin (§3.10 zero-copy bit source): an intra-chunk range
+    compiles ONE chunk draw — no second chunk, no concatenated
+    multi-chunk stream. A chunk-spanning range is the positive control
+    for the two-chunk shapes, proving the forbids aren't vacuous."""
+    from repro.analysis import hlo_audit
+
+    def lower(start, length):
+        return jax.jit(lambda k: ota.stream_range_bits(
+            k, start, length)).lower(KEY).compile().as_text()
+
+    hlo_audit.assert_hlo_pins(lower(ota.CHUNK + 5, 100), [
+        hlo_audit.require_buffer((ota.CHUNK,), dtypes=("u32",),
+                                 note="the single covering chunk"),
+        hlo_audit.forbid_buffer((2, ota.CHUNK), dtypes=("u32",),
+                                note="second chunk drawn for an "
+                                     "intra-chunk range"),
+        hlo_audit.forbid_buffer((2 * ota.CHUNK,), dtypes=("u32",),
+                                note="concatenated two-chunk stream"),
+    ], context="stream_range_bits intra-chunk window")
+    hlo_audit.assert_hlo_pins(lower(ota.CHUNK - 3, 7), [
+        hlo_audit.require_buffer((2, ota.CHUNK), dtypes=("u32",),
+                                 note="both covering chunks"),
+        hlo_audit.require_buffer((2 * ota.CHUNK,), dtypes=("u32",),
+                                 note="concatenated two-chunk stream"),
+        hlo_audit.forbid_buffer((3, ota.CHUNK), dtypes=("u32",),
+                                note="third chunk for a two-chunk range"),
+    ], context="stream_range_bits chunk-spanning positive control")
+
+
 def test_packed_section_folds_tail_invariant():
     """The ω̃ section keeps PACKED_TAIL_FOLD in EVERY layout, so eq.-5
     consumers re-draw the same stream regardless of the trunk split."""

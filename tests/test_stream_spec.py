@@ -20,7 +20,10 @@ spec BREAK and needs a DESIGN.md §4 edit + checkpoint-migration story):
 * the section-fold schedule: trunk section s ⇒ BASE + s, the ω̃ tail
   keeps PACKED_TAIL_FOLD in every layout;
 * the participation sub-folds (dropout/blackout/straggler) and the
-  SAMPLE_FOLD client-id draw are disjoint from every channel stream.
+  SAMPLE_FOLD client-id draw are disjoint from every channel stream;
+* the aux-class salts (init folds, probe folds, the dist backward's
+  mask/region salts — DESIGN.md §4 table, class ``aux``) with their own
+  value + golden pins, and the KLASS_SALT dict's collision-freedom.
 """
 import itertools
 
@@ -29,9 +32,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.stream_registry import is_salt_name
 from repro.common.flatpack import packer_for
 from repro.core import ota
-from repro.core.hota import PACKED_FINAL_FOLD
+from repro.core.hota import KLASS_SALT, PACKED_FINAL_FOLD, REGION_SALT
 from repro.core.hota_slab import PACKED_OMEGA_FOLD
 
 # Every reserved fold domain of DESIGN.md §4, by name. New domains MUST
@@ -98,8 +102,55 @@ GOLDEN_NOISE_U32 = {
     "PACKED_SECTION_FOLD_2": 0x587C0806,
 }
 
+# aux-class salts (DESIGN.md §4 table): folded off keys that never meet
+# the per-round channel key domain (init keys, probe keys, sub-folds of
+# an already-reserved parent), so they may be small — but they are
+# registered, value-pinned, and golden-pinned all the same. The four
+# *_INIT/*_PROBE/*_MASK entries are the historical bare literals the
+# §3.17 lint found; registration kept their VALUES so no stream moved.
+AUX_SALTS = {
+    "PART_DROP_FOLD": ota.PART_DROP_FOLD,
+    "PART_BLACK_FOLD": ota.PART_BLACK_FOLD,
+    "PART_STRAG_FOLD": ota.PART_STRAG_FOLD,
+    "FINAL_INIT_FOLD": ota.FINAL_INIT_FOLD,
+    "SAMPLE_INIT_FOLD": ota.SAMPLE_INIT_FOLD,
+    "TUNE_PROBE_FOLD": ota.TUNE_PROBE_FOLD,
+    "REGION_SALT": REGION_SALT,
+    "HOTA_MASK_SALT": ota.HOTA_MASK_SALT,
+}
+
+AUX_VALUES = {
+    "PART_DROP_FOLD": 0,
+    "PART_BLACK_FOLD": 1,
+    "PART_STRAG_FOLD": 2,
+    "FINAL_INIT_FOLD": 7,
+    "SAMPLE_INIT_FOLD": 11,
+    "TUNE_PROBE_FOLD": 99,
+    "REGION_SALT": 0xC0,
+    "HOTA_MASK_SALT": 0xBEEF,
+}
+
+# golden first u32 of bits(fold_in(PRNGKey(0), salt), (4,))[0] — the raw
+# derived-key digest (aux salts have no section/noise stream schedule)
+GOLDEN_AUX_U32 = {
+    "PART_DROP_FOLD": 0xA93D9CF0,
+    "PART_BLACK_FOLD": 0xBBE44D07,
+    "PART_STRAG_FOLD": 0x369464D0,
+    "FINAL_INIT_FOLD": 0xA42B7666,
+    "SAMPLE_INIT_FOLD": 0x58C7EA79,
+    "TUNE_PROBE_FOLD": 0x6B9484A4,
+    "REGION_SALT": 0x214AA0B2,
+    "HOTA_MASK_SALT": 0x47F7A328,
+}
+
+# the dist backward's per-klass region-key salts — collision-free dict
+KLASS_SALT_VALUES = {"embed": 1, "layers": 2, "final": 3, "mamba": 4,
+                     "shared_attn": 5, "shared_mlp": 6, "mlstm": 7,
+                     "slstm": 8}
+
 KEY = jax.random.PRNGKey(0)
 FOLD_NAMES = sorted(RESERVED_FOLDS)
+AUX_NAMES = sorted(AUX_SALTS)
 
 
 # -------------------------------------------------------------- constants
@@ -127,19 +178,68 @@ def test_reserved_folds_pairwise_distinct():
 
 
 def test_registry_is_complete():
-    """Every named *_FOLD constant in the core modules is registered
-    here (new domains must land with golden digests)."""
+    """Every named FOLD/SALT constant in the core modules is registered
+    here, reserved or aux (new domains must land with golden digests).
+    The name filter is the same ``is_salt_name`` the §3.17 lint uses, so
+    a constant can't claim registry membership to the linter while
+    dodging this scan (or vice versa)."""
     from repro.core import hota, hota_slab
-    found = {}
+    registered = set(RESERVED_FOLDS.values()) | set(AUX_SALTS.values())
     for mod in (ota, hota, hota_slab):
         for attr in dir(mod):
-            if attr.endswith("_FOLD") and not attr.startswith("_"):
-                found[attr] = getattr(mod, attr)
-    for attr, val in found.items():
-        assert val in set(RESERVED_FOLDS.values()), (
-            f"fold constant {attr} = 0x{val:08X} is not registered in "
-            f"tests/test_stream_spec.py RESERVED_FOLDS — register it "
-            f"with golden digests (DESIGN.md §4)")
+            if attr.startswith("_") or not is_salt_name(attr):
+                continue
+            val = getattr(mod, attr)
+            if isinstance(val, dict):
+                vals = list(val.values())
+                assert len(set(vals)) == len(vals), (
+                    f"salt dict {attr} has colliding values: {val}")
+                continue
+            if not isinstance(val, int):
+                continue
+            if attr == "PACKED_SECTION_FOLD_BASE":
+                # registered through its BASE+s instances above
+                assert val == FOLD_VALUES["PACKED_SECTION_FOLD_0"]
+                continue
+            assert val in registered, (
+                f"salt constant {attr} = 0x{val:08X} is not registered "
+                f"in tests/test_stream_spec.py (RESERVED_FOLDS or "
+                f"AUX_SALTS) — register it with golden digests "
+                f"(DESIGN.md §4)")
+
+
+def test_klass_salt_pinned():
+    """The per-klass region salts are part of the dist backward's key
+    schedule — pinned like any other salt."""
+    assert KLASS_SALT == KLASS_SALT_VALUES, (
+        f"KLASS_SALT drifted: {KLASS_SALT} != spec'd {KLASS_SALT_VALUES}"
+        f" — this re-keys the region mask streams (DESIGN.md §4)")
+
+
+# ------------------------------------------------------------- aux salts
+@pytest.mark.parametrize("name", AUX_NAMES)
+def test_aux_salt_value_pinned(name):
+    assert AUX_SALTS[name] == AUX_VALUES[name], (
+        f"aux salt {name} changed: {AUX_SALTS[name]} != spec'd "
+        f"{AUX_VALUES[name]} — this re-keys every draw folded under it "
+        f"(DESIGN.md §4)")
+
+
+def test_aux_salts_pairwise_distinct():
+    for a, b in itertools.combinations(AUX_NAMES, 2):
+        assert AUX_SALTS[a] != AUX_SALTS[b], (
+            f"aux salts {a} and {b} collide at {AUX_SALTS[a]} — draws "
+            f"folded under them off a shared parent key are identical")
+
+
+@pytest.mark.parametrize("name", AUX_NAMES)
+def test_golden_aux_first_u32(name):
+    got = int(jax.random.bits(
+        jax.random.fold_in(KEY, AUX_SALTS[name]), (4,), jnp.uint32)[0])
+    assert got == GOLDEN_AUX_U32[name], (
+        f"aux-salt stream for {name} drifted: first u32 is 0x{got:08X}, "
+        f"spec'd 0x{GOLDEN_AUX_U32[name]:08X} — the derived key moved "
+        f"(DESIGN.md §4)")
 
 
 # ----------------------------------------------------------- derived keys
